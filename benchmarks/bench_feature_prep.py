@@ -1,0 +1,26 @@
+"""Fig 21: feature preparation — scan-all vs redistribute vs fused."""
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.feature_prep import (fused_load, redistribute_load,
+                                     scan_all_load, write_feature_files)
+
+
+def run():
+    N, D = 32_768, 128
+    w = np.random.default_rng(0).standard_normal((D, D)).astype(np.float32)
+    with tempfile.TemporaryDirectory() as td:
+        files, _ = write_feature_files(td, N, D, n_files=16)
+        for M in (2, 4, 8):
+            _, s1 = scan_all_load(files, M, N, D)
+            _, s2 = redistribute_load(files, M, N, D)
+            _, s3 = fused_load(files, M, N, D, w)
+            emit(f"fig21/featprep/m{M}/scan_all", s1["seconds"] * 1e6,
+                 f"file_rows={s1['file_rows']}")
+            emit(f"fig21/featprep/m{M}/redistribute", s2["seconds"] * 1e6,
+                 f"speedup={s1['seconds']/s2['seconds']:.2f}x;"
+                 f"net_rows={s2['net_rows']}")
+            emit(f"fig21/featprep/m{M}/fused", s3["seconds"] * 1e6,
+                 f"speedup={s1['seconds']/s3['seconds']:.2f}x;net_rows=0")

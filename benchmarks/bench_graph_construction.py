@@ -1,0 +1,25 @@
+"""Fig 20: graph construction — DEAL's distributed builder vs the
+single-machine (DistDGL-style) baseline.  Workers run sequentially on this
+host; the modeled parallel time (slowest worker per phase + 25 Gbps
+exchange) is what a real cluster would see."""
+from benchmarks.common import emit, time_host
+from repro.core.graph import (csr_from_edges, csr_from_edges_distributed,
+                              make_dataset)
+
+
+def run():
+    for name in ("ogbn-products", "social-spammer", "ogbn-papers100M"):
+        src, dst, n = make_dataset(name)
+        t_single, _ = time_host(lambda: csr_from_edges(src, dst, n),
+                                iters=3)
+        emit(f"fig20/construct/{name}/single_machine", t_single * 1e6, "")
+        for w in (2, 4, 8):
+            t_meas, (g, stats) = time_host(
+                lambda: csr_from_edges_distributed(src, dst, n,
+                                                   n_workers=w), iters=1)
+            t_model = stats["modeled_parallel_s"]
+            emit(f"fig20/construct/{name}/distributed_w{w}",
+                 t_model * 1e6,
+                 f"modeled_speedup={t_single/t_model:.2f}x;"
+                 f"exchange_MB={stats['exchanged_bytes']/1e6:.1f};"
+                 f"host_measured_us={t_meas*1e6:.0f}")

@@ -1,0 +1,64 @@
+"""Fig 15: weak scaling (graph grows with the mesh) and strong scaling
+(fixed graph, growing mesh) of the distributed layer-wise engine."""
+from benchmarks.common import emit, run_devices_subprocess
+
+_SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp, time
+from repro.core.graph import csr_from_edges, rmat_edges, make_dataset
+from repro.core.gnn_models import init_gcn
+from repro.core.layerwise import DistributedLayerwise
+from repro.core.sampler import sample_layer_graphs
+from repro.launch.mesh import make_host_mesh
+
+def bench(n, e, Pg, M, seed=0, name=""):
+    src, dst = rmat_edges(n, e, seed=seed)
+    g = csr_from_edges(src, dst, n)
+    lgs = sample_layer_graphs(g, fanout=8, n_layers=3, seed=0)
+    mesh = make_host_mesh(Pg, M)
+    D = 64
+    X = np.random.default_rng(0).standard_normal((n, D), dtype=np.float32)
+    params = init_gcn(jax.random.PRNGKey(0), [D, D, D, D])
+    eng = DistributedLayerwise(mesh, lgs, "gcn", params)
+    jax.block_until_ready(eng.infer(X))
+    ts = []
+    for _ in range(3):
+        t0 = time.perf_counter(); jax.block_until_ready(eng.infer(X))
+        ts.append(time.perf_counter() - t0)
+    t = sorted(ts)[1]
+    eps = g.n_edges / t / (Pg * M)
+    print(f"CSV,fig15/{name},{t*1e6:.1f},edges_per_s_per_dev={eps:.0f};edges={g.n_edges}")
+
+# weak scaling: edges proportional to devices
+for Pg in (1, 2, 4, 8):
+    n = 1024 * Pg
+    bench(n, n * 16, Pg, 1, name=f"weak/p{Pg}")
+
+# strong scaling on fixed graphs
+for name in ("ogbn-products", "social-spammer"):
+    src, dst, n = make_dataset(name, scale=0.25)
+    n -= n % 8
+    keep = (src < n) & (dst < n)
+    g = csr_from_edges(src[keep], dst[keep], n)
+    lgs = sample_layer_graphs(g, fanout=8, n_layers=3, seed=0)
+    D = 64
+    X = np.random.default_rng(0).standard_normal((n, D), dtype=np.float32)
+    params = init_gcn(jax.random.PRNGKey(0), [D, D, D, D])
+    for Pg in (2, 4, 8):
+        mesh = make_host_mesh(Pg, 1)
+        eng = DistributedLayerwise(mesh, lgs, "gcn", params)
+        jax.block_until_ready(eng.infer(X))
+        ts = []
+        for _ in range(3):
+            t0 = time.perf_counter(); jax.block_until_ready(eng.infer(X))
+            ts.append(time.perf_counter() - t0)
+        t = sorted(ts)[1]
+        print(f"CSV,fig15/strong/{name}/p{Pg},{t*1e6:.1f},edges={g.n_edges}")
+"""
+
+
+def run():
+    out = run_devices_subprocess(_SCRIPT, n_devices=8, timeout=3000)
+    for line in out.splitlines():
+        if line.startswith("CSV,"):
+            _, name, us, derived = line.split(",", 3)
+            emit(name, float(us), derived)

@@ -1,0 +1,58 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig16-19,fig20]
+
+Prints ``name,us_per_call,derived`` CSV rows (also saved to
+results/bench.csv).
+"""
+import argparse
+import importlib
+import pathlib
+import sys
+import traceback
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks import common  # noqa: E402
+
+MODULES = {
+    "fig14": "benchmarks.bench_e2e",
+    "tab5": "benchmarks.bench_sharing",
+    "tab6": "benchmarks.bench_accuracy",
+    "fig15": "benchmarks.bench_scaling",
+    "fig16-19": "benchmarks.bench_primitives_dist",
+    "fig20": "benchmarks.bench_graph_construction",
+    "fig21": "benchmarks.bench_feature_prep",
+    "fig3": "benchmarks.bench_breakdown",
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list of keys: " + ",".join(MODULES))
+    args = ap.parse_args()
+    keys = args.only.split(",") if args.only else list(MODULES)
+    print("name,us_per_call,derived")
+    failures = []
+    for k in keys:
+        mod = importlib.import_module(MODULES[k])
+        print(f"# === {k} ({MODULES[k]}) ===", flush=True)
+        try:
+            mod.run()
+        except Exception as e:
+            failures.append((k, e))
+            print(f"# FAILED {k}: {e}")
+            traceback.print_exc()
+    out = pathlib.Path(__file__).resolve().parents[1] / "results"
+    out.mkdir(exist_ok=True)
+    (out / "bench.csv").write_text(
+        "name,us_per_call,derived\n" + "\n".join(common.ROWS) + "\n")
+    if failures:
+        sys.exit(f"{len(failures)} benchmark group(s) failed: "
+                 f"{[k for k, _ in failures]}")
+
+
+if __name__ == "__main__":
+    main()

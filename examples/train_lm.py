@@ -1,0 +1,81 @@
+"""Train a ~100M-parameter decoder LM with the full stack: data pipeline,
+chunked-CE train_step, AdamW, checkpointing.
+
+The default is a CPU-friendly demo (30 steps); pass --steps 300 for the
+full "few hundred steps" run (hours on 1 CPU core; minutes on a TPU slice —
+the identical code lowers on the production mesh via launch/dryrun.py).
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+
+def lm_100m() -> ModelConfig:
+    """~100M params: 12L d768 12H(kv4) ff2048, 8k vocab (llama-style)."""
+    return ModelConfig(
+        arch_id="lm-100m", family="dense", source="examples/train_lm",
+        n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, head_dim=64,
+        d_ff=2048, vocab_size=8192, tie_embeddings=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--tiny", action="store_true",
+                    help="2-layer d256 smoke variant")
+    ap.add_argument("--checkpoint", default="results/lm100m.npz")
+    args = ap.parse_args()
+
+    cfg = lm_100m()
+    if args.tiny:
+        cfg = cfg.reduced()
+    n = cfg.param_count()
+    print(f"model: {cfg.arch_id} ({n/1e6:.0f}M params, tiny={args.tiny})")
+
+    from repro.launch.train import run
+    # run() expects a registered arch; drive the loop directly instead
+    import jax
+    import jax.numpy as jnp
+    import time
+    from repro.models import transformer
+    from repro.train.data import DataConfig, make_pipeline
+    from repro.train.optimizer import AdamWConfig, init_opt_state
+    from repro.train.step import make_train_step
+
+    opt_cfg = AdamWConfig(lr=3e-4, warmup_steps=max(args.steps // 10, 1),
+                          total_steps=args.steps)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params, opt_cfg)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
+    data = make_pipeline(DataConfig(vocab_size=cfg.vocab_size,
+                                    seq_len=args.seq,
+                                    batch_size=args.batch))
+    t0 = time.time()
+    losses = []
+    for i in range(args.steps):
+        b = next(data)
+        params, opt, m = step_fn(params, opt,
+                                 {k: jnp.asarray(v) for k, v in b.items()})
+        losses.append(float(m["loss"]))
+        if (i + 1) % 5 == 0 or i == 0:
+            print(f"step {i+1:4d}  loss {losses[-1]:.4f}  "
+                  f"{(time.time()-t0)/(i+1):.2f}s/step", flush=True)
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f}")
+    if args.checkpoint:
+        from repro.train.checkpoint import save_checkpoint
+        save_checkpoint(args.checkpoint, params, opt, step=args.steps,
+                        metadata={"arch": cfg.arch_id})
+        print("checkpoint saved to", args.checkpoint)
+
+
+if __name__ == "__main__":
+    main()

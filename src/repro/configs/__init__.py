@@ -1,0 +1,52 @@
+"""Architecture registry: ``get_config("<arch-id>")`` and the input shapes."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import INPUT_SHAPES, SHAPES, InputShape, ModelConfig
+
+_ARCH_MODULES = {
+    "gemma3-4b": "repro.configs.gemma3_4b",
+    "smollm-360m": "repro.configs.smollm_360m",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick_400b_a17b",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "whisper-base": "repro.configs.whisper_base",
+    "granite-8b": "repro.configs.granite_8b",
+    "llava-next-34b": "repro.configs.llava_next_34b",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "mamba2-1.3b": "repro.configs.mamba2_1p3b",
+    "qwen2.5-14b": "repro.configs.qwen2_5_14b",
+}
+
+ARCH_IDS: List[str] = list(_ARCH_MODULES)
+
+_cache: Dict[str, ModelConfig] = {}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _cache:
+        if arch_id not in _ARCH_MODULES:
+            raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+        _cache[arch_id] = importlib.import_module(_ARCH_MODULES[arch_id]).CONFIG
+    return _cache[arch_id]
+
+
+def get_shape(name: str) -> InputShape:
+    return SHAPES[name]
+
+
+def applicable_shapes(cfg: ModelConfig) -> List[InputShape]:
+    """The input shapes this arch runs (long_500k only when sub-quadratic)."""
+    out = []
+    for s in INPUT_SHAPES:
+        if s.name == "long_500k" and not cfg.sub_quadratic:
+            continue  # skip noted in DESIGN.md §Arch-applicability
+        out.append(s)
+    return out
+
+
+__all__ = [
+    "ARCH_IDS", "INPUT_SHAPES", "SHAPES", "InputShape", "ModelConfig",
+    "get_config", "get_shape", "applicable_shapes",
+]

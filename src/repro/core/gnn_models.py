@@ -1,0 +1,76 @@
+"""GNN models on top of the DEAL primitives: GCN, dot-GAT, GraphSAGE.
+
+The paper evaluates 3-layer GCN and GAT (4 heads).  Our GAT uses dot-product
+attention (q.k per sampled edge) so that edge scoring exercises the SDDMM
+primitive exactly as §3.4 describes; classic additive GAT decomposes into
+node terms and would never need SDDMM.  Heads are laid out head-major in the
+feature dim so each `model` shard belongs to one head (requires M % heads
+== 0 in the distributed engine).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_gcn(rng, dims: List[int]) -> Dict[str, Any]:
+    ks = jax.random.split(rng, len(dims) - 1)
+    return {"w": [jax.random.normal(k, (dims[i], dims[i + 1]),
+                                    jnp.float32) * (dims[i] ** -0.5)
+                  for i, k in enumerate(ks)]}
+
+
+def init_gat(rng, dims: List[int], heads: int = 4) -> Dict[str, Any]:
+    layers = []
+    for i in range(len(dims) - 1):
+        k = jax.random.fold_in(rng, i)
+        kq, kk, kv = jax.random.split(k, 3)
+        s = dims[i] ** -0.5
+        layers.append({
+            "wq": jax.random.normal(kq, (dims[i], dims[i + 1]), jnp.float32) * s,
+            "wk": jax.random.normal(kk, (dims[i], dims[i + 1]), jnp.float32) * s,
+            "wv": jax.random.normal(kv, (dims[i], dims[i + 1]), jnp.float32) * s,
+        })
+    return {"layers": layers, "heads": heads}
+
+
+def init_sage(rng, dims: List[int]) -> Dict[str, Any]:
+    layers = []
+    for i in range(len(dims) - 1):
+        k = jax.random.fold_in(rng, i)
+        k1, k2 = jax.random.split(k)
+        s = dims[i] ** -0.5
+        layers.append({
+            "w_self": jax.random.normal(k1, (dims[i], dims[i + 1]),
+                                        jnp.float32) * s,
+            "w_nbr": jax.random.normal(k2, (dims[i], dims[i + 1]),
+                                       jnp.float32) * s,
+        })
+    return {"layers": layers}
+
+
+def mean_weights(mask: np.ndarray) -> np.ndarray:
+    """Mean-aggregation edge weights from a fanout mask."""
+    deg = np.maximum(mask.sum(axis=1, keepdims=True), 1)
+    return (mask / deg).astype(np.float32)
+
+
+def masked_softmax(scores: jax.Array, mask: jax.Array) -> jax.Array:
+    s = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return p * mask
+
+
+def gat_head_scores(q, kf, nbr, mask, heads: int):
+    """Per-head dot scores (N, F, h) from full-width q/k (single host)."""
+    N, D = q.shape
+    dh = D // heads
+    qh = q.reshape(N, heads, dh)
+    kh = kf.reshape(N, heads, dh)
+    kn = jnp.take(kh, nbr.reshape(-1), axis=0).reshape(
+        nbr.shape + (heads, dh))
+    s = jnp.einsum("nhd,nfhd->nfh", qh, kn) / jnp.sqrt(jnp.float32(dh))
+    return s

@@ -1,0 +1,156 @@
+"""1-D graph + feature collaborative partition and the static CommPlan.
+
+DEAL's protocol ("send the non-zero column IDs, receive those H' rows") is
+runtime-negotiated on CPUs; on TPU every message must be static-shaped, so
+the partitioner resolves the negotiation AT PARTITION TIME: for every
+(dst-partition p, ring step k) it precomputes the padded unique-row request
+set and the edge-entry lists that consume the received buffer.  The graph is
+a static input of all-node inference, so this loses no generality — it IS
+the paper's ID exchange, hoisted to the plan.
+
+Group structure == the paper's partitioned communication (§3.5): group 0 is
+the local tile (Fig 11 "local first"), group k>0 holds the edges whose
+source lives k hops around the data-axis ring.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from repro.core.sampler import LayerGraph
+
+
+@dataclasses.dataclass
+class LayerPlan:
+    """Static comm plan for one layer graph on a P x M grid."""
+    P: int
+    n_local: int                 # nodes per partition
+    fanout: int
+    # ring step k: device p sends rows send_local[p, k] to peer (p-k)%P and
+    # receives the rows it requested from peer (p+k)%P.
+    send_local: np.ndarray       # (P, P, R) int32, row ids local to sender
+    send_count: np.ndarray       # (P, P)   int32 (valid prefix of R)
+    # consuming the received buffer (k=0 consumes H_local directly):
+    edge_dst: np.ndarray         # (P, P, E) int32 — local dst row
+    edge_slot: np.ndarray        # (P, P, E) int32 — fanout slot of the edge
+    edge_pos: np.ndarray         # (P, P, E) int32 — row in the recv buffer
+    edge_mask: np.ndarray        # (P, P, E) bool
+    # mirror for the graph-exchange baseline: at step k device q gathers the
+    # per-edge source rows for peer (q-k)%P (duplicates included).
+    mirror_src: np.ndarray       # (P, P, E) int32 — row local to the sender
+
+    @property
+    def max_request(self) -> int:
+        return self.send_local.shape[-1]
+
+    @property
+    def max_entries(self) -> int:
+        return self.edge_dst.shape[-1]
+
+
+@dataclasses.dataclass
+class PartitionPlan:
+    n_nodes: int
+    P: int
+    M: int
+    bounds: np.ndarray           # (P+1,)
+    layers: List[LayerPlan]
+    nbr_local: List[np.ndarray]  # per layer (P, n_local, F) partition-local view
+    mask_local: List[np.ndarray]
+
+
+def partition_nodes(n_nodes: int, P: int) -> np.ndarray:
+    """1-D contiguous equal ranges (paper §3.3). n_nodes must divide by P
+    for the static per-device shapes; callers pad the graph if needed."""
+    assert n_nodes % P == 0, (n_nodes, P)
+    return (np.arange(P + 1) * (n_nodes // P)).astype(np.int64)
+
+
+def build_plan(layer_graphs: List[LayerGraph], P: int, M: int
+               ) -> PartitionPlan:
+    n = layer_graphs[0].n_nodes
+    bounds = partition_nodes(n, P)
+    n_local = n // P
+    layers, nbrs, masks = [], [], []
+    for lg in layer_graphs:
+        layers.append(_layer_plan(lg, bounds, P))
+        nbrs.append(lg.nbr.reshape(P, n_local, lg.fanout))
+        masks.append(lg.mask.reshape(P, n_local, lg.fanout))
+    return PartitionPlan(n_nodes=n, P=P, M=M, bounds=bounds, layers=layers,
+                         nbr_local=nbrs, mask_local=masks)
+
+
+def _layer_plan(lg: LayerGraph, bounds: np.ndarray, P: int) -> LayerPlan:
+    n = lg.n_nodes
+    n_local = n // P
+    F = lg.fanout
+    owner = np.searchsorted(bounds, lg.nbr, side="right") - 1
+
+    req: List[List[np.ndarray]] = [[None] * P for _ in range(P)]
+    entries = [[None] * P for _ in range(P)]
+    for p in range(P):
+        rows = slice(p * n_local, (p + 1) * n_local)
+        nbr_p, mask_p, own_p = lg.nbr[rows], lg.mask[rows], owner[rows]
+        for k in range(P):
+            q = (p + k) % P
+            sel = mask_p & (own_p == q)
+            dst_loc, slot = np.nonzero(sel)
+            ids = nbr_p[sel]
+            if k == 0:
+                # local group: positions index H_local directly
+                uniq = np.empty(0, np.int64)
+                pos = (ids - bounds[q]).astype(np.int64)
+            else:
+                uniq, pos = np.unique(ids, return_inverse=True)
+                uniq = uniq - bounds[q]       # local to the source partition
+            req[p][k] = uniq
+            entries[p][k] = (dst_loc.astype(np.int32),
+                             slot.astype(np.int32), pos.astype(np.int32),
+                             (ids - bounds[q]).astype(np.int32))
+    R = max(1, max(r.size for row in req for r in row))
+    E = max(1, max(e[0].size for row in entries for e in row))
+
+    send_local = np.zeros((P, P, R), np.int32)
+    send_count = np.zeros((P, P), np.int32)
+    edge_dst = np.zeros((P, P, E), np.int32)
+    edge_slot = np.zeros((P, P, E), np.int32)
+    edge_pos = np.zeros((P, P, E), np.int32)
+    edge_mask = np.zeros((P, P, E), bool)
+    mirror_src = np.zeros((P, P, E), np.int32)
+    for p in range(P):
+        for k in range(P):
+            d, s, pos, src_loc = entries[p][k]
+            m = d.size
+            edge_dst[p, k, :m] = d
+            edge_slot[p, k, :m] = s
+            edge_pos[p, k, :m] = pos
+            edge_mask[p, k, :m] = True
+            # sender (p+k)%P ships these rows to p at ring step k:
+            sender = (p + k) % P
+            r = req[p][k]
+            send_local[sender, k, :r.size] = r
+            send_count[sender, k] = r.size
+            mirror_src[sender, k, :m] = src_loc
+    return LayerPlan(P=P, n_local=n_local, fanout=F, send_local=send_local,
+                     send_count=send_count, edge_dst=edge_dst,
+                     edge_slot=edge_slot, edge_pos=edge_pos,
+                     edge_mask=edge_mask, mirror_src=mirror_src)
+
+
+def comm_volume(plan: PartitionPlan, d_feature: int, bytes_per: int = 4
+                ) -> dict:
+    """Analytic per-layer communication volumes (Tables 1-3 checks)."""
+    out = {}
+    for i, lp in enumerate(plan.layers):
+        deal = int(lp.send_count[:, 1:].sum()) * (d_feature // plan.M)
+        dup_edges = int(lp.edge_mask[:, 1:].sum())
+        graph_exch = dup_edges * (d_feature // plan.M)
+        out[f"layer{i}"] = {
+            "deal_feature_exchange_B": deal * bytes_per,
+            "graph_exchange_B": graph_exch * bytes_per,
+            "unique_rows": int(lp.send_count[:, 1:].sum()),
+            "duplicated_edge_rows": dup_edges,
+        }
+    return out

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: flash attention (online softmax, VMEM-tiled).
+
+Grid (batch*heads, q_blocks); each step holds one (bq, hd) query tile and
+streams (bk, hd) key/value tiles through VMEM with the usual running
+(m, l, acc) rescaling.  Block sizes default to MXU-aligned 128 multiples.
+This is the TPU twin of models/attention.flash_attention_jnp (the jnp
+version drives the production models; tests assert the two agree and both
+match ref.flash_attention_ref).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int,
+                  block_k: int, seq_kv: int, causal: bool, scale: float):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, hd)
+    nk = seq_kv // block_k
+
+    def body(ik, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.dslice(ik * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(ik * block_k, block_k), :].astype(jnp.float32)
+        s = q @ k.T                                   # (bq, bk)
+        if causal:
+            q_pos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kv_pos = ik * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(kv_pos <= q_pos, s, _NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, q.shape[-1]), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, nk, body, (m0, l0, acc0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True):
+    """q: (BH, Sq, hd); k, v: (BH, Skv, hd).  Sq % block_q == 0 etc."""
+    BH, Sq, hd = q.shape
+    Skv = k.shape[1]
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0
+    scale = 1.0 / math.sqrt(hd)
+    grid = (BH, Sq // block_q)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, block_q=block_q, block_k=block_k,
+                          seq_kv=Skv, causal=causal, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, Skv, hd), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, Skv, hd), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,43 @@
+"""Dispatching wrappers for the Pallas kernels.
+
+On TPU the kernels run compiled (interpret=False); everywhere else they run
+in interpret mode (correct, slow) or fall back to the jnp oracle — the
+backend is detected once.  This is the layer models/benchmarks import.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.sddmm import sddmm as _sddmm
+from repro.kernels.spmm import spmm as _spmm
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def spmm(h, w, nbr, mask, use_kernel: bool = False, **kw):
+    if _on_tpu():
+        return _spmm(h, w, nbr, mask, interpret=False, **kw)
+    if use_kernel:
+        return _spmm(h, w, nbr, mask, interpret=True, **kw)
+    return ref.spmm_ref(h, w, nbr, mask)
+
+
+def sddmm(q, k, nbr, mask, use_kernel: bool = False, **kw):
+    if _on_tpu():
+        return _sddmm(q, k, nbr, mask, interpret=False, **kw)
+    if use_kernel:
+        return _sddmm(q, k, nbr, mask, interpret=True, **kw)
+    return ref.sddmm_ref(q, k, nbr, mask)
+
+
+def flash_attention(q, k, v, causal: bool = True, use_kernel: bool = False,
+                    **kw):
+    if _on_tpu():
+        return _flash(q, k, v, causal=causal, interpret=False, **kw)
+    if use_kernel:
+        return _flash(q, k, v, causal=causal, interpret=True, **kw)
+    return ref.flash_attention_ref(q, k, v, causal=causal)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def spmm_ref(h, w, nbr, mask):
+    """out[i] = sum_f w[i,f] * mask[i,f] * h[nbr[i,f]].  h:(N,D) nbr:(N,F)."""
+    vals = jnp.take(h, nbr.reshape(-1), axis=0).astype(jnp.float32)
+    vals = vals.reshape(nbr.shape + (h.shape[-1],))
+    coef = (w * mask).astype(jnp.float32)[..., None]
+    return (vals * coef).sum(axis=1).astype(h.dtype)
+
+
+def sddmm_ref(q, k, nbr, mask):
+    """e[i,f] = <q[i], k[nbr[i,f]]> * mask[i,f].  q,k:(N,D)."""
+    vals = jnp.take(k, nbr.reshape(-1), axis=0).reshape(
+        nbr.shape + (k.shape[-1],)).astype(jnp.float32)
+    out = (q[:, None, :].astype(jnp.float32) * vals).sum(-1)
+    return (out * mask).astype(jnp.float32)
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """q:(BH,Sq,hd) k,v:(BH,Skv,hd) — plain softmax attention, f32."""
+    BH, Sq, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqd,bsd->bqs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        m = jnp.arange(k.shape[1])[None, :] <= jnp.arange(Sq)[:, None]
+        s = jnp.where(m[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqs,bsd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

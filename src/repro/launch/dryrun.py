@@ -1,0 +1,170 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and only the dry-run is allowed to see 512 placeholder devices.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-4b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--force]
+
+Each combo writes results/dryrun/<arch>__<shape>__<mesh>.json with the
+memory analysis, cost analysis, and per-kind collective bytes parsed from
+the post-SPMD optimized HLO — the roofline inputs (EXPERIMENTS.md §Dry-run).
+"""
+import argparse
+import gc
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, applicable_shapes, get_config, get_shape
+from repro.launch.inputs import step_arguments
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analysis import (collective_bytes_from_hlo, model_flops,
+                                     roofline_terms)
+from repro.sharding.context import sharding_context
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _memory_analysis_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for f in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "temp_size_in_bytes",
+              "alias_size_in_bytes", "host_generated_code_size_in_bytes",
+              "host_argument_size_in_bytes", "host_output_size_in_bytes",
+              "host_temp_size_in_bytes", "host_alias_size_in_bytes"):
+        v = getattr(ma, f, None)
+        if v is not None:
+            out[f] = int(v)
+    if not out and ma is not None:
+        out["repr"] = repr(ma)
+    return out
+
+
+def run_combo(arch: str, shape_name: str, mesh_kind: str,
+              variant: str = "baseline") -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.size
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "n_chips": n_chips, "variant": variant, "status": "ok"}
+    t0 = time.time()
+    fn, args, shardings, out_shardings, donate = step_arguments(
+        cfg, shape, mesh)
+    with mesh, sharding_context(mesh):
+        jitted = jax.jit(fn, in_shardings=shardings,
+                         out_shardings=out_shardings,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+    mem = _memory_analysis_dict(compiled)
+    print(f"[{arch} {shape_name} {mesh_kind}] memory_analysis:", mem)
+    rec["memory_analysis"] = mem
+    try:
+        cost = compiled.cost_analysis()
+        cost = {k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float))}
+    except Exception:
+        cost = {}
+    print(f"[{arch} {shape_name} {mesh_kind}] cost_analysis: "
+          f"flops={cost.get('flops')}, bytes={cost.get('bytes accessed')}")
+    rec["cost_analysis"] = {
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+    }
+    hlo = compiled.as_text()
+    rec["hlo_chars"] = len(hlo)
+    coll = collective_bytes_from_hlo(hlo)
+    rec["collectives"] = coll
+    del hlo
+
+    # cost_analysis on the partitioned module is per-chip already
+    terms = roofline_terms(
+        total_flops=rec["cost_analysis"]["flops"],
+        total_bytes=rec["cost_analysis"]["bytes_accessed"],
+        collective_bytes_per_chip=coll["total"],
+        n_chips=n_chips, flops_are_global=False)
+    rec["roofline"] = terms.as_dict()
+    mf = model_flops(cfg, shape)
+    rec["model_flops_global"] = mf
+    hw_flops = rec["cost_analysis"]["flops"] * n_chips
+    rec["model_flops_ratio"] = (mf / hw_flops) if hw_flops else None
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def combo_path(arch, shape_name, mesh_kind, variant="baseline"):
+    suffix = "" if variant == "baseline" else f"__{variant}"
+    return RESULTS / f"{arch}__{shape_name}__{mesh_kind}{suffix}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tuning", default="",
+                    help="comma flags (see repro/tuning.py); records are "
+                         "written under a variant suffix")
+    args = ap.parse_args()
+    variant = "baseline"
+    if args.tuning:
+        os.environ["REPRO_TUNING"] = args.tuning
+        variant = args.tuning.replace(",", "+")
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    combos = []
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = ([get_shape(args.shape)] if args.shape
+                  else applicable_shapes(cfg))
+        for sh in shapes:
+            for mk in meshes:
+                combos.append((arch, sh.name, mk))
+
+    n_ok = n_fail = n_skip = 0
+    for arch, shape_name, mesh_kind in combos:
+        out = combo_path(arch, shape_name, mesh_kind, variant)
+        if out.exists() and not args.force:
+            n_skip += 1
+            continue
+        print(f"=== dryrun {arch} {shape_name} {mesh_kind} "
+              f"[{variant}] ===", flush=True)
+        try:
+            rec = run_combo(arch, shape_name, mesh_kind, variant)
+            n_ok += 1
+        except Exception as e:  # record the failure, keep going
+            rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+            print(f"FAILED: {e}", flush=True)
+            n_fail += 1
+        out.write_text(json.dumps(rec, indent=1))
+        jax.clear_caches()
+        gc.collect()
+    print(f"done: ok={n_ok} fail={n_fail} skip={n_skip}")
+
+
+if __name__ == "__main__":
+    main()

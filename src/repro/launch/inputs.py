@@ -1,0 +1,113 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+``input_specs(cfg, shape)`` returns the abstract batch for the step kind;
+``step_arguments(cfg, shape, mesh, opt_cfg)`` returns (step_fn, abstract
+args, in_shardings, donate) ready for jit().lower().
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import transformer
+from repro.serve.step import prefill_step, serve_step
+from repro.sharding.specs import batch_specs, cache_specs, param_specs
+from repro.train.optimizer import AdamWConfig, abstract_opt_state
+from repro.train.step import train_step
+
+F = jax.ShapeDtypeStruct
+
+
+def _tok(*shape):
+    return F(shape, jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Abstract batch dict for this (arch, shape)."""
+    B, S = shape.global_batch, shape.seq_len
+    bf16 = jnp.bfloat16
+    if shape.kind == "decode":
+        return {"token": _tok(B, 1), "pos": F((), jnp.int32)}
+    if cfg.family == "audio":
+        enc = cfg.n_frontend_tokens
+        d = {"frames": F((B, enc, cfg.frontend_dim), bf16),
+             "tokens": _tok(B, S)}
+        if shape.kind == "train":
+            d["labels"] = _tok(B, S)
+        return d
+    if cfg.family == "vlm":
+        n_img = cfg.n_frontend_tokens
+        d = {"patches": F((B, n_img, cfg.frontend_dim), bf16),
+             "tokens": _tok(B, S - n_img)}
+        if shape.kind == "train":
+            d["labels"] = _tok(B, S - n_img)
+        return d
+    d = {"tokens": _tok(B, S)}
+    if shape.kind == "train":
+        d["labels"] = _tok(B, S)
+    return d
+
+
+def _shardify(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _logits_spec(mesh, shape: InputShape, cfg) -> P:
+    from repro.sharding.specs import logical_axes, shard_if_divisible
+    ax = logical_axes(mesh)
+    return P(shard_if_divisible(mesh, shape.global_batch, ax["dp"]), None,
+             shard_if_divisible(mesh, cfg.vocab_size, ax["tp"]))
+
+
+_METRIC_KEYS = ("grad_norm", "lr", "loss", "aux_loss", "total_loss")
+
+
+def step_arguments(cfg: ModelConfig, shape: InputShape, mesh,
+                   opt_cfg: AdamWConfig | None = None
+                   ) -> Tuple[Any, tuple, Any, Any, tuple]:
+    """Build (step_fn, abstract_args, in_shardings, out_shardings, donate)."""
+    opt_cfg = opt_cfg or AdamWConfig(
+        state_dtype="bfloat16" if cfg.param_count() > 1e11 else "float32")
+    params_abs = transformer.abstract_params(cfg)
+    pspec = param_specs(cfg, params_abs, mesh)
+    batch_abs = input_specs(cfg, shape)
+    bspec = batch_specs(cfg, batch_abs, mesh, shape)
+
+    if shape.kind == "train":
+        opt_abs = abstract_opt_state(params_abs, opt_cfg)
+        ospec = type(opt_abs)(step=P(), m=pspec, v=pspec)
+        fn = functools.partial(train_step, cfg, opt_cfg)
+        args = (params_abs, opt_abs, batch_abs)
+        shardings = (_shardify(mesh, pspec), _shardify(mesh, ospec),
+                     _shardify(mesh, bspec))
+        metrics_shard = {k: NamedSharding(mesh, P()) for k in _METRIC_KEYS}
+        out_shardings = (shardings[0], shardings[1], metrics_shard)
+        return fn, args, shardings, out_shardings, (0, 1)
+
+    enc_len = cfg.n_frontend_tokens if cfg.family == "audio" else None
+    cache_abs = transformer.abstract_cache(cfg, shape.global_batch,
+                                           shape.seq_len, enc_len)
+    cspec = cache_specs(cfg, cache_abs, mesh, shape)
+    lspec = NamedSharding(mesh, _logits_spec(mesh, shape, cfg))
+
+    if shape.kind == "prefill":
+        fn = functools.partial(prefill_step, cfg)
+        args = (params_abs, batch_abs)
+        shardings = (_shardify(mesh, pspec), _shardify(mesh, bspec))
+        out_shardings = (lspec, _shardify(mesh, cspec))
+        return fn, args, shardings, out_shardings, ()
+
+    # decode
+    fn = functools.partial(serve_step, cfg)
+    args = (params_abs, cache_abs, batch_abs)
+    shardings = (_shardify(mesh, pspec), _shardify(mesh, cspec),
+                 _shardify(mesh, bspec))
+    out_shardings = (lspec, _shardify(mesh, cspec))
+    return fn, args, shardings, out_shardings, (1,)

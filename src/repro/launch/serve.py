@@ -1,0 +1,60 @@
+"""Serving launcher: batched requests through the ServeEngine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
+      --requests 6 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import transformer
+from repro.serve.engine import Request, ServeEngine
+
+
+def run(arch: str, *, n_requests: int = 6, max_new: int = 16,
+        batch_slots: int = 4, max_seq: int = 128, seed: int = 0,
+        params=None, cfg=None):
+    cfg = cfg or get_config(arch).reduced()
+    params = (params if params is not None
+              else transformer.init_params(cfg, jax.random.PRNGKey(seed)))
+    eng = ServeEngine(cfg, params, batch_slots=batch_slots, max_seq=max_seq)
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for uid in range(n_requests):
+        plen = int(rng.integers(3, 12))
+        prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+        r = Request(uid=uid, prompt=prompt, max_new_tokens=max_new)
+        reqs.append(r)
+        eng.submit(r)
+    t0 = time.time()
+    eng.run()
+    dt = time.time() - t0
+    total_new = sum(len(r.out_tokens) for r in reqs)
+    print(f"served {n_requests} requests, {total_new} tokens, "
+          f"{eng.n_decode_steps} decode steps, {dt:.1f}s "
+          f"({total_new/max(dt,1e-9):.1f} tok/s)")
+    for r in reqs:
+        assert r.done and len(r.out_tokens) > 0
+        print(f"  req {r.uid}: prompt[{len(r.prompt)}] -> "
+              f"{r.out_tokens[:8]}{'...' if len(r.out_tokens) > 8 else ''}")
+    return reqs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    args = ap.parse_args()
+    run(args.arch, n_requests=args.requests, max_new=args.max_new,
+        batch_slots=args.slots)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Training launcher.
+
+Production path (TPU pod): builds the production mesh, shards params/opt
+with the rule engine, runs the jitted train_step over the data pipeline.
+On this CPU container the same code runs with a 1x1 host mesh and reduced
+configs — exercised by examples/train_lm.py and tests/test_train.py.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+      --steps 50 --reduced --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import transformer
+from repro.sharding.context import sharding_context
+from repro.sharding.specs import param_specs
+from repro.train.checkpoint import save_checkpoint
+from repro.train.data import DataConfig, make_pipeline
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.step import make_train_step
+
+
+def run(arch: str, *, steps: int = 50, batch: int = 8, seq: int = 128,
+        reduced: bool = True, lr: float = 3e-4, log_every: int = 10,
+        checkpoint_path=None, mesh=None, seed: int = 0):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    if cfg.family in ("vlm", "audio"):
+        raise SystemExit("use the family-specific example drivers")
+    mesh = mesh or make_host_mesh(1, 1)
+    opt_cfg = AdamWConfig(lr=lr, warmup_steps=max(steps // 10, 1),
+                          total_steps=steps)
+
+    params = transformer.init_params(cfg, jax.random.PRNGKey(seed))
+    pspec = param_specs(cfg, params, mesh)
+    params = jax.device_put(
+        params, jax.tree.map(
+            lambda s: jax.sharding.NamedSharding(mesh, s), pspec,
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)))
+    opt_state = init_opt_state(params, opt_cfg)
+
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
+    data = make_pipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                                    batch_size=batch, seed=seed))
+    losses = []
+    t0 = time.time()
+    with mesh, sharding_context(mesh):
+        for i in range(steps):
+            host = next(data)
+            batch_dev = {k: jnp.asarray(v) for k, v in host.items()}
+            params, opt_state, metrics = step_fn(params, opt_state,
+                                                 batch_dev)
+            losses.append(float(metrics["loss"]))
+            if (i + 1) % log_every == 0 or i == 0:
+                print(f"step {i+1:5d}  loss {losses[-1]:.4f}  "
+                      f"lr {float(metrics['lr']):.2e}  "
+                      f"gnorm {float(metrics['grad_norm']):.3f}  "
+                      f"{(time.time()-t0)/(i+1):.2f}s/step", flush=True)
+    if checkpoint_path:
+        save_checkpoint(checkpoint_path, params, opt_state, step=steps)
+        print("saved", checkpoint_path)
+    return params, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="16x16 mesh (needs 256 devices)")
+    ap.add_argument("--checkpoint", default=None)
+    args = ap.parse_args()
+    mesh = make_production_mesh() if args.production_mesh else None
+    run(args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
+        reduced=args.reduced, lr=args.lr, checkpoint_path=args.checkpoint,
+        mesh=mesh)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.models.transformer import (abstract_cache, abstract_params,
+                                      decode_step, forward, init_cache,
+                                      init_params)
+
+__all__ = ["abstract_cache", "abstract_params", "decode_step", "forward",
+           "init_cache", "init_params"]

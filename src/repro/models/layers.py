@@ -1,0 +1,70 @@
+"""Shared transformer building blocks (pure functions, bf16-friendly)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    out = (x - mean) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def swiglu_mlp(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+               w_down: jax.Array) -> jax.Array:
+    """SwiGLU MLP: down( silu(x@gate) * (x@up) )."""
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, w_gate))
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", g * u, w_down)
+
+
+def gelu_mlp(x: jax.Array, w_in: jax.Array, b_in: jax.Array,
+             w_out: jax.Array, b_out: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, w_in) + b_in)
+    return jnp.einsum("...f,fd->...d", h, w_out) + b_out
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: (..., S, H, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    # broadcast over the head axis: (..., S, 1, half)
+    angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n_pos: int, dim: int) -> jax.Array:
+    pos = jnp.arange(n_pos, dtype=jnp.float32)[:, None]
+    i = jnp.arange(dim // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10_000.0, 2 * i / dim)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def embed_tokens(embedding: jax.Array, tokens: jax.Array,
+                 scale: Optional[float] = None) -> jax.Array:
+    out = jnp.take(embedding, tokens, axis=0)
+    if scale is not None:
+        out = out * jnp.asarray(scale, out.dtype)
+    return out

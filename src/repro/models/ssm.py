@@ -1,0 +1,200 @@
+"""Mamba-2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked prefill: intra-chunk quadratic (attention-like, MXU-friendly) +
+inter-chunk linear state recurrence via lax.scan — the TPU adaptation of the
+SSD block decomposition (chunk == the paper's "block", sized for VMEM).
+Decode: O(1) state update per token.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+from repro.sharding.context import constrain
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array    # (B, d_conv-1, conv_dim)
+    state: jax.Array   # (B, H, N, P) f32
+
+
+def _split_proj(x, p, cfg):
+    s = cfg.ssm
+    d_in, G, N, H = s.d_inner, s.n_groups, s.d_state, s.n_heads
+    xz = jnp.einsum("bsd,de->bse", x, p["w_xz"])
+    x_in, z = xz[..., :d_in], xz[..., d_in:]
+    bc = jnp.einsum("bsd,de->bse", x, p["w_bc"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["w_dt"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    return x_in, z, bc, dt
+
+
+def _causal_conv(u, kernel):
+    """Depthwise causal conv.  u: (B, S, C); kernel: (W, C)."""
+    W = kernel.shape[0]
+    pad = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u, dtype=jnp.float32)
+    for i in range(W):
+        out = out + pad[:, i:i + u.shape[1]].astype(jnp.float32) * \
+            kernel[i].astype(jnp.float32)
+    return out.astype(u.dtype)
+
+
+def ssd_chunked(x, dt, A, B_, C_, chunk: int):
+    """SSD scan.  x:(B,S,H,P) dt:(B,S,H) A:(H,)<0 B_,C_:(B,S,G,N).
+
+    Streaming form: ONE lax.scan over chunks carrying the (B,H,N,P) state;
+    each (checkpointed) step does the intra-chunk quadratic block plus the
+    contribution of the carried state.  Peak memory is one chunk's
+    (L, L, H) tensors, independent of sequence length — the TPU analogue of
+    the paper's grouped computation.
+
+    Returns y:(B,S,H,P) and the final state (B,H,N,P) in f32.
+    """
+    Bsz, S, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    rep = H // G
+    chunk = min(chunk, S)
+    # ragged S: pad with dt=0 steps — exp(0*A)=1 and dt*B x = 0, so padding
+    # is an exact no-op for both y rows (dropped) and the carried state.
+    S_orig = S
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S += pad
+    nc = S // chunk
+    Af = A.astype(jnp.float32)
+    ii = jnp.arange(chunk)
+    causal = ii[:, None] >= ii[None, :]
+
+    def to_chunks(a, extra):
+        a = a.astype(jnp.float32).reshape((Bsz, nc, chunk) + extra)
+        return jnp.moveaxis(a, 1, 0)           # (nc, B, L, ...)
+
+    xs = (to_chunks(x, (H, P)), to_chunks(dt, (H,)),
+          to_chunks(B_, (G, N)), to_chunks(C_, (G, N)))
+
+    @jax.checkpoint
+    def chunk_step(state, inp):
+        xc, dtc, Bc, Cc = inp                  # (B,L,H,P) (B,L,H) (B,L,G,N)
+        xc = constrain(xc, "dp", None, "tp")
+        dtc = constrain(dtc, "dp", None, "tp")
+        Bh = constrain(jnp.repeat(Bc, rep, axis=2), "dp", None, "tp")
+        Ch = constrain(jnp.repeat(Cc, rep, axis=2), "dp", None, "tp")
+        dA = dtc * Af                          # (B,L,H) negative
+        cum = jnp.cumsum(dA, axis=1)
+        seg = cum[:, -1]                       # (B,H)
+        # intra-chunk quadratic block
+        diff = cum[:, :, None, :] - cum[:, None, :, :]     # (B,Li,Lj,H)
+        decay = jnp.where(causal[None, :, :, None], jnp.exp(diff), 0.0)
+        scores = jnp.einsum("blhn,bmhn->blmh", Ch, Bh)
+        w = constrain(scores * decay * dtc[:, None], "dp", None, None, "tp")
+        y = jnp.einsum("blmh,bmhp->blhp", w, xc)
+        # carried-state contribution
+        y = y + jnp.einsum("blhn,bhnp->blhp",
+                           Ch * jnp.exp(cum)[..., None], state)
+        # state update
+        to_end = jnp.exp(seg[:, None, :] - cum)            # (B,L,H)
+        wB = Bh * (to_end * dtc)[..., None]                # (B,L,H,N)
+        new_state = state * jnp.exp(seg)[..., None, None] + \
+            jnp.einsum("blhn,blhp->bhnp", wB, xc)
+        return new_state, y
+
+    init = constrain(jnp.zeros((Bsz, H, N, P), jnp.float32), "dp", "tp")
+    final, ys = jax.lax.scan(chunk_step, init, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S, H, P)[:, :S_orig]
+    return y.astype(x.dtype), final
+
+
+def mamba2_block(x, p, cfg, return_state: bool = False):
+    """Full Mamba-2 block, prefill/train path.  x: (B,S,D) -> (B,S,D)."""
+    s = cfg.ssm
+    B, S, D = x.shape
+    H, P, N, G = s.n_heads, s.head_dim, s.d_state, s.n_groups
+    x_in, z, bc, dt = _split_proj(x, p, cfg)
+    conv_in = jnp.concatenate([x_in, bc], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv"]))
+    x_c = conv_out[..., :s.d_inner]
+    bc_c = conv_out[..., s.d_inner:]
+    B_ = bc_c[..., :G * N].reshape(B, S, G, N)
+    C_ = bc_c[..., G * N:].reshape(B, S, G, N)
+    xh = x_c.reshape(B, S, H, P)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, final_state = ssd_chunked(xh, dt, A, B_, C_, s.chunk_size)
+    y = y + xh * p["D_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, S, s.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    if return_state:
+        cache = SSMCache(conv=conv_in[:, S - (s.d_conv - 1):], state=final_state)
+        return out, cache
+    return out
+
+
+def mamba2_decode(x, p, cfg, cache: SSMCache) -> Tuple[jax.Array, SSMCache]:
+    """One-token decode.  x: (B,1,D)."""
+    s = cfg.ssm
+    B = x.shape[0]
+    H, P, N, G = s.n_heads, s.head_dim, s.d_state, s.n_groups
+    x_in, z, bc, dt = _split_proj(x, p, cfg)
+    conv_in = jnp.concatenate([x_in, bc], axis=-1)       # (B,1,conv_dim)
+    window = jnp.concatenate([cache.conv, conv_in], axis=1)  # (B,W,cd)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                   p["conv"].astype(jnp.float32)))[:, None]
+    new_conv = window[:, 1:]
+    x_c = conv_out[..., :s.d_inner]
+    bc_c = conv_out[..., s.d_inner:]
+    B_ = bc_c[..., :G * N].reshape(B, G, N)
+    C_ = bc_c[..., G * N:].reshape(B, G, N)
+    rep = H // G
+    Bh = jnp.repeat(B_, rep, axis=1)                     # (B,H,N)
+    Ch = jnp.repeat(C_, rep, axis=1)
+    xh = x_c.reshape(B, H, P).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt1 = dt[:, 0]                                       # (B,H)
+    dA = jnp.exp(dt1 * A)                                # (B,H)
+    upd = jnp.einsum("bhn,bhp->bhnp", Bh * dt1[..., None], xh)
+    state = cache.state * dA[..., None, None] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, state)
+    y = y + xh * p["D_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, s.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return out, SSMCache(conv=new_conv, state=state)
+
+
+def init_ssm_params(rng, cfg, dtype):
+    s = cfg.ssm
+    D = cfg.d_model
+    conv_dim = s.d_inner + 2 * s.n_groups * s.d_state
+    k = jax.random.split(rng, 6)
+    init = jax.nn.initializers.normal(0.02)
+    return {
+        "w_xz": init(k[0], (D, 2 * s.d_inner), dtype),
+        "w_bc": init(k[1], (D, 2 * s.n_groups * s.d_state), dtype),
+        "w_dt": init(k[2], (D, s.n_heads), dtype),
+        "dt_bias": jnp.zeros((s.n_heads,), jnp.float32),
+        "conv": init(k[3], (s.d_conv, conv_dim), dtype),
+        "A_log": jnp.zeros((s.n_heads,), jnp.float32),
+        "D_skip": jnp.ones((s.n_heads,), jnp.float32),
+        "norm": jnp.zeros((s.d_inner,), dtype),
+        "w_out": init(k[4], (s.d_inner, D), dtype),
+    }
+
+
+def init_ssm_cache(batch, cfg, dtype):
+    s = cfg.ssm
+    conv_dim = s.d_inner + 2 * s.n_groups * s.d_state
+    return SSMCache(
+        conv=jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        state=jnp.zeros((batch, s.n_heads, s.d_state, s.head_dim),
+                        jnp.float32),
+    )

@@ -1,0 +1,894 @@
+"""Composable model zoo: one functional forward/decode per architecture family.
+
+Families: dense (incl. sliding-window local:global), moe (interleaved &
+first-dense), ssm (Mamba-2), hybrid (Mamba-2 + shared attention), audio
+(enc-dec backbone, stub frontend), vlm (decoder backbone, stub projector).
+
+Everything is `lax.scan` over stacked per-layer params so the lowered HLO is
+O(1) in depth — essential for the 512-device dry-runs.
+
+API:
+  init_params(cfg, rng)            real weights (smoke tests / examples)
+  abstract_params(cfg)             ShapeDtypeStructs via eval_shape (dry-run)
+  forward(cfg, params, batch, mode, return_cache)   train / prefill
+  decode_step(cfg, params, cache, batch)            one-token serve step
+  init_cache(cfg, batch, seq) / abstract_cache(...)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm as ssm_mod
+from repro.models.attention import (decode_attention, flash_attention_jnp,
+                                    mla_decode, mla_new_cache_entries,
+                                    mla_prefill)
+from repro.models.layers import (embed_tokens, gelu_mlp, layer_norm, rms_norm,
+                                 rope, sinusoidal_positions, swiglu_mlp)
+from repro.models.moe import init_moe_params, moe_block
+from repro.sharding.context import constrain
+
+_BIG_WINDOW = 1 << 30
+Params = Dict[str, Any]
+
+
+# ======================================================================
+# layer metadata (static per config)
+# ======================================================================
+
+def layer_meta(cfg: ModelConfig):
+    """Per-layer (window, rope_theta) arrays for the dense stack."""
+    windows, thetas = [], []
+    for l in range(cfg.n_layers):
+        is_global = (cfg.global_interval == 0
+                     or (l + 1) % cfg.global_interval == 0)
+        if cfg.sliding_window is not None and not is_global:
+            windows.append(cfg.sliding_window)
+            thetas.append(10_000.0)          # gemma3: local layers use 10k
+        else:
+            windows.append(_BIG_WINDOW)
+            thetas.append(cfg.rope_theta)
+    return (jnp.asarray(windows, jnp.int32), jnp.asarray(thetas, jnp.float32))
+
+
+# ======================================================================
+# parameter init
+# ======================================================================
+
+def _init_attn(rng, cfg: ModelConfig, dtype, d_in=None):
+    D = d_in or cfg.d_model
+    hd = cfg.resolved_head_dim
+    H, K = cfg.n_heads, cfg.n_kv_heads
+    k = jax.random.split(rng, 4)
+    init = jax.nn.initializers.normal(0.02)
+    p = {
+        "wq": init(k[0], (D, H * hd), dtype),
+        "wk": init(k[1], (D, K * hd), dtype),
+        "wv": init(k[2], (D, K * hd), dtype),
+        "wo": init(k[3], (H * hd, cfg.d_model), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((K * hd,), dtype)
+        p["bv"] = jnp.zeros((K * hd,), dtype)
+    return p
+
+
+def _init_mla(rng, cfg: ModelConfig, dtype):
+    a, D, H = cfg.mla, cfg.d_model, cfg.n_heads
+    k = jax.random.split(rng, 5)
+    init = jax.nn.initializers.normal(0.02)
+    return {
+        "wq_a": init(k[0], (D, a.q_lora_rank), dtype),
+        "q_norm": jnp.zeros((a.q_lora_rank,), dtype),
+        "wq_b": init(k[1], (a.q_lora_rank,
+                            H * (a.nope_head_dim + a.rope_head_dim)), dtype),
+        "wkv_a": init(k[2], (D, a.kv_lora_rank + a.rope_head_dim), dtype),
+        "kv_norm": jnp.zeros((a.kv_lora_rank,), dtype),
+        "wkv_b": init(k[3], (a.kv_lora_rank,
+                             H * (a.nope_head_dim + a.v_head_dim)), dtype),
+        "wo": init(k[4], (H * a.v_head_dim, D), dtype),
+    }
+
+
+def _init_mlp(rng, cfg: ModelConfig, dtype, d_ff=None):
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    k = jax.random.split(rng, 3)
+    init = jax.nn.initializers.normal(0.02)
+    return {
+        "w_gate": init(k[0], (D, F), dtype),
+        "w_up": init(k[1], (D, F), dtype),
+        "w_down": init(k[2], (F, D), dtype),
+    }
+
+
+def _init_dense_block(rng, cfg, dtype, d_ff=None):
+    k = jax.random.split(rng, 2)
+    return {
+        "pre_attn_norm": jnp.zeros((cfg.d_model,), dtype),
+        "attn": _init_attn(k[0], cfg, dtype),
+        "pre_mlp_norm": jnp.zeros((cfg.d_model,), dtype),
+        "mlp": _init_mlp(k[1], cfg, dtype, d_ff),
+    }
+
+
+def _stack(rngs, fn):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *[fn(r) for r in rngs])
+
+
+def _stack_n(rng, fn, n):
+    """Like _stack but supports n == 0 (empty scanned stacks)."""
+    if n == 0:
+        proto = fn(rng)
+        return jax.tree.map(lambda x: jnp.zeros((0,) + x.shape, x.dtype),
+                            proto)
+    return _stack(jax.random.split(rng, n), fn)
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    init = jax.nn.initializers.normal(0.02)
+    k = jax.random.split(rng, 8)
+    params: Params = {
+        "embed": init(k[0], (cfg.vocab_size, cfg.d_model), dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init(k[1], (cfg.d_model, cfg.vocab_size), dtype)
+
+    if cfg.frontend is not None:
+        params["projector"] = init(k[2], (cfg.frontend_dim, cfg.d_model),
+                                   dtype)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        rngs = jax.random.split(k[3], cfg.n_layers)
+        params["blocks"] = _stack(rngs, lambda r: _init_dense_block(r, cfg, dtype))
+    elif fam == "moe":
+        params.update(_init_moe_arch(cfg, k[3], dtype))
+    elif fam == "ssm":
+        rngs = jax.random.split(k[3], cfg.n_layers)
+        params["blocks"] = _stack(rngs, lambda r: {
+            "pre_norm": jnp.zeros((cfg.d_model,), dtype),
+            "ssm": ssm_mod.init_ssm_params(r, cfg, dtype)})
+    elif fam == "hybrid":
+        params.update(_init_hybrid_arch(cfg, k[3], dtype))
+    elif fam == "audio":
+        params.update(_init_audio_arch(cfg, k[3], dtype))
+    else:
+        raise ValueError(fam)
+    return params
+
+
+def _init_moe_arch(cfg, rng, dtype):
+    m = cfg.moe
+    k = jax.random.split(rng, 4)
+    out: Params = {}
+    if m.first_dense_layers:       # deepseek-v2 layout
+        assert m.period == 1
+        n_moe = cfg.n_layers - m.first_dense_layers
+        rngs = jax.random.split(k[0], m.first_dense_layers)
+        out["first_blocks"] = _stack(rngs, lambda r: {
+            "pre_attn_norm": jnp.zeros((cfg.d_model,), dtype),
+            "attn": _init_mla(r, cfg, dtype),
+            "pre_mlp_norm": jnp.zeros((cfg.d_model,), dtype),
+            "mlp": _init_mlp(r, cfg, dtype, m.d_ff_dense)})
+        rngs = jax.random.split(k[1], n_moe)
+        out["blocks"] = _stack(rngs, lambda r: {
+            "pre_attn_norm": jnp.zeros((cfg.d_model,), dtype),
+            "attn": _init_mla(r, cfg, dtype),
+            "pre_mlp_norm": jnp.zeros((cfg.d_model,), dtype),
+            "moe": init_moe_params(r, cfg, dtype)})
+    else:                          # llama4 layout: (dense, moe) super-blocks
+        assert m.period == 2 and cfg.n_layers % 2 == 0
+        n_super = cfg.n_layers // 2
+        rngs = jax.random.split(k[0], n_super)
+
+        def super_block(r):
+            r1, r2, r3 = jax.random.split(r, 3)
+            return {
+                "dense": _init_dense_block(r1, cfg, dtype,
+                                           cfg.moe.d_ff_dense or cfg.d_ff),
+                "moe_attn": {
+                    "pre_attn_norm": jnp.zeros((cfg.d_model,), dtype),
+                    "attn": _init_attn(r2, cfg, dtype),
+                    "pre_mlp_norm": jnp.zeros((cfg.d_model,), dtype)},
+                "moe": init_moe_params(r3, cfg, dtype),
+            }
+        out["super_blocks"] = _stack(rngs, super_block)
+    return out
+
+
+def _init_hybrid_arch(cfg, rng, dtype):
+    """zamba2: 13 super-blocks of (6 mamba + shared attn w/ LoRA) + 3 tail."""
+    n_super, inner = _hybrid_layout(cfg)
+    tail = cfg.n_layers - n_super * inner
+    k = jax.random.split(rng, 5)
+    init = jax.nn.initializers.normal(0.02)
+    hd, H, K, D = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads, cfg.d_model
+    r = cfg.shared_attn_lora_rank
+
+    def mamba(rr):
+        return {"pre_norm": jnp.zeros((D,), dtype),
+                "ssm": ssm_mod.init_ssm_params(rr, cfg, dtype)}
+
+    def lora(rr):
+        ks = jax.random.split(rr, 6)
+        return {
+            "a_q": init(ks[0], (D, r), dtype), "b_q": jnp.zeros((r, H * hd), dtype),
+            "a_k": init(ks[1], (D, r), dtype), "b_k": jnp.zeros((r, K * hd), dtype),
+            "a_v": init(ks[2], (D, r), dtype), "b_v": jnp.zeros((r, K * hd), dtype),
+        }
+
+    rngs = jax.random.split(k[0], n_super * inner)
+    mb = _stack(rngs, mamba)
+    mb = jax.tree.map(lambda x: x.reshape((n_super, inner) + x.shape[1:]), mb)
+    out = {
+        "mamba_blocks": mb,
+        "tail_blocks": _stack_n(k[1], mamba, tail),
+        "shared_attn": {
+            "pre_attn_norm": jnp.zeros((D,), dtype),
+            "attn": _init_attn(k[2], cfg, dtype),
+            "pre_mlp_norm": jnp.zeros((D,), dtype),
+            "mlp": _init_mlp(k[3], cfg, dtype),
+        },
+        "lora": _stack(jax.random.split(k[4], n_super), lora),
+    }
+    return out
+
+
+def _hybrid_layout(cfg) -> Tuple[int, int]:
+    inner = cfg.attn_interval
+    n_super = cfg.n_layers // inner
+    return n_super, inner
+
+
+def _init_audio_arch(cfg, rng, dtype):
+    """whisper: LayerNorm enc-dec with biased attention + GELU MLPs."""
+    D, F = cfg.d_model, cfg.d_ff
+    init = jax.nn.initializers.normal(0.02)
+    k = jax.random.split(rng, 3)
+
+    def ln():
+        return {"scale": jnp.ones((D,), dtype), "bias": jnp.zeros((D,), dtype)}
+
+    def gmlp(rr):
+        k1, k2 = jax.random.split(rr)
+        return {"w_in": init(k1, (D, F), dtype), "b_in": jnp.zeros((F,), dtype),
+                "w_out": init(k2, (F, D), dtype), "b_out": jnp.zeros((D,), dtype)}
+
+    def enc_block(rr):
+        r1, r2 = jax.random.split(rr)
+        return {"ln1": ln(), "attn": _init_attn(r1, cfg, dtype),
+                "ln2": ln(), "mlp": gmlp(r2)}
+
+    def dec_block(rr):
+        r1, r2, r3 = jax.random.split(rr, 3)
+        return {"ln1": ln(), "self_attn": _init_attn(r1, cfg, dtype),
+                "ln2": ln(), "cross_attn": _init_attn(r2, cfg, dtype),
+                "ln3": ln(), "mlp": gmlp(r3)}
+
+    return {
+        "enc_blocks": _stack(jax.random.split(k[0], cfg.n_encoder_layers),
+                             enc_block),
+        "enc_final_ln": ln(),
+        "dec_blocks": _stack(jax.random.split(k[1], cfg.n_layers), dec_block),
+        "dec_final_ln": ln(),
+    }
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    return jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.PRNGKey(0))
+
+
+# ======================================================================
+# attention sub-blocks
+# ======================================================================
+
+def _qkv(x, p, cfg, lora=None):
+    hd = cfg.resolved_head_dim
+    H, K = cfg.n_heads, cfg.n_kv_heads
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,de->bse", x, p["wq"])
+    k = jnp.einsum("bsd,de->bse", x, p["wk"])
+    v = jnp.einsum("bsd,de->bse", x, p["wv"])
+    if lora is not None:
+        q = q + jnp.einsum("bsd,dr,re->bse", x, lora["a_q"], lora["b_q"])
+        k = k + jnp.einsum("bsd,dr,re->bse", x, lora["a_k"], lora["b_k"])
+        v = v + jnp.einsum("bsd,dr,re->bse", x, lora["a_v"], lora["b_v"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (q.reshape(B, S, H, hd), k.reshape(B, S, K, hd),
+            v.reshape(B, S, K, hd))
+
+
+def _gqa_full(x, p, cfg, positions, theta, window, causal=True, lora=None):
+    """Full-sequence GQA attention (train/prefill).  Returns (out, k, v)."""
+    q, k, v = _qkv(x, p, cfg, lora)
+    if theta is not None:
+        q = rope(q, positions, theta)
+        k = rope(k, positions, theta)
+    o = flash_attention_jnp(q, k, v, causal=causal, window=window)
+    B, S = x.shape[:2]
+    out = jnp.einsum("bse,ed->bsd", o.reshape(B, S, -1), p["wo"])
+    return out, k, v
+
+
+def _update_cache(cache, new, pos):
+    """Per-sequence cache write: cache (B,S,...) <- new (B,1,...) at pos.
+
+    Scalar pos (aligned decode, the dry-run path) uses ONE
+    dynamic_update_slice — GSPMD keeps the sharded cache in place.  The
+    vmap'd per-row path (ragged continuous batching) makes GSPMD gather
+    the cache; only the CPU serving engine takes it (H4-iter3).
+    """
+    if jnp.ndim(pos) == 0:
+        return jax.lax.dynamic_update_slice(
+            cache, new.astype(cache.dtype),
+            (0, pos) + (0,) * (cache.ndim - 2))
+    return jax.vmap(
+        lambda c, u, p: jax.lax.dynamic_update_slice(
+            c, u.astype(c.dtype), (p,) + (0,) * (c.ndim - 1))
+    )(cache, new, pos)
+
+
+def _gqa_decode(x, p, cfg, pos, theta, window, kc, vc, lora=None):
+    """One-token GQA decode; updates (kc, vc) at per-sequence ``pos``
+    (scalar or (B,) — continuous batching slots may differ)."""
+    from repro import tuning
+    from repro.models.attention import cp_decode_attention
+    from repro.sharding.context import current_mesh
+
+    q, k, v = _qkv(x, p, cfg, lora)
+    B = x.shape[0]
+    pos_vec = jnp.broadcast_to(jnp.asarray(pos), (B,))
+    if theta is not None:
+        q = rope(q, pos_vec[:, None], theta)
+        k = rope(k, pos_vec[:, None], theta)
+    kc = _update_cache(kc, k, pos)
+    vc = _update_cache(vc, v, pos)
+    mesh = current_mesh()
+    if (tuning.on("cp_decode") and mesh is not None and B == 1
+            and kc.shape[1] % mesh.shape["data"] == 0):
+        # H3: seq-sharded cache — exchange softmax partials, not the cache
+        o = cp_decode_attention(q, kc, vc, cache_len=pos_vec + 1,
+                                mesh=mesh, window=window)
+    else:
+        o = decode_attention(q, kc, vc, cache_len=pos_vec + 1,
+                             window=window)
+    out = jnp.einsum("bse,ed->bsd", o.reshape(x.shape[0], 1, -1), p["wo"])
+    return out, kc, vc
+
+
+def _cross_attn(x, p, cfg, k, v):
+    hd = cfg.resolved_head_dim
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,de->bse", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    o = flash_attention_jnp(q, k, v, causal=False)
+    return jnp.einsum("bse,ed->bsd", o.reshape(B, S, -1), p["wo"])
+
+
+def _cross_kv(enc_out, p, cfg):
+    hd = cfg.resolved_head_dim
+    B, S, _ = enc_out.shape
+    k = jnp.einsum("bsd,de->bse", enc_out, p["wk"])
+    v = jnp.einsum("bsd,de->bse", enc_out, p["wv"])
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    return (k.reshape(B, S, cfg.n_kv_heads, hd),
+            v.reshape(B, S, cfg.n_kv_heads, hd))
+
+
+# ======================================================================
+# forward (train / prefill)
+# ======================================================================
+
+def forward(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+            *, mode: str = "train", return_cache: bool = False,
+            return_hidden: bool = False, remat: bool = True):
+    """Returns (logits_or_hidden, aux_loss[, cache]).
+
+    ``return_hidden=True`` skips the unembedding and returns the final-norm
+    hidden states — used with the chunked CE loss and with last-token-only
+    prefill logits so (B, S, V) logits are never materialized.
+    """
+    fam = cfg.family
+    if fam == "audio":
+        return _audio_forward(cfg, params, batch, return_cache=return_cache,
+                              return_hidden=return_hidden,
+                              remat=remat and mode == "train")
+    x, positions = _embed_inputs(cfg, params, batch)
+    use_remat = remat and mode == "train"
+
+    if fam in ("dense", "vlm"):
+        x, aux, cache = _dense_stack(cfg, params, x, positions,
+                                     return_cache, use_remat)
+    elif fam == "moe":
+        x, aux, cache = _moe_stack(cfg, params, x, positions,
+                                   return_cache, use_remat)
+    elif fam == "ssm":
+        x, aux, cache = _ssm_stack(cfg, params, x, return_cache, use_remat)
+    elif fam == "hybrid":
+        x, aux, cache = _hybrid_stack(cfg, params, x, positions,
+                                      return_cache, use_remat)
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    out = x if return_hidden else unembed(cfg, params, x)
+    if return_cache:
+        return out, aux, cache
+    return out, aux
+
+
+def unembed(cfg, params, x):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,dv->bsv", x, head).astype(jnp.float32)
+
+
+def final_hidden(cfg, params, x):
+    """Final norm only (used with chunked loss to avoid full logits)."""
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def _embed_inputs(cfg, params, batch):
+    scale = cfg.d_model ** 0.5 if cfg.arch_id.startswith("gemma") else None
+    tok_emb = embed_tokens(params["embed"], batch["tokens"], scale)
+    if cfg.frontend == "vision":
+        patches = jnp.einsum("bnf,fd->bnd", batch["patches"],
+                             params["projector"])
+        x = jnp.concatenate([patches.astype(tok_emb.dtype), tok_emb], axis=1)
+    else:
+        x = tok_emb
+    x = constrain(x, "dp", "tp")
+    positions = jnp.arange(x.shape[1])
+    return x, positions
+
+
+def _maybe_remat(fn, use_remat):
+    return jax.checkpoint(fn) if use_remat else fn
+
+
+def _dense_stack(cfg, params, x, positions, return_cache, use_remat):
+    windows, thetas = layer_meta(cfg)
+
+    def body(h, xs):
+        p, window, theta = xs
+        h = constrain(h, "dp", "tp")
+        a, k, v = _gqa_full(rms_norm(h, p["pre_attn_norm"], cfg.norm_eps),
+                            p["attn"], cfg, positions, theta, window)
+        h = h + a
+        h = h + swiglu_mlp(rms_norm(h, p["pre_mlp_norm"], cfg.norm_eps),
+                           **p["mlp"])
+        return h, (k, v) if return_cache else None
+
+    x, kv = jax.lax.scan(_maybe_remat(body, use_remat), x,
+                         (params["blocks"], windows, thetas))
+    cache = {"k": kv[0], "v": kv[1]} if return_cache else None
+    return x, jnp.float32(0.0), cache
+
+
+def _moe_stack(cfg, params, x, positions, return_cache, use_remat):
+    m = cfg.moe
+    if m.first_dense_layers:          # deepseek-v2: MLA + (dense then moe)
+        def first_body(h, p):
+            h = constrain(h, "dp", "tp")
+            a, ckv, krope = mla_prefill(
+                rms_norm(h, p["pre_attn_norm"], cfg.norm_eps), p["attn"],
+                cfg, positions)
+            h = h + a
+            h = h + swiglu_mlp(rms_norm(h, p["pre_mlp_norm"], cfg.norm_eps),
+                               **p["mlp"])
+            return h, (ckv, krope) if return_cache else None
+
+        def moe_body(carry, p):
+            h, aux = carry
+            h = constrain(h, "dp", "tp")
+            a, ckv, krope = mla_prefill(
+                rms_norm(h, p["pre_attn_norm"], cfg.norm_eps), p["attn"],
+                cfg, positions)
+            h = h + a
+            mo, a_l = moe_block(rms_norm(h, p["pre_mlp_norm"], cfg.norm_eps),
+                                p["moe"], cfg)
+            return (h + mo, aux + a_l), (ckv, krope) if return_cache else None
+
+        x, first_kv = jax.lax.scan(_maybe_remat(first_body, use_remat), x,
+                                   params["first_blocks"])
+        (x, aux), kv = jax.lax.scan(_maybe_remat(moe_body, use_remat),
+                                    (x, jnp.float32(0.0)), params["blocks"])
+        cache = None
+        if return_cache:
+            cache = {"first_c_kv": first_kv[0], "first_k_rope": first_kv[1],
+                     "c_kv": kv[0], "k_rope": kv[1]}
+        return x, aux, cache
+
+    # llama4: (dense, moe) super-blocks
+    windows = jnp.full((cfg.n_layers // 2,), _BIG_WINDOW, jnp.int32)
+
+    def body(carry, xs):
+        h, aux = carry
+        p, window = xs
+        h = constrain(h, "dp", "tp")
+        d = p["dense"]
+        a, k1, v1 = _gqa_full(rms_norm(h, d["pre_attn_norm"], cfg.norm_eps),
+                              d["attn"], cfg, positions, cfg.rope_theta,
+                              window)
+        h = h + a
+        h = h + swiglu_mlp(rms_norm(h, d["pre_mlp_norm"], cfg.norm_eps),
+                           **d["mlp"])
+        ma = p["moe_attn"]
+        a, k2, v2 = _gqa_full(rms_norm(h, ma["pre_attn_norm"], cfg.norm_eps),
+                              ma["attn"], cfg, positions, cfg.rope_theta,
+                              window)
+        h = h + a
+        mo, a_l = moe_block(rms_norm(h, ma["pre_mlp_norm"], cfg.norm_eps),
+                            p["moe"], cfg)
+        h = h + mo
+        ys = None
+        if return_cache:
+            ys = (jnp.stack([k1, k2]), jnp.stack([v1, v2]))
+        return (h, aux + a_l), ys
+
+    (x, aux), kv = jax.lax.scan(_maybe_remat(body, use_remat),
+                                (x, jnp.float32(0.0)),
+                                (params["super_blocks"], windows))
+    cache = {"k": kv[0], "v": kv[1]} if return_cache else None
+    return x, aux, cache
+
+
+def _ssm_stack(cfg, params, x, return_cache, use_remat):
+    def body(h, p):
+        h = constrain(h, "dp", "tp")
+        o = ssm_mod.mamba2_block(
+            rms_norm(h, p["pre_norm"], cfg.norm_eps), p["ssm"], cfg,
+            return_state=return_cache)
+        if return_cache:
+            o, c = o
+            return h + o, c
+        return h + o, None
+
+    x, states = jax.lax.scan(_maybe_remat(body, use_remat), x,
+                             params["blocks"])
+    cache = {"ssm": states} if return_cache else None
+    return x, jnp.float32(0.0), cache
+
+
+def _hybrid_stack(cfg, params, x, positions, return_cache, use_remat):
+    n_super, inner = _hybrid_layout(cfg)
+    windows, theta = _BIG_WINDOW, cfg.rope_theta
+    shared = params["shared_attn"]
+
+    def mamba_body(h, p):
+        h = constrain(h, "dp", "tp")
+        o = ssm_mod.mamba2_block(
+            rms_norm(h, p["pre_norm"], cfg.norm_eps), p["ssm"], cfg,
+            return_state=return_cache)
+        if return_cache:
+            o, c = o
+            return h + o, c
+        return h + o, None
+
+    def super_body(h, xs):
+        mb, lora = xs
+        h, mstates = jax.lax.scan(mamba_body, h, mb)
+        a, k, v = _gqa_full(
+            rms_norm(h, shared["pre_attn_norm"], cfg.norm_eps),
+            shared["attn"], cfg, positions, theta, windows, lora=lora)
+        h = h + a
+        h = h + swiglu_mlp(rms_norm(h, shared["pre_mlp_norm"], cfg.norm_eps),
+                           **shared["mlp"])
+        return h, (k, v, mstates) if return_cache else None
+
+    x, ys = jax.lax.scan(_maybe_remat(super_body, use_remat), x,
+                         (params["mamba_blocks"], params["lora"]))
+    x, tail_states = jax.lax.scan(mamba_body, x, params["tail_blocks"])
+    cache = None
+    if return_cache:
+        cache = {"k": ys[0], "v": ys[1], "mamba": ys[2],
+                 "tail": tail_states}
+    return x, jnp.float32(0.0), cache
+
+
+def _audio_forward(cfg, params, batch, *, return_cache, return_hidden,
+                   remat):
+    frames, tokens = batch["frames"], batch["tokens"]
+    enc_out = encode_audio(cfg, params, frames)
+    x = embed_tokens(params["embed"], tokens)
+    S = x.shape[1]
+    x = x + sinusoidal_positions(S, cfg.d_model).astype(x.dtype)[None]
+
+    def body(h, p):
+        h = constrain(h, "dp", "tp")
+        a, k, v = _gqa_full(
+            layer_norm(h, p["ln1"]["scale"], p["ln1"]["bias"]),
+            p["self_attn"], cfg, jnp.arange(S), None, _BIG_WINDOW)
+        h = h + a
+        ck, cv = _cross_kv(enc_out, p["cross_attn"], cfg)
+        h = h + _cross_attn(layer_norm(h, p["ln2"]["scale"], p["ln2"]["bias"]),
+                            p["cross_attn"], cfg, ck, cv)
+        h = h + gelu_mlp(layer_norm(h, p["ln3"]["scale"], p["ln3"]["bias"]),
+                         **p["mlp"])
+        return h, (k, v, ck, cv) if return_cache else None
+
+    x, kvs = jax.lax.scan(_maybe_remat(body, remat), x, params["dec_blocks"])
+    x = layer_norm(x, params["dec_final_ln"]["scale"],
+                   params["dec_final_ln"]["bias"])
+    out = x if return_hidden else unembed(cfg, params, x)
+    if return_cache:
+        cache = {"k": kvs[0], "v": kvs[1],
+                 "cross_k": kvs[2], "cross_v": kvs[3]}
+        return out, jnp.float32(0.0), cache
+    return out, jnp.float32(0.0)
+
+
+def encode_audio(cfg, params, frames):
+    """Whisper encoder over stub frame embeddings (B, S_enc, fd)."""
+    x = jnp.einsum("bsf,fd->bsd", frames, params["projector"])
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+
+    def body(h, p):
+        h = constrain(h, "dp", "tp")
+        a, _, _ = _gqa_full(
+            layer_norm(h, p["ln1"]["scale"], p["ln1"]["bias"]), p["attn"],
+            cfg, jnp.arange(h.shape[1]), None, _BIG_WINDOW, causal=False)
+        h = h + a
+        h = h + gelu_mlp(layer_norm(h, p["ln2"]["scale"], p["ln2"]["bias"]),
+                         **p["mlp"])
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return layer_norm(x, params["enc_final_ln"]["scale"],
+                      params["enc_final_ln"]["bias"])
+
+
+# ======================================================================
+# KV / state caches
+# ======================================================================
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int,
+               enc_len: Optional[int] = None):
+    dtype = jnp.dtype(cfg.dtype)
+    hd, K = cfg.resolved_head_dim, cfg.n_kv_heads
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        shape = (cfg.n_layers, batch, seq, K, hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if fam == "moe":
+        m = cfg.moe
+        if m.first_dense_layers:   # deepseek MLA latent caches
+            a = cfg.mla
+            nf, nm = m.first_dense_layers, cfg.n_layers - m.first_dense_layers
+            return {
+                "first_c_kv": jnp.zeros((nf, batch, seq, a.kv_lora_rank), dtype),
+                "first_k_rope": jnp.zeros((nf, batch, seq, a.rope_head_dim), dtype),
+                "c_kv": jnp.zeros((nm, batch, seq, a.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros((nm, batch, seq, a.rope_head_dim), dtype),
+            }
+        n_super = cfg.n_layers // 2
+        shape = (n_super, 2, batch, seq, K, hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if fam == "ssm":
+        zero = ssm_mod.init_ssm_cache(batch, cfg, dtype)
+        return {"ssm": jax.tree.map(
+            lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), zero)}
+    if fam == "hybrid":
+        n_super, inner = _hybrid_layout(cfg)
+        tail = cfg.n_layers - n_super * inner
+        zero = ssm_mod.init_ssm_cache(batch, cfg, dtype)
+        return {
+            "mamba": jax.tree.map(
+                lambda a: jnp.zeros((n_super, inner) + a.shape, a.dtype), zero),
+            "tail": jax.tree.map(
+                lambda a: jnp.zeros((tail,) + a.shape, a.dtype), zero),
+            "k": jnp.zeros((n_super, batch, seq, K, hd), dtype),
+            "v": jnp.zeros((n_super, batch, seq, K, hd), dtype),
+        }
+    if fam == "audio":
+        enc_len = enc_len or cfg.n_frontend_tokens
+        L = cfg.n_layers
+        return {
+            "k": jnp.zeros((L, batch, seq, K, hd), dtype),
+            "v": jnp.zeros((L, batch, seq, K, hd), dtype),
+            "cross_k": jnp.zeros((L, batch, enc_len, K, hd), dtype),
+            "cross_v": jnp.zeros((L, batch, enc_len, K, hd), dtype),
+        }
+    raise ValueError(fam)
+
+
+def abstract_cache(cfg, batch, seq, enc_len=None):
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, seq, enc_len))
+
+
+# ======================================================================
+# decode step (one new token, cache at ``pos``)
+# ======================================================================
+
+def decode_step(cfg: ModelConfig, params: Params, cache,
+                batch: Dict[str, jax.Array]):
+    """batch = {"token": (B,1) int32, "pos": scalar int32}.
+
+    Returns (logits (B,1,V) f32, new_cache).
+    """
+    token, pos = batch["token"], batch["pos"]
+    fam = cfg.family
+    scale = cfg.d_model ** 0.5 if cfg.arch_id.startswith("gemma") else None
+    x = embed_tokens(params["embed"], token, scale)
+
+    if fam in ("dense", "vlm"):
+        windows, thetas = layer_meta(cfg)
+
+        def body(h, xs):
+            p, window, theta, kc, vc = xs
+            a, kc, vc = _gqa_decode(
+                rms_norm(h, p["pre_attn_norm"], cfg.norm_eps), p["attn"],
+                cfg, pos, theta, window, kc, vc)
+            h = h + a
+            h = h + swiglu_mlp(rms_norm(h, p["pre_mlp_norm"], cfg.norm_eps),
+                               **p["mlp"])
+            return h, (kc, vc)
+
+        x, (k, v) = jax.lax.scan(
+            body, x, (params["blocks"], windows, thetas,
+                      cache["k"], cache["v"]))
+        new_cache = {"k": k, "v": v}
+
+    elif fam == "moe":
+        x, new_cache = _moe_decode(cfg, params, cache, x, pos)
+
+    elif fam == "ssm":
+        def body(h, xs):
+            p, c = xs
+            o, c = ssm_mod.mamba2_decode(
+                rms_norm(h, p["pre_norm"], cfg.norm_eps), p["ssm"], cfg, c)
+            return h + o, c
+
+        x, new_ssm = jax.lax.scan(body, x, (params["blocks"], cache["ssm"]))
+        new_cache = {"ssm": new_ssm}
+
+    elif fam == "hybrid":
+        x, new_cache = _hybrid_decode(cfg, params, cache, x, pos)
+
+    elif fam == "audio":
+        x, new_cache = _audio_decode(cfg, params, cache, x, pos)
+    else:
+        raise ValueError(fam)
+
+    x = _final_norm_decode(cfg, params, x)
+    logits = unembed(cfg, params, x)
+    return logits, new_cache
+
+
+def _final_norm_decode(cfg, params, x):
+    if cfg.family == "audio":
+        p = params["dec_final_ln"]
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def _moe_decode(cfg, params, cache, x, pos):
+    m = cfg.moe
+    if m.first_dense_layers:       # deepseek: absorbed MLA decode
+        B = x.shape[0]
+        pos_vec = jnp.broadcast_to(jnp.asarray(pos), (B,))
+
+        def first_body(h, xs):
+            p, ckv_c, kr_c = xs
+            hn = rms_norm(h, p["pre_attn_norm"], cfg.norm_eps)
+            ckv, krope = mla_new_cache_entries(hn, p["attn"], cfg, pos_vec)
+            ckv_c = _update_cache(ckv_c, ckv, pos)
+            kr_c = _update_cache(kr_c, krope, pos)
+            a = mla_decode(hn, p["attn"], cfg, ckv_c, kr_c, pos_vec + 1,
+                           pos_vec)
+            h = h + a
+            h = h + swiglu_mlp(rms_norm(h, p["pre_mlp_norm"], cfg.norm_eps),
+                               **p["mlp"])
+            return h, (ckv_c, kr_c)
+
+        def moe_body(h, xs):
+            p, ckv_c, kr_c = xs
+            hn = rms_norm(h, p["pre_attn_norm"], cfg.norm_eps)
+            ckv, krope = mla_new_cache_entries(hn, p["attn"], cfg, pos_vec)
+            ckv_c = _update_cache(ckv_c, ckv, pos)
+            kr_c = _update_cache(kr_c, krope, pos)
+            a = mla_decode(hn, p["attn"], cfg, ckv_c, kr_c, pos_vec + 1,
+                           pos_vec)
+            h = h + a
+            mo, _ = moe_block(rms_norm(h, p["pre_mlp_norm"], cfg.norm_eps),
+                              p["moe"], cfg)
+            return h + mo, (ckv_c, kr_c)
+
+        x, first = jax.lax.scan(first_body, x,
+                                (params["first_blocks"], cache["first_c_kv"],
+                                 cache["first_k_rope"]))
+        x, rest = jax.lax.scan(moe_body, x,
+                               (params["blocks"], cache["c_kv"],
+                                cache["k_rope"]))
+        return x, {"first_c_kv": first[0], "first_k_rope": first[1],
+                   "c_kv": rest[0], "k_rope": rest[1]}
+
+    # llama4 super-blocks
+    def body(h, xs):
+        p, kc, vc = xs
+        d = p["dense"]
+        a, k1, v1 = _gqa_decode(
+            rms_norm(h, d["pre_attn_norm"], cfg.norm_eps), d["attn"], cfg,
+            pos, cfg.rope_theta, _BIG_WINDOW, kc[0], vc[0])
+        h = h + a
+        h = h + swiglu_mlp(rms_norm(h, d["pre_mlp_norm"], cfg.norm_eps),
+                           **d["mlp"])
+        ma = p["moe_attn"]
+        a, k2, v2 = _gqa_decode(
+            rms_norm(h, ma["pre_attn_norm"], cfg.norm_eps), ma["attn"], cfg,
+            pos, cfg.rope_theta, _BIG_WINDOW, kc[1], vc[1])
+        h = h + a
+        mo, _ = moe_block(rms_norm(h, ma["pre_mlp_norm"], cfg.norm_eps),
+                          p["moe"], cfg)
+        h = h + mo
+        return h, (jnp.stack([k1, k2]), jnp.stack([v1, v2]))
+
+    x, (k, v) = jax.lax.scan(body, x,
+                             (params["super_blocks"], cache["k"], cache["v"]))
+    return x, {"k": k, "v": v}
+
+
+def _hybrid_decode(cfg, params, cache, x, pos):
+    shared = params["shared_attn"]
+
+    def mamba_body(h, xs):
+        p, c = xs
+        o, c = ssm_mod.mamba2_decode(
+            rms_norm(h, p["pre_norm"], cfg.norm_eps), p["ssm"], cfg, c)
+        return h + o, c
+
+    def super_body(h, xs):
+        mb, lora, mcache, kc, vc = xs
+        h, mcache = jax.lax.scan(mamba_body, h, (mb, mcache))
+        a, kc, vc = _gqa_decode(
+            rms_norm(h, shared["pre_attn_norm"], cfg.norm_eps),
+            shared["attn"], cfg, pos, cfg.rope_theta, _BIG_WINDOW,
+            kc, vc, lora=lora)
+        h = h + a
+        h = h + swiglu_mlp(rms_norm(h, shared["pre_mlp_norm"], cfg.norm_eps),
+                           **shared["mlp"])
+        return h, (mcache, kc, vc)
+
+    x, (mamba_c, k, v) = jax.lax.scan(
+        super_body, x, (params["mamba_blocks"], params["lora"],
+                        cache["mamba"], cache["k"], cache["v"]))
+    x, tail_c = jax.lax.scan(mamba_body, x,
+                             (params["tail_blocks"], cache["tail"]))
+    return x, {"mamba": mamba_c, "tail": tail_c, "k": k, "v": v}
+
+
+def _audio_decode(cfg, params, cache, x, pos):
+    B, S = x.shape[:2]
+    pos_vec = jnp.broadcast_to(jnp.asarray(pos), (B,))
+    table = sinusoidal_positions(cache["k"].shape[2], cfg.d_model)
+    x = x + jnp.take(table, pos_vec, axis=0)[:, None].astype(x.dtype)
+
+    def body(h, xs):
+        p, kc, vc, ck, cv = xs
+        a, kc, vc = _gqa_decode(
+            layer_norm(h, p["ln1"]["scale"], p["ln1"]["bias"]),
+            p["self_attn"], cfg, pos, None, _BIG_WINDOW, kc, vc)
+        h = h + a
+        h = h + _cross_attn(layer_norm(h, p["ln2"]["scale"], p["ln2"]["bias"]),
+                            p["cross_attn"], cfg, ck, cv)
+        h = h + gelu_mlp(layer_norm(h, p["ln3"]["scale"], p["ln3"]["bias"]),
+                         **p["mlp"])
+        return h, (kc, vc)
+
+    x, (k, v) = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    return x, {"k": k, "v": v,
+               "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}

@@ -1,0 +1,125 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+  compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory     = HLO_bytes / (chips * HBM_bw)
+  collective = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``; collective
+bytes are parsed out of the post-SPMD optimized HLO text (operand sizes of
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+# TPU v5e, per chip
+HW = {
+    "peak_flops_bf16": 197e12,   # FLOP/s
+    "hbm_bw": 819e9,             # B/s
+    "ici_bw": 50e9,              # B/s per link
+    "hbm_bytes": 16e9,
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  bf16[16,2560]{1,0}   or  f32[]  — shape literal
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+# an HLO instruction line:  %name = <shape-or-tuple> opcode(...operands...)
+_INSTR_RE = re.compile(
+    r"=\s*(\(?[a-z0-9_]+\[[^=]*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum *result* shape bytes of every collective op, by op kind.
+
+    The result shape of -start ops is used (we skip -done which would double
+    count).  This is the per-replica payload as seen by one device — we
+    report per-chip traffic.
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue
+        shape_txt, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(shape_txt)
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes_per_chip: float
+
+    @property
+    def dominant(self) -> str:
+        vals = {"compute": self.compute_s, "memory": self.memory_s,
+                "collective": self.collective_s}
+        return max(vals, key=vals.get)
+
+    def as_dict(self):
+        d = dataclasses.asdict(self)
+        d["dominant"] = self.dominant
+        return d
+
+
+def roofline_terms(*, total_flops: float, total_bytes: float,
+                   collective_bytes_per_chip: float, n_chips: int,
+                   flops_are_global: bool = True) -> RooflineTerms:
+    """cost_analysis totals are for one partition's program (per-chip)."""
+    f = total_flops / n_chips if flops_are_global else total_flops
+    b = total_bytes / n_chips if flops_are_global else total_bytes
+    return RooflineTerms(
+        compute_s=f / HW["peak_flops_bf16"],
+        memory_s=b / HW["hbm_bw"],
+        collective_s=collective_bytes_per_chip / HW["ici_bw"],
+        flops_per_chip=f,
+        bytes_per_chip=b,
+        collective_bytes_per_chip=collective_bytes_per_chip,
+    )
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference) with N = active params."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch  # one token per sequence
+    return 2.0 * n_active * tokens

@@ -1,0 +1,125 @@
+"""Aggregate results/dryrun/*.json into the EXPERIMENTS.md roofline table.
+
+  PYTHONPATH=src python -m repro.roofline.report [--mesh single] [--md]
+
+cost_analysis caveat (XLA CPU backend): while-loop bodies (lax.scan) are
+costed ONCE, not x trip-count.  We therefore report BOTH the raw HLO
+numbers and scan-corrected estimates: flops/bytes multiplied by the known
+static trip counts (layer stacks, attention kv blocks, loss chunks) that
+wrap essentially all compute.  The correction factor per record is the
+product of scan lengths along the dominant path, computed from the config.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Dict, List
+
+from repro.configs import get_config, get_shape
+from repro.roofline.analysis import HW, model_flops
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def scan_correction(arch: str, shape_name: str) -> float:
+    """Static trip-count product along the dominant compute path: the
+    layer-stack scan(s).  Inner attention/loss scans are *nested* in the
+    costed-once body, so the body cost already reflects one (layer x
+    q-block x kv-block) tile — we conservatively correct by the layer
+    count only (a LOWER bound on true FLOPs; see EXPERIMENTS.md)."""
+    cfg = get_config(arch)
+    if cfg.family == "moe" and cfg.moe.first_dense_layers:
+        return cfg.n_layers - cfg.moe.first_dense_layers  # dominant stack
+    if cfg.family == "moe":
+        return cfg.n_layers // 2              # super-blocks of 2 layers
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.attn_interval
+    if cfg.family == "audio":
+        return cfg.n_layers
+    return cfg.n_layers
+
+
+def load(mesh: str) -> List[Dict]:
+    recs = []
+    for f in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        d = json.loads(f.read_text())
+        if d.get("status") == "ok":
+            recs.append(d)
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def build_rows(mesh: str):
+    rows = []
+    for d in load(mesh):
+        arch, shape_name = d["arch"], d["shape"]
+        cfg, shape = get_config(arch), get_shape(shape_name)
+        n = d["n_chips"]
+        corr = scan_correction(arch, shape_name)
+        fl = d["cost_analysis"]["flops"] * corr
+        by = d["cost_analysis"]["bytes_accessed"] * corr
+        coll = d["collectives"]["total"] * corr
+        compute_s = fl / HW["peak_flops_bf16"]
+        memory_s = by / HW["hbm_bw"]
+        coll_s = coll / HW["ici_bw"]
+        dom = max((compute_s, "compute"), (memory_s, "memory"),
+                  (coll_s, "collective"))[1]
+        mf = model_flops(cfg, shape)
+        ratio = mf / (fl * n) if fl else float("nan")
+        temp = d["memory_analysis"].get("temp_size_in_bytes", 0)
+        args = d["memory_analysis"].get("argument_size_in_bytes", 0)
+        rows.append({
+            "arch": arch, "shape": shape_name, "mesh": mesh,
+            "chips": n, "compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": coll_s, "dominant": dom,
+            "model_flops": mf, "hlo_flops_global": fl * n,
+            "useful_ratio": ratio,
+            "temp_gb": temp / 1e9, "args_gb": args / 1e9,
+            "coll_by_kind": {k: v * corr for k, v in
+                             d["collectives"].items()
+                             if k not in ("count", "total")},
+            "scan_corr": corr,
+        })
+    return rows
+
+
+def markdown(rows) -> str:
+    out = ["| arch | shape | chips | compute | memory | collective | "
+           "dominant | useful-FLOP ratio | temp/chip | args/chip |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['chips']} | "
+            f"{fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} | "
+            f"{fmt_s(r['collective_s'])} | **{r['dominant']}** | "
+            f"{r['useful_ratio']:.2f} | {r['temp_gb']:.1f} GB | "
+            f"{r['args_gb']:.2f} GB |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    rows = build_rows(args.mesh)
+    if args.md:
+        print(markdown(rows))
+        return
+    for r in rows:
+        print(f"{r['arch']:28s} {r['shape']:12s} {r['chips']:4d} "
+              f"c={fmt_s(r['compute_s']):>8s} m={fmt_s(r['memory_s']):>8s} "
+              f"x={fmt_s(r['collective_s']):>8s} dom={r['dominant']:10s} "
+              f"useful={r['useful_ratio']:.2f} temp={r['temp_gb']:.1f}GB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""prefill_step / serve_step — the inference entry points.
+
+prefill: full-sequence forward, returns last-position logits + filled cache
+(never materializes (B, S, V)).
+serve_step (decode): ONE new token against a seq_len cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+
+
+def prefill_step(cfg: ModelConfig, params, batch: Dict[str, Any]):
+    hidden, _, cache = transformer.forward(
+        cfg, params, batch, mode="prefill", return_cache=True,
+        return_hidden=True, remat=False)
+    last = hidden[:, -1:]
+    head = (params["embed"].T.astype(jnp.dtype(cfg.dtype))
+            if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", last, head).astype(jnp.float32)
+    return logits, cache
+
+
+def serve_step(cfg: ModelConfig, params, cache, batch: Dict[str, Any]):
+    """batch = {"token": (B,1) int32, "pos": () int32}."""
+    return transformer.decode_step(cfg, params, cache, batch)
+
+
+def make_prefill_step(cfg: ModelConfig):
+    return functools.partial(prefill_step, cfg)
+
+
+def make_serve_step(cfg: ModelConfig):
+    return functools.partial(serve_step, cfg)

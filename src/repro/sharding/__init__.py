@@ -1,0 +1,5 @@
+from repro.sharding.specs import (batch_specs, cache_specs, logical_axes,
+                                  param_specs, shard_if_divisible)
+
+__all__ = ["batch_specs", "cache_specs", "logical_axes", "param_specs",
+           "shard_if_divisible"]

@@ -1,0 +1,63 @@
+"""Ambient sharding context: lets model code drop divisibility-guarded
+``with_sharding_constraint``s without threading a mesh through every call.
+
+Launchers (dryrun / train / serve) wrap tracing in ``sharding_context(mesh)``;
+smoke tests and single-device runs never set it, so ``constrain`` is a no-op
+there.  This is what anchors GSPMD propagation through the scan/transpose
+heavy attention and SSD paths (without it, XLA replicates the batch).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.specs import logical_axes, shard_if_divisible
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("repro_shard_ctx",
+                                                      default=None)
+
+
+@contextlib.contextmanager
+def sharding_context(mesh):
+    token = _CTX.set({"mesh": mesh, "axes": logical_axes(mesh)})
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def current_mesh():
+    ctx = _CTX.get()
+    return None if ctx is None else ctx["mesh"]
+
+
+def _resolve(ctx, name: Optional[str]) -> Optional[Tuple[str, ...]]:
+    if name is None:
+        return None
+    if name in ctx["axes"]:
+        return ctx["axes"][name]
+    mesh = ctx["mesh"]
+    return (name,) if name in mesh.axis_names else None
+
+
+def constrain(x: jax.Array, *dims: Optional[str]) -> jax.Array:
+    """constrain(x, "dp", None, "tp") — logical names dp/fsdp/tp or raw mesh
+    axis names; missing trailing dims are unconstrained; every entry is
+    divisibility-guarded."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh = ctx["mesh"]
+    spec = []
+    for i in range(x.ndim):
+        name = dims[i] if i < len(dims) else None
+        axes = _resolve(ctx, name)
+        spec.append(shard_if_divisible(mesh, x.shape[i], axes)
+                    if axes else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

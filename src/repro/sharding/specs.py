@@ -1,0 +1,193 @@
+"""Logical-axis -> PartitionSpec rules for both production meshes.
+
+The mapping is the TPU realization of DEAL's collaborative partition:
+tokens/batch ("graph rows") shard over ``data`` (P) and features/heads/
+experts ("feature columns") shard over ``model`` (M); on the 2-pod mesh the
+``pod`` axis joins the data-parallel group and the FSDP group.
+
+Every rule is divisibility-guarded: a dimension that does not divide evenly
+over its assigned mesh axes is left unsharded (e.g. whisper's 51865 vocab).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+def logical_axes(mesh) -> Dict[str, Tuple[str, ...]]:
+    """dp / fsdp / tp mesh-axis groups for a production mesh."""
+    names = mesh.axis_names
+    if "pod" in names:
+        return {"dp": ("pod", "data"), "fsdp": ("pod", "data"),
+                "tp": ("model",)}
+    return {"dp": ("data",), "fsdp": ("data",), "tp": ("model",)}
+
+
+def _axis_size(mesh, axes: Tuple[str, ...]) -> int:
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def shard_if_divisible(mesh, dim: int, axes: Optional[Tuple[str, ...]]):
+    """Return the axes (for a PartitionSpec entry) iff dim divides evenly."""
+    if axes is None:
+        return None
+    if dim % _axis_size(mesh, axes) == 0:
+        return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+# ----------------------------------------------------------------------
+# parameters
+# ----------------------------------------------------------------------
+
+_COL_PARALLEL = {  # (in, out) -> (fsdp, tp): contract dim fsdp, out dim tp
+    "wq", "wk", "wv", "w_gate", "w_up", "w_in", "w_xz", "w_bc", "w_dt",
+    "wq_a", "wq_b", "wkv_a", "wkv_b", "a_q", "a_k", "a_v", "router",
+    "projector", "shared_w_gate", "shared_w_up", "lm_head",
+}
+_ROW_PARALLEL = {  # (in, out) -> (tp, fsdp): contract dim tp, out dim fsdp
+    "wo", "w_down", "w_out", "shared_w_down",
+}
+_MOE_EXPERT = {"w_gate", "w_up", "w_down"}  # with a leading E dim
+_LORA_B = {"b_q", "b_k", "b_v"}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+    return ""
+
+
+def _in_moe(path) -> bool:
+    return any(isinstance(e, jax.tree_util.DictKey) and e.key == "moe"
+               for e in path)
+
+
+def param_specs(cfg: ModelConfig, abstract: Any, mesh):
+    """PartitionSpec pytree matching ``abstract_params(cfg)``.
+
+    With REPRO_TUNING=serve_tp the FSDP dim is left unsharded (weights
+    replicated over `data`, sharded over `model` only) — the serving
+    profile for models whose tp-sharded weights fit one chip: decode then
+    pays tiny activation psums instead of per-layer param all-gathers
+    (§Perf H4)."""
+    from repro import tuning
+    ax = logical_axes(mesh)
+    fsdp, tp = ax["fsdp"], ax["tp"]
+    if tuning.on("serve_tp"):
+        fsdp = None
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        nd = len(shape)
+        lead = (None,) * max(nd - 2, 0)
+        if name == "embed":
+            return P(shard_if_divisible(mesh, shape[0], tp),
+                     shard_if_divisible(mesh, shape[1], fsdp))
+        if name in _MOE_EXPERT and _in_moe(path) and nd >= 3:
+            lead = (None,) * (nd - 3)
+            e, d1, d2 = shape[-3:]
+            if name == "w_down":   # (E, F, D)
+                return P(*lead, shard_if_divisible(mesh, e, tp), None,
+                         shard_if_divisible(mesh, d2, fsdp))
+            return P(*lead, shard_if_divisible(mesh, e, tp),
+                     shard_if_divisible(mesh, d1, fsdp), None)
+        if name in _COL_PARALLEL and nd >= 2:
+            return P(*lead, shard_if_divisible(mesh, shape[-2], fsdp),
+                     shard_if_divisible(mesh, shape[-1], tp))
+        if name in _ROW_PARALLEL and nd >= 2:
+            return P(*lead, shard_if_divisible(mesh, shape[-2], tp),
+                     shard_if_divisible(mesh, shape[-1], fsdp))
+        if name in _LORA_B and nd >= 2:
+            return P(*lead, None, shard_if_divisible(mesh, shape[-1], tp))
+        if name == "conv" and nd >= 2:
+            return P(*lead, None, shard_if_divisible(mesh, shape[-1], tp))
+        return P(*((None,) * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, abstract)
+
+
+# ----------------------------------------------------------------------
+# caches & batches
+# ----------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, abstract_cache: Any, mesh,
+                shape: InputShape):
+    """KV/state cache PartitionSpecs.  batch==1 -> shard the sequence."""
+    ax = logical_axes(mesh)
+    dp, tp = ax["dp"], ax["tp"]
+    seq_shard = shape.global_batch == 1
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        shape_ = leaf.shape
+        nd = len(shape_)
+        if name in ("k", "v", "cross_k", "cross_v"):
+            from repro import tuning
+            lead = (None,) * (nd - 4)
+            b, s, k, hd = shape_[-4:]
+            if seq_shard:
+                return P(*lead, None,
+                         shard_if_divisible(mesh, s, ("data",)), None,
+                         shard_if_divisible(mesh, hd, tp))
+            # H4-iter2 (gqa_cache_seq): shard the cache SEQUENCE over
+            # `model` so decode scores stay shard-local (partial softmax);
+            # baseline shards head_dim, which psums (B,H,S) scores/layer.
+            if tuning.on("gqa_cache_seq"):
+                return P(*lead, shard_if_divisible(mesh, b, dp),
+                         shard_if_divisible(mesh, s, tp), None, None)
+            return P(*lead, shard_if_divisible(mesh, b, dp), None, None,
+                     shard_if_divisible(mesh, hd, tp))
+        if name in ("c_kv", "k_rope", "first_c_kv", "first_k_rope"):
+            from repro import tuning
+            lead = (None,) * (nd - 3)
+            b, s, r = shape_[-3:]
+            if seq_shard:
+                return P(*lead, None,
+                         shard_if_divisible(mesh, s, ("data",)),
+                         shard_if_divisible(mesh, r, tp))
+            # H1 (mla_cache_seq): shard the cache SEQUENCE over `model`.
+            # Baseline shards the latent r over tp, which makes absorbed-MLA
+            # scores psum a (B,H,S) tensor per layer; sequence sharding
+            # keeps scores local and only psums the (B,H,r) attention
+            # output + softmax partials (context parallelism over tp).
+            if tuning.on("mla_cache_seq"):
+                return P(*lead, shard_if_divisible(mesh, b, dp),
+                         shard_if_divisible(mesh, s, tp), None)
+            return P(*lead, shard_if_divisible(mesh, b, dp), None,
+                     shard_if_divisible(mesh, r, tp))
+        if name == "conv":          # SSM conv window (..., B, W, C)
+            lead = (None,) * (nd - 3)
+            b, w, c = shape_[-3:]
+            return P(*lead, shard_if_divisible(mesh, b, dp), None,
+                     shard_if_divisible(mesh, c, tp))
+        if name == "state":         # SSM state (..., B, H, N, Pdim)
+            lead = (None,) * (nd - 4)
+            b, h, n, pd = shape_[-4:]
+            return P(*lead, shard_if_divisible(mesh, b, dp),
+                     shard_if_divisible(mesh, h, tp), None, None)
+        return P(*((None,) * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_cache)
+
+
+def batch_specs(cfg: ModelConfig, batch_abstract: Any, mesh,
+                shape: InputShape):
+    ax = logical_axes(mesh)
+    dp = ax["dp"]
+
+    def rule(path, leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        b = leaf.shape[0]
+        return P(shard_if_divisible(mesh, b, dp), *((None,) * (nd - 1)))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_abstract)

@@ -1,0 +1,69 @@
+"""Checkpointing: flatten a pytree to a .npz with path-encoded keys.
+
+Sharding-aware: arrays are fetched with jax.device_get (gathering shards),
+and restore re-places them under the sharding of a reference tree when one
+is given.  Deliberately dependency-free (no orbax offline).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+_SEP = "::"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.name == "bfloat16":   # npz has no bf16: store f32
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(path, params, opt_state=None, step: int = 0,
+                    metadata: Optional[dict] = None):
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    blobs = {f"params{_SEP}{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        blobs.update({f"opt{_SEP}{k}": v
+                      for k, v in _flatten(opt_state).items()})
+    np.savez(path, __step__=np.int64(step),
+             __meta__=json.dumps(metadata or {}), **blobs)
+
+
+def restore_checkpoint(path, params_like, opt_like=None, sharding=None):
+    """Restore into the structure of `params_like` (and `opt_like`)."""
+    z = np.load(path, allow_pickle=False)
+    step = int(z["__step__"])
+
+    def fill(prefix, like):
+        leaves_p, treedef = jax.tree_util.tree_flatten_with_path(like)
+        out = []
+        import jax.numpy as jnp
+        for path, leaf in leaves_p:
+            key = prefix + _SEP + _SEP.join(
+                str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            arr = z[key]
+            if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
+                arr = jnp.asarray(arr).astype(leaf.dtype)  # handles bf16
+            out.append(arr)
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(like), out)
+
+    params = fill("params", params_like)
+    if sharding is not None:
+        params = jax.device_put(params, sharding)
+    if opt_like is None:
+        return params, step
+    opt = fill("opt", opt_like)
+    return params, opt, step

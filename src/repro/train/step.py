@@ -1,0 +1,45 @@
+"""train_step: fwd (chunked CE) + bwd + AdamW, one jittable function."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+from repro.train.loss import chunked_softmax_xent
+from repro.train.optimizer import AdamWConfig, OptState, adamw_update
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def _head(cfg, params):
+    return (params["embed"].T.astype(jnp.dtype(cfg.dtype))
+            if cfg.tie_embeddings else params["lm_head"])
+
+
+def loss_fn(cfg: ModelConfig, params, batch: Dict[str, Any]):
+    hidden, aux = transformer.forward(cfg, params, batch, mode="train",
+                                      return_hidden=True)
+    labels = batch["labels"]
+    # vlm: hidden includes image positions; score text positions only
+    if cfg.family == "vlm":
+        hidden = hidden[:, cfg.n_frontend_tokens:]
+    ce = chunked_softmax_xent(hidden, _head(cfg, params), labels)
+    return ce + AUX_LOSS_WEIGHT * aux, (ce, aux)
+
+
+def train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, params,
+               opt_state: OptState, batch):
+    (total, (ce, aux)), grads = jax.value_and_grad(
+        functools.partial(loss_fn, cfg), has_aux=True)(params, batch)
+    params, opt_state, metrics = adamw_update(params, grads, opt_state,
+                                              opt_cfg)
+    metrics.update({"loss": ce, "aux_loss": aux, "total_loss": total})
+    return params, opt_state, metrics
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig):
+    return functools.partial(train_step, cfg, opt_cfg)

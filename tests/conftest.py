@@ -1,0 +1,27 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see 1 device; the
+multi-device distributed checks run in subprocesses (tests/helpers)."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def small_graph():
+    from repro.core.graph import csr_from_edges, rmat_edges
+    src, dst = rmat_edges(256, 2048, seed=7)
+    return csr_from_edges(src, dst, 256)
+
+
+@pytest.fixture(scope="session")
+def layer_graphs(small_graph):
+    from repro.core.sampler import sample_layer_graphs
+    return sample_layer_graphs(small_graph, fanout=8, n_layers=3, seed=3)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

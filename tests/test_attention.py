@@ -1,0 +1,110 @@
+"""Attention correctness: chunked flash vs exact softmax, windows, decode
+with per-slot lengths, MLA absorbed decode vs prefill."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.attention import (decode_attention, flash_attention_jnp,
+                                    mla_decode, mla_new_cache_entries,
+                                    mla_prefill, simple_attention)
+
+
+def _qkv(rng, B, Sq, Skv, H, K, hd, dtype=np.float32):
+    q = rng.standard_normal((B, Sq, H, hd)).astype(dtype)
+    k = rng.standard_normal((B, Skv, K, hd)).astype(dtype)
+    v = rng.standard_normal((B, Skv, K, hd)).astype(dtype)
+    return jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)
+
+
+@pytest.mark.parametrize("Sq,Skv,H,K,hd", [
+    (64, 64, 4, 4, 32),    # MHA
+    (64, 64, 6, 2, 16),    # GQA
+    (48, 80, 4, 2, 32),    # ragged (pad path)
+])
+def test_flash_matches_simple_causal(Sq, Skv, H, K, hd, rng):
+    q, k, v = _qkv(rng, 2, Sq, Skv, H, K, hd)
+    got = flash_attention_jnp(q, k, v, causal=True, q_block=16, kv_block=32)
+    want = simple_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("window", [1, 7, 16, 1 << 30])
+def test_flash_window(window, rng):
+    q, k, v = _qkv(rng, 1, 64, 64, 2, 2, 16)
+    got = flash_attention_jnp(q, k, v, causal=True, window=window,
+                              q_block=16, kv_block=16)
+    want = simple_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_noncausal(rng):
+    q, k, v = _qkv(rng, 2, 32, 48, 4, 4, 16)
+    got = flash_attention_jnp(q, k, v, causal=False, q_block=16,
+                              kv_block=16)
+    want = simple_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_matches_prefill_last_row(rng):
+    B, S, H, K, hd = 2, 24, 4, 2, 16
+    q, k, v = _qkv(rng, B, S, S, H, K, hd)
+    full = simple_attention(q, k, v, causal=True)
+    out = decode_attention(q[:, -1:], k, v, cache_len=S)
+    np.testing.assert_allclose(np.asarray(out)[:, 0],
+                               np.asarray(full)[:, -1], atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_decode_per_slot_lengths(rng):
+    """(B,) cache_len: each row must only see its own prefix."""
+    B, S, H, K, hd = 3, 16, 2, 2, 8
+    q, k, v = _qkv(rng, B, 1, S, H, K, hd)
+    lens = jnp.asarray([4, 9, 16])
+    got = decode_attention(q, k, v, cache_len=lens)
+    for b in range(B):
+        L = int(lens[b])
+        want = decode_attention(q[b:b + 1], k[b:b + 1, :],
+                                v[b:b + 1, :], cache_len=L)
+        np.testing.assert_allclose(np.asarray(got)[b], np.asarray(want)[0],
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_mla_absorbed_decode_matches_prefill(rng):
+    cfg = get_config("deepseek-v2-236b").reduced()
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    from repro.models.transformer import _init_mla
+    p = _init_mla(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S, D = 2, 12, cfg.d_model
+    x = jnp.asarray(rng.standard_normal((B, S, D)).astype(np.float32) * 0.3)
+    out_prefill, c_kv, k_rope = mla_prefill(x, p, cfg, jnp.arange(S))
+    # absorbed decode at the last position using the prefill caches
+    pos = jnp.int32(S - 1)
+    out_dec = mla_decode(x[:, -1:], p, cfg, c_kv, k_rope, S, pos)
+    np.testing.assert_allclose(np.asarray(out_dec)[:, 0],
+                               np.asarray(out_prefill)[:, -1],
+                               atol=3e-4, rtol=3e-4)
+
+
+def test_mla_new_cache_entries_match_prefill(rng):
+    cfg = get_config("deepseek-v2-236b").reduced()
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    from repro.models.transformer import _init_mla
+    p = _init_mla(jax.random.PRNGKey(1), cfg, jnp.float32)
+    B, S = 2, 8
+    x = jnp.asarray(rng.standard_normal((B, S, cfg.d_model)).astype(
+        np.float32) * 0.3)
+    _, c_kv, k_rope = mla_prefill(x, p, cfg, jnp.arange(S))
+    ck1, kr1 = mla_new_cache_entries(x[:, -1:], p, cfg, jnp.int32(S - 1))
+    np.testing.assert_allclose(np.asarray(ck1)[:, 0],
+                               np.asarray(c_kv)[:, -1], atol=1e-5,
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(kr1)[:, 0],
+                               np.asarray(k_rope)[:, -1], atol=1e-5,
+                               rtol=1e-5)

@@ -1,0 +1,78 @@
+"""Config registry: exact assigned numbers, divisibility for the production
+mesh, parameter budgets."""
+import pytest
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, applicable_shapes, get_config
+
+
+def test_registry_complete():
+    assert len(ARCH_IDS) == 10
+    families = {get_config(a).family for a in ARCH_IDS}
+    assert families == {"dense", "moe", "ssm", "hybrid", "vlm", "audio"}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_assigned_numbers(arch):
+    cfg = get_config(arch)
+    expected = {
+        "gemma3-4b": (34, 2560, 8, 4, 10240, 262144),
+        "smollm-360m": (32, 960, 15, 5, 2560, 49152),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "deepseek-v2-236b": (60, 5120, 128, 128, 12288, 102400),
+        "whisper-base": (6, 512, 8, 8, 2048, 51865),
+        "granite-8b": (36, 4096, 32, 8, 14336, 49152),
+        "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+        "mamba2-1.3b": (48, 2048, 1, 1, 0, 50280),
+        "qwen2.5-14b": (48, 5120, 40, 8, 13824, 152064),
+    }[arch]
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.d_ff, cfg.vocab_size) == expected
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_mesh_divisibility(arch):
+    """d_model must shard over fsdp (32 on the 2-pod mesh); the tp-sharded
+    output dims must divide 16."""
+    cfg = get_config(arch)
+    assert cfg.d_model % 32 == 0
+    hd = cfg.resolved_head_dim
+    assert (cfg.n_heads * hd) % 16 == 0
+    assert (cfg.n_kv_heads * hd) % 16 == 0
+    if cfg.d_ff:
+        assert cfg.d_ff % 16 == 0
+    if cfg.moe:
+        assert cfg.moe.n_experts % 16 == 0
+    if cfg.ssm:
+        assert cfg.ssm.d_inner % 16 == 0
+
+
+def test_param_budgets():
+    assert 3e11 < get_config("llama4-maverick-400b-a17b").param_count() < 5e11
+    assert 1.4e10 < get_config("llama4-maverick-400b-a17b").active_param_count() < 2.2e10
+    assert 1.8e11 < get_config("deepseek-v2-236b").param_count() < 2.9e11
+    assert 3e9 < get_config("gemma3-4b").param_count() < 6e9
+    assert 2.5e8 < get_config("smollm-360m").param_count() < 5e8
+    assert 1e9 < get_config("mamba2-1.3b").param_count() < 1.8e9
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_constraints(arch):
+    r = get_config(arch).reduced()
+    assert r.n_layers <= 2 and r.d_model <= 512
+    if r.moe:
+        assert r.moe.n_experts <= 4
+
+
+def test_long500k_applicability():
+    runs_long = {a for a in ARCH_IDS
+                 if any(s.name == "long_500k"
+                        for s in applicable_shapes(get_config(a)))}
+    assert runs_long == {"gemma3-4b", "zamba2-7b", "mamba2-1.3b"}
+
+
+def test_shapes():
+    names = [s.name for s in INPUT_SHAPES]
+    assert names == ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    kinds = {s.name: s.kind for s in INPUT_SHAPES}
+    assert kinds["decode_32k"] == "decode" and kinds["long_500k"] == "decode"

@@ -1,0 +1,45 @@
+"""CSR construction: single-machine vs distributed builder, RMAT."""
+import numpy as np
+import pytest
+
+from repro.core.graph import (csr_from_edges, csr_from_edges_distributed,
+                              make_dataset, rmat_edges)
+
+
+def test_csr_correct():
+    src = np.array([1, 2, 0, 3, 3, 1])
+    dst = np.array([0, 0, 1, 1, 2, 3])
+    g = csr_from_edges(src, dst, 4)
+    assert sorted(g.neighbors(0).tolist()) == [1, 2]
+    assert sorted(g.neighbors(1).tolist()) == [0, 3]
+    assert g.neighbors(2).tolist() == [3]
+    assert g.neighbors(3).tolist() == [1]
+    assert g.n_edges == 6
+
+
+@pytest.mark.parametrize("workers", [1, 2, 4])
+def test_distributed_matches_single(workers):
+    src, dst = rmat_edges(512, 4096, seed=3)
+    g1 = csr_from_edges(src, dst, 512)
+    g2, stats = csr_from_edges_distributed(src, dst, 512,
+                                           n_workers=workers)
+    assert np.array_equal(g1.indptr, g2.indptr)
+    for v in range(512):   # per-row multisets must agree
+        assert sorted(g1.neighbors(v).tolist()) == \
+            sorted(g2.neighbors(v).tolist())
+    if workers > 1:
+        assert stats["exchanged_bytes"] > 0
+
+
+def test_rmat_shape_and_skew():
+    src, dst = rmat_edges(1024, 20480, seed=0)
+    assert src.shape == (20480,) and dst.max() < 1024
+    deg = np.bincount(dst, minlength=1024)
+    # power-law-ish: the hottest node way above the mean
+    assert deg.max() > 5 * deg.mean()
+
+
+def test_datasets():
+    for name in ("ogbn-products", "social-spammer", "ogbn-papers100M"):
+        src, dst, n = make_dataset(name, scale=0.25)
+        assert n > 0 and src.shape == dst.shape

@@ -1,0 +1,97 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import csr_from_edges, csr_from_edges_distributed
+from repro.core.partition import build_plan
+from repro.core.sampler import sample_layer_graphs
+
+edge_lists = st.integers(2, 6).flatmap(
+    lambda logn: st.integers(1, 200).flatmap(
+        lambda e: st.tuples(
+            st.just(2 ** logn),
+            st.lists(st.tuples(st.integers(0, 2 ** logn - 1),
+                               st.integers(0, 2 ** logn - 1)),
+                     min_size=e, max_size=e))))
+
+
+@given(edge_lists)
+@settings(max_examples=30, deadline=None)
+def test_csr_roundtrip(data):
+    """edges -> CSR -> edges is a multiset identity."""
+    n, edges = data
+    src = np.array([e[0] for e in edges])
+    dst = np.array([e[1] for e in edges])
+    g = csr_from_edges(src, dst, n)
+    back = sorted((int(g.indices[i]), int(v))
+                  for v in range(n)
+                  for i in range(g.indptr[v], g.indptr[v + 1]))
+    assert back == sorted(map(tuple, map(lambda e: (e[0], e[1]), edges)))
+
+
+@given(edge_lists, st.integers(1, 3))
+@settings(max_examples=15, deadline=None)
+def test_distributed_construction_equiv(data, workers):
+    n, edges = data
+    src = np.array([e[0] for e in edges])
+    dst = np.array([e[1] for e in edges])
+    g1 = csr_from_edges(src, dst, n)
+    g2, _ = csr_from_edges_distributed(src, dst, n, n_workers=workers)
+    assert np.array_equal(g1.indptr, g2.indptr)
+    for v in range(n):
+        assert sorted(g1.neighbors(v)) == sorted(g2.neighbors(v))
+
+
+@given(edge_lists, st.integers(1, 2), st.sampled_from([1, 2, 4]),
+       st.integers(0, 10))
+@settings(max_examples=15, deadline=None)
+def test_partition_covers_all_edges(data, n_layers, P, seed):
+    """Every masked layer-graph edge appears in exactly one plan group."""
+    n, edges = data
+    if n % P:
+        return
+    src = np.array([e[0] for e in edges])
+    dst = np.array([e[1] for e in edges])
+    g = csr_from_edges(src, dst, n)
+    lgs = sample_layer_graphs(g, fanout=3, n_layers=n_layers, seed=seed)
+    plan = build_plan(lgs, P, 1)
+    for li, lp in enumerate(plan.layers):
+        total = sum(int(lp.edge_mask[p, k].sum())
+                    for p in range(P) for k in range(P))
+        assert total == int(lgs[li].mask.sum())
+
+
+@given(st.integers(1, 64), st.integers(1, 8), st.integers(0, 5))
+@settings(max_examples=20, deadline=None)
+def test_chunked_ce_matches_full(B_S, chunk, seed):
+    """Chunked CE == full-logits CE for arbitrary S/chunk combos."""
+    import jax
+    import jax.numpy as jnp
+    from repro.train.loss import chunked_softmax_xent
+    rng = np.random.default_rng(seed)
+    B, S, D, V = 2, B_S, 8, 11
+    hid = jnp.asarray(rng.standard_normal((B, S, D)).astype(np.float32))
+    head = jnp.asarray(rng.standard_normal((D, V)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, V, (B, S)), jnp.int32)
+    got = chunked_softmax_xent(hid, head, labels, chunk=chunk)
+    logits = np.asarray(hid) @ np.asarray(head)
+    logz = np.log(np.exp(logits - logits.max(-1, keepdims=True)).sum(-1)) \
+        + logits.max(-1)
+    gold = np.take_along_axis(logits, np.asarray(labels)[..., None],
+                              -1)[..., 0]
+    want = (logz - gold).mean()
+    np.testing.assert_allclose(float(got), want, atol=1e-4, rtol=1e-4)
+
+
+@given(st.integers(2, 32), st.integers(1, 6), st.integers(0, 3))
+@settings(max_examples=20, deadline=None)
+def test_mean_weights_rowsum(n, f, seed):
+    """mean_weights rows sum to 1 where any neighbor exists, else 0."""
+    from repro.core.gnn_models import mean_weights
+    rng = np.random.default_rng(seed)
+    mask = rng.random((n, f)) > 0.5
+    w = mean_weights(mask)
+    sums = w.sum(1)
+    has = mask.any(1)
+    np.testing.assert_allclose(sums[has], 1.0, atol=1e-6)
+    np.testing.assert_allclose(sums[~has], 0.0, atol=1e-6)

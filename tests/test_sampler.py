@@ -1,0 +1,46 @@
+"""Layer-wise sampler: all sampled neighbors are true in-neighbors."""
+import numpy as np
+
+from repro.core.sampler import (frontier_sizes, sample_ego_networks,
+                                sample_layer_graphs)
+
+
+def test_sampled_neighbors_are_real(small_graph, layer_graphs):
+    g = small_graph
+    for lg in layer_graphs:
+        for v in range(0, g.n_nodes, 17):
+            true = set(g.neighbors(v).tolist())
+            got = lg.nbr[v][lg.mask[v]]
+            if not true:
+                assert not lg.mask[v].any()
+            else:
+                assert set(got.tolist()) <= true
+
+
+def test_small_rows_take_every_neighbor(small_graph, layer_graphs):
+    g = small_graph
+    deg = g.degrees()
+    lg = layer_graphs[0]
+    for v in np.where((deg > 0) & (deg <= lg.fanout))[0][:50]:
+        got = sorted(set(lg.nbr[v][lg.mask[v]].tolist()))
+        assert got == sorted(set(g.neighbors(v).tolist()))
+
+
+def test_layers_are_independent(small_graph):
+    lgs = sample_layer_graphs(small_graph, fanout=4, n_layers=2, seed=0)
+    assert not np.array_equal(lgs[0].nbr, lgs[1].nbr)
+
+
+def test_deterministic(small_graph):
+    a = sample_layer_graphs(small_graph, fanout=4, n_layers=2, seed=5)
+    b = sample_layer_graphs(small_graph, fanout=4, n_layers=2, seed=5)
+    assert np.array_equal(a[0].nbr, b[0].nbr)
+    assert np.array_equal(a[1].mask, b[1].mask)
+
+
+def test_ego_baseline_and_frontiers(small_graph, layer_graphs):
+    targets = np.arange(8)
+    egos = sample_ego_networks(small_graph, targets, fanout=4, n_layers=2)
+    assert len(egos) == 8 and all(len(h) == 3 for h in egos)
+    fr = frontier_sizes(layer_graphs[:2], targets)
+    assert fr[0].size <= fr[1].size <= fr[2].size

@@ -1,0 +1,65 @@
+"""Training loop: loss decreases; checkpoint roundtrip."""
+import numpy as np
+import pytest
+
+from repro.launch.train import run as train_run
+from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+
+
+@pytest.mark.slow
+def test_loss_decreases(tmp_path):
+    params, losses = train_run("smollm-360m", steps=60, batch=4, seq=64,
+                               reduced=True, lr=3e-3, log_every=20)
+    first = np.mean(losses[:5])
+    last = np.mean(losses[-5:])
+    assert last < first - 0.15, (first, last)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.train.optimizer import AdamWConfig, init_opt_state
+
+    cfg = get_config("smollm-360m").reduced()
+    p = init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(p, AdamWConfig())
+    path = tmp_path / "ckpt.npz"
+    save_checkpoint(path, p, opt, step=7, metadata={"arch": cfg.arch_id})
+    p2, opt2, step = restore_checkpoint(path, p, opt)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    for a, b in zip(jax.tree.leaves(opt), jax.tree.leaves(opt2)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_data_pipeline_structured():
+    from repro.train.data import DataConfig, synthetic_batches
+    it = synthetic_batches(DataConfig(vocab_size=64, seq_len=32,
+                                      batch_size=4, seed=0))
+    b = next(it)
+    assert b["tokens"].shape == (4, 32)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+    # the Markov structure must be predictable: successor entropy < uniform
+    b2 = next(it)
+    assert not np.array_equal(b["tokens"], b2["tokens"])
+
+
+def test_adamw_converges_quadratic():
+    import jax
+    import jax.numpy as jnp
+    from repro.train.optimizer import (AdamWConfig, adamw_update,
+                                       init_opt_state)
+    cfg = AdamWConfig(lr=0.1, warmup_steps=1, total_steps=200,
+                      weight_decay=0.0, grad_clip=100.0)
+    params = {"x": jnp.ones((4, 4)) * 5.0}
+    opt = init_opt_state(params, cfg)
+    loss = lambda p: jnp.sum(p["x"] ** 2)
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw_update(params, g, opt, cfg)
+    assert float(loss(params)) < 0.3
