@@ -25,6 +25,7 @@ MODULES = {
     "fig20": "benchmarks.bench_graph_construction",
     "fig21": "benchmarks.bench_feature_prep",
     "fig3": "benchmarks.bench_breakdown",
+    "incremental": "benchmarks.bench_incremental",
 }
 
 

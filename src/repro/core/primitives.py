@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.partition import LayerPlan
+from repro.sharding.compat import shard_map
 
 
 # ----------------------------------------------------------------------
@@ -78,7 +79,7 @@ def make_gemm(mesh, variant: str = "deal"):
     else:
         fn = (_gemm_deal_local if variant == "deal"
               else _gemm_cagnet_local)
-    return jax.jit(jax.shard_map(
+    return jax.jit(shard_map(
         fn, mesh=mesh, in_specs=(P("data", "model"), P(None, None)),
         out_specs=P("data", "model")))
 
@@ -175,7 +176,7 @@ def make_spmm(mesh, lp: LayerPlan, variant: str = "deal",
     if variant == "allgather":
         def fn(H, w, nbr, mask):
             return _spmm_allgather_local(H, w, nbr[0], mask[0], P_=P_)
-        return jax.jit(jax.shard_map(
+        return jax.jit(shard_map(
             fn, mesh=mesh,
             in_specs=(P("data", "model"), P("data", None),
                       P("data", None, None), P("data", None, None)),
@@ -186,7 +187,7 @@ def make_spmm(mesh, lp: LayerPlan, variant: str = "deal",
             return _spmm_graph_exchange_local(
                 H, w, mirror_src[0], edge_dst[0], edge_slot[0],
                 edge_mask[0], P_=P_)
-        return jax.jit(jax.shard_map(
+        return jax.jit(shard_map(
             fn, mesh=mesh,
             in_specs=(P("data", "model"), P("data", None)) +
             (plan_spec,) * 4,
@@ -196,7 +197,7 @@ def make_spmm(mesh, lp: LayerPlan, variant: str = "deal",
         return _spmm_deal_local(
             H, w, send_local[0], edge_dst[0], edge_slot[0], edge_pos[0],
             edge_mask[0], P_=P_, grouped=grouped)
-    return jax.jit(jax.shard_map(
+    return jax.jit(shard_map(
         fn, mesh=mesh,
         in_specs=(P("data", "model"), P("data", None)) + (plan_spec,) * 5,
         out_specs=P("data", "model")))
@@ -263,7 +264,7 @@ def make_sddmm(mesh, lp: LayerPlan, variant: str = "deal"):
                      edge_pos[0], edge_mask[0], P_=P_, fanout=F)
     # approach (i) duplicates the computation, so its output is replicated
     # over `model` by construction — not statically inferable (check_vma).
-    return jax.jit(jax.shard_map(
+    return jax.jit(shard_map(
         fn, mesh=mesh,
         in_specs=(P("data", "model"), P("data", "model")) + (plan_spec,) * 5,
         out_specs=P("data", None), check_vma=(variant == "deal")))

@@ -33,6 +33,30 @@ class LayerGraph:
         return self.nbr.shape[0]
 
 
+def draw_fixed_fanout(deg: np.ndarray, starts: np.ndarray,
+                      indices: np.ndarray, n_edges: int, fanout: int,
+                      rng: np.random.Generator
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """One fixed-fanout draw for the rows described by (deg, starts):
+    uniform with replacement where deg > fanout, each neighbor once
+    otherwise (see DESIGN.md §8).  Shared by the full sampler and the
+    online row-resampler (gnnserve.delta), whose bitwise-equivalence
+    guarantee depends on the two staying identical."""
+    has = deg > 0
+    draw = rng.integers(0, np.maximum(deg, 1)[:, None],
+                        size=(deg.size, fanout))
+    take_all = deg[:, None] <= fanout      # small rows: take each nbr once
+    seqidx = np.arange(fanout)[None, :]
+    draw = np.where(take_all,
+                    np.minimum(seqidx, np.maximum(deg - 1, 0)[:, None]),
+                    draw)
+    idx = starts[:, None] + draw
+    nbr = indices[np.minimum(idx, max(n_edges - 1, 0))].astype(np.int32)
+    mask = has[:, None] & ((seqidx < deg[:, None])
+                           | (deg[:, None] > fanout))
+    return nbr, mask
+
+
 def sample_layer_graphs(g: Graph, fanout: int, n_layers: int,
                         seed: int = 0) -> List[LayerGraph]:
     """Sample k 1-hop layer graphs for all nodes, sharing the per-node
@@ -40,18 +64,10 @@ def sample_layer_graphs(g: Graph, fanout: int, n_layers: int,
     rng = np.random.default_rng(seed)
     deg = g.degrees()                      # the shared sampling structure:
     starts = g.indptr[:-1]                 # built ONCE, reused k times
-    has = deg > 0
     out = []
     for _ in range(n_layers):
-        # uniform with replacement where deg > fanout (see DESIGN.md §8)
-        draw = rng.integers(0, np.maximum(deg, 1)[:, None],
-                            size=(g.n_nodes, fanout))
-        take_all = deg[:, None] <= fanout  # small rows: take each nbr once
-        seqidx = np.arange(fanout)[None, :]
-        draw = np.where(take_all, np.minimum(seqidx, np.maximum(deg - 1, 0)[:, None]), draw)
-        idx = starts[:, None] + draw
-        nbr = g.indices[np.minimum(idx, max(g.n_edges - 1, 0))].astype(np.int32)
-        mask = has[:, None] & ((seqidx < deg[:, None]) | (deg[:, None] > fanout))
+        nbr, mask = draw_fixed_fanout(deg, starts, g.indices, g.n_edges,
+                                      fanout, rng)
         out.append(LayerGraph(nbr=nbr, mask=mask, fanout=fanout))
     return out
 

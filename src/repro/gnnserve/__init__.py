@@ -1,0 +1,54 @@
+"""gnnserve — online embedding serving on top of DEAL's layerwise engine.
+
+Architecture overview
+=====================
+
+The offline pipeline (graph -> layer-wise sampling -> partition ->
+``DistributedLayerwise``) produces embeddings for ALL nodes.  gnnserve
+turns that batch artifact into an online service that stays fresh as the
+graph mutates, without re-running full epochs:
+
+  ``store``      Versioned, partition-sharded embedding store holding
+                 EVERY level of the layerwise computation (features,
+                 each layer's input, final embedding).  Double-buffered:
+                 writers stage copy-on-write shards, ``commit`` swaps
+                 them in atomically (the epoch flip readers never see).
+
+  ``mutations``  Edge/node mutation log + CSR delta overlay over
+                 ``core.graph.Graph``.  ``apply_edge_mutations`` splices
+                 only the affected CSR rows — O(changed rows), not O(E).
+
+  ``delta``      Incremental re-inference.  Edge churn deterministically
+                 re-samples the affected layer-graph rows; the k-hop
+                 forward-affected frontier is computed in closed form
+                 from reversed fanout matrices (the forward twin of
+                 ``core.sharing``'s backward dependency walk), and ONLY
+                 those rows re-run through the existing primitives —
+                 bitwise-identical to a from-scratch epoch.
+
+  ``engine``     Continuous-batching lookup engine (the fixed-slot
+                 pattern of ``serve.engine``): B slots, one fused
+                 sharded gather per step, and a staleness bound on
+                 pending mutations that triggers delta refresh inline.
+
+Dataflow:  queries ->  engine.step -> store.lookup (front buffer)
+           mutations -> MutationLog -> [staleness bound trips]
+                     -> apply_edge_mutations -> resample_rows
+                     -> forward_frontier -> row-subset re-inference
+                     -> store.commit (buffer swap, version += 1)
+
+Entry points: ``launch/serve_embeddings.py`` (CLI service loop),
+``examples/embedding_service.py`` (demo), and
+``benchmarks/bench_incremental.py`` (delta vs full-recompute study).
+"""
+from repro.gnnserve.delta import (DeltaReinference, build_reverse_index,
+                                  forward_frontier, resample_rows)
+from repro.gnnserve.engine import EmbeddingServeEngine, Query
+from repro.gnnserve.mutations import (MutationBatch, MutationLog,
+                                      apply_edge_mutations)
+from repro.gnnserve.store import EmbeddingStore, store_from_inference
+
+__all__ = ["DeltaReinference", "build_reverse_index", "forward_frontier",
+           "resample_rows", "EmbeddingServeEngine", "Query",
+           "MutationBatch", "MutationLog", "apply_edge_mutations",
+           "EmbeddingStore", "store_from_inference"]

@@ -1,0 +1,289 @@
+"""Incremental delta re-inference over the layerwise engine's output.
+
+A mutation batch dirties two kinds of state: level-0 rows (feature
+updates) and sampled layer-graph rows (edge churn re-samples the
+destinations' fixed-fanout rows, deterministically, from the spliced
+CSR).  Because DEAL's layer graphs are static between refreshes, the
+forward-affected set is computable in closed form BEFORE any compute:
+
+    dirty_0   = feature-updated nodes
+    dirty_l+1 = resampled_rows  ∪  dirty_l  ∪  consumers_l(dirty_l)
+
+where ``consumers_l`` is the REVERSE of layer l's fanout matrix (who
+sampled me?) — the same frontier machinery as ``core.sharing``'s
+backward dependency walk, run forward.  Re-inference then re-runs ONLY
+those rows through the existing reference primitives, remapping each
+layer's neighbor ids onto the gathered row set exactly like the
+ego-batched baseline does — so a delta-refreshed row is BITWISE equal to
+a from-scratch epoch (same per-row reductions, same order).
+
+Masked fanout slots are remapped to position 0, never out-of-range:
+jnp's gather fills OOB with NaN and NaN*0 poisons the aggregation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core import primitives as prim
+from repro.core.gnn_models import masked_softmax, mean_weights
+from repro.core.graph import Graph
+from repro.core.sampler import LayerGraph, draw_fixed_fanout
+from repro.gnnserve.store import EmbeddingStore
+
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------------
+# reverse fanout index: node u -> rows that sample u
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ReverseIndex:
+    indptr: np.ndarray     # (N+1,)
+    rows: np.ndarray       # (#masked edges,) consumer row ids, grouped by src
+
+    def consumers(self, ids: np.ndarray) -> np.ndarray:
+        ids = np.asarray(ids, np.int64)
+        if ids.size == 0:
+            return np.empty(0, np.int64)
+        # vectorized multi-span gather (this runs per layer per refresh)
+        starts = self.indptr[ids]
+        counts = self.indptr[ids + 1] - starts
+        total = int(counts.sum())
+        if total == 0:
+            return np.empty(0, np.int64)
+        offsets = np.repeat(starts - np.concatenate(
+            [[0], np.cumsum(counts)[:-1]]), counts)
+        return np.unique(self.rows[np.arange(total) + offsets])
+
+
+def build_reverse_index(lg: LayerGraph) -> ReverseIndex:
+    dst_rows, _ = np.nonzero(lg.mask)
+    src = lg.nbr[lg.mask]
+    order = np.argsort(src, kind="stable")
+    counts = np.bincount(src, minlength=lg.n_nodes)
+    indptr = np.zeros(lg.n_nodes + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return ReverseIndex(indptr=indptr, rows=dst_rows[order].astype(np.int64))
+
+
+def resample_rows(g: Graph, layer_graphs: Sequence[LayerGraph],
+                  rows: np.ndarray, seed: int) -> None:
+    """Deterministically re-draw the given rows of every layer graph from
+    the (mutated) CSR, in place — mirrors ``sampler.sample_layer_graphs``
+    restricted to a row subset."""
+    rows = np.asarray(rows, np.int64)
+    if rows.size == 0:
+        return
+    rng = np.random.default_rng(seed)
+    deg = np.diff(g.indptr)[rows]
+    starts = g.indptr[:-1][rows]
+    for lg in layer_graphs:
+        nbr, mask = draw_fixed_fanout(deg, starts, g.indices, g.n_edges,
+                                      lg.fanout, rng)
+        lg.nbr[rows] = nbr
+        lg.mask[rows] = mask
+
+
+def forward_frontier(rev: Sequence[ReverseIndex], feat_dirty: np.ndarray,
+                     resampled: np.ndarray, n_layers: int
+                     ) -> List[np.ndarray]:
+    """frontier[l] = rows whose level-(l+1) value must be recomputed."""
+    feat_dirty = np.asarray(feat_dirty, np.int64)
+    resampled = np.asarray(resampled, np.int64)
+    out, dirty = [], feat_dirty
+    for l in range(n_layers):
+        dirty = np.unique(np.concatenate(
+            [resampled, dirty, rev[l].consumers(dirty)]))
+        out.append(dirty)
+    return out
+
+
+# ----------------------------------------------------------------------
+# delta re-inference
+# ----------------------------------------------------------------------
+
+def _pow2(n: int, floor: int = 256) -> int:
+    """Pad bucket: next power of two, floored so tiny frontiers share one
+    compiled shape instead of minting many."""
+    return max(floor, 1 << max(0, int(n - 1).bit_length()))
+
+
+def _remap(nbr_rows: np.ndarray, mask_rows: np.ndarray, universe: np.ndarray):
+    """Map global neighbor ids onto positions in `universe`; masked slots
+    pin to position 0 (see module docstring)."""
+    pos = np.searchsorted(universe, nbr_rows)
+    pos = np.where(mask_rows, pos, 0)
+    return np.clip(pos, 0, max(universe.size - 1, 0)).astype(np.int32)
+
+
+class DeltaReinference:
+    """Row-subset re-inference bound to one model + its layer graphs.
+
+    ``layer_graphs`` are held by reference and mutated in place by
+    ``resample_rows``; reverse indexes for mutated layers are rebuilt
+    lazily at the next refresh.
+    """
+
+    def __init__(self, layer_graphs: Sequence[LayerGraph], model: str,
+                 params, *, sample_seed: int = 0):
+        assert model in ("gcn", "gat", "sage"), model
+        self.layer_graphs = list(layer_graphs)
+        self.model = model
+        self.params = params
+        self.sample_seed = sample_seed
+        self.rows_gemm = 0
+        self._rev: List[Optional[ReverseIndex]] = \
+            [None] * len(self.layer_graphs)
+
+    @property
+    def n_layers(self) -> int:
+        if self.model == "gcn":
+            return len(self.params["w"])
+        return len(self.params["layers"])
+
+    def _reverse(self, l: int) -> ReverseIndex:
+        if self._rev[l] is None:
+            self._rev[l] = build_reverse_index(self.layer_graphs[l])
+        return self._rev[l]
+
+    # -- full epoch -----------------------------------------------------
+    def full_levels(self, X: np.ndarray) -> List[np.ndarray]:
+        """Run a full epoch, returning every level as the store keeps it:
+        [X, input-of-layer-2, ..., final embedding]."""
+        L = self.n_layers
+        levels = [np.asarray(X, np.float32)]
+        ids = np.arange(levels[0].shape[0], dtype=np.int64)
+        for l in range(L):
+            H = self._layer_rows(l, ids,
+                                 lambda lvl, want: levels[lvl][want])
+            levels.append(H)
+        return levels
+
+    # -- one layer over a row subset ------------------------------------
+    def _layer_rows(self, l: int, rows: np.ndarray, read_level) -> np.ndarray:
+        """Recompute layer l's output for `rows`; `read_level(level, ids)`
+        supplies input rows (the store's staged view during a refresh).
+
+        Row/universe counts are padded to power-of-two buckets so the
+        op-by-op compile cache hits across refreshes (frontier sizes vary
+        per mutation batch; unpadded shapes would recompile every time).
+        Padding rows duplicate row 0 with an all-False mask, so real rows
+        stay bitwise-identical and the pad is sliced off on return.
+        """
+        lg = self.layer_graphs[l]
+        L = self.n_layers
+        F = lg.fanout
+        nbrs = lg.nbr[rows][lg.mask[rows]]
+        U = np.unique(np.concatenate([rows, nbrs.astype(np.int64)]))
+        R, Rp = rows.size, _pow2(rows.size)
+        Up = _pow2(U.size)
+        pos = np.zeros((Rp, F), np.int32)
+        pos[:R] = _remap(lg.nbr[rows], lg.mask[rows], U)
+        mask_np = np.zeros((Rp, F), bool)
+        mask_np[:R] = lg.mask[rows]
+        rows_p = np.concatenate([rows, np.zeros(Rp - R, np.int64)])
+        U_p = np.concatenate([U, np.zeros(Up - U.size, np.int64)])
+        rows = rows_p
+        mask = jnp.asarray(mask_np)
+        H_U = jnp.asarray(read_level(l, U_p))
+        self.rows_gemm += int(U.size)
+
+        if self.model == "gcn":
+            w = self.params["w"][l]
+            wts = jnp.asarray(mean_weights(mask_np))
+            Hw = prim.ref_gemm(H_U, jnp.asarray(w))
+            h = prim.ref_spmm(Hw, wts, jnp.asarray(pos), mask)
+        elif self.model == "sage":
+            p = self.params["layers"][l]
+            wts = jnp.asarray(mean_weights(mask_np))
+            agg = prim.ref_spmm(H_U, wts, jnp.asarray(pos), mask)
+            own = jnp.asarray(read_level(l, rows))
+            h = prim.ref_gemm(own, jnp.asarray(p["w_self"])) + \
+                prim.ref_gemm(agg, jnp.asarray(p["w_nbr"]))
+        else:                                           # gat
+            p = self.params["layers"][l]
+            heads = self.params["heads"]
+            q = prim.ref_gemm(jnp.asarray(read_level(l, rows)),
+                              jnp.asarray(p["wq"]))
+            kf = prim.ref_gemm(H_U, jnp.asarray(p["wk"]))
+            v = prim.ref_gemm(H_U, jnp.asarray(p["wv"]))
+            # gat_head_scores with q (rows) and kf (universe) row counts
+            # decoupled — same per-row ops, so still bitwise-identical
+            n, D = q.shape
+            dh = D // heads
+            qh = q.reshape(n, heads, dh)
+            kh = kf.reshape(-1, heads, dh)
+            kn = jnp.take(kh, pos.reshape(-1), axis=0).reshape(
+                pos.shape + (heads, dh))
+            s = jnp.einsum("nhd,nfhd->nfh", qh, kn) / \
+                jnp.sqrt(jnp.float32(dh))
+            alpha = masked_softmax(s.transpose(0, 2, 1),
+                                   mask[:, None, :]).transpose(0, 2, 1)
+            vn = jnp.take(v.reshape(-1, heads, dh), pos.reshape(-1),
+                          axis=0).reshape(pos.shape + (heads, dh))
+            h = jnp.einsum("nfh,nfhd->nhd", alpha, vn).reshape(n, D)
+
+        if l < L - 1:
+            act = jax.nn.relu if self.model in ("gcn", "sage") else jax.nn.elu
+            h = act(h)
+        return np.asarray(jax.block_until_ready(h))[:R]
+
+    # -- the refresh ----------------------------------------------------
+    def refresh(self, store: EmbeddingStore, g_new: Graph,
+                feat_ids: np.ndarray, feat_rows: np.ndarray,
+                resampled: np.ndarray) -> Dict[str, float]:
+        """Apply one mutation batch's compute: resample dirty rows of the
+        layer graphs from `g_new`, walk the forward frontier, and rewrite
+        only those store rows.  Commits a new store version."""
+        resampled = np.asarray(resampled, np.int64)
+        feat_ids = np.asarray(feat_ids, np.int64)
+        self.rows_gemm = 0
+
+        # snapshot the rows about to be resampled so a failed refresh can
+        # roll the layer graphs back in lockstep with the store abort —
+        # otherwise graphs and store drift apart and the skipped rows
+        # never re-enter a frontier
+        old_rows = ([(lg.nbr[resampled].copy(), lg.mask[resampled].copy())
+                     for lg in self.layer_graphs]
+                    if resampled.size else None)
+        try:
+            resample_rows(g_new, self.layer_graphs, resampled,
+                          seed=self.sample_seed + store.version + 1)
+            if resampled.size:
+                # NOTE: full O(N*F) rebuild per mutated refresh;
+                # incremental splice of the resampled rows' old/new
+                # entries would make this O(changed) — ROADMAP open item
+                self._rev = [None] * len(self.layer_graphs)
+            frontier = forward_frontier(
+                [self._reverse(l) for l in range(self.n_layers)],
+                feat_ids, resampled, self.n_layers)
+
+            store.begin_update()
+            if feat_ids.size:
+                store.write_rows(0, feat_ids,
+                                 np.asarray(feat_rows, np.float32))
+            for l in range(self.n_layers):
+                rows = frontier[l]
+                if rows.size == 0:
+                    continue
+                h = self._layer_rows(
+                    l, rows, lambda lvl, want: store.lookup_staged(want, lvl))
+                store.write_rows(l + 1, rows, h)
+        except Exception:
+            store.abort()       # readers stay on the last committed epoch
+            if old_rows is not None:
+                for lg, (nbr, mask) in zip(self.layer_graphs, old_rows):
+                    lg.nbr[resampled] = nbr
+                    lg.mask[resampled] = mask
+                self._rev = [None] * len(self.layer_graphs)
+            raise
+        version = store.commit()
+        return {"version": version, "rows_gemm": self.rows_gemm,
+                "frontier_sizes": [int(f.size) for f in frontier],
+                "n_resampled": int(resampled.size),
+                "n_feat_updates": int(feat_ids.size)}

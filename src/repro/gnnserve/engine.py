@@ -1,0 +1,185 @@
+"""Continuous-batching embedding lookup engine with bounded staleness.
+
+Modeled on ``serve.engine``'s fixed-slot pattern: B slots each hold one
+in-flight query; every ``step`` assembles one fixed-size gather batch
+(``rows_per_step`` rows, round-robin across active slots) and issues a
+single sharded ``store.lookup`` — new queries are admitted into free
+slots while others are mid-gather, so the gather pipe never drains.
+
+Freshness contract: the engine tracks a ``staleness_bound`` — the max
+number of pending graph/feature mutations a served row may pre-date.
+When the mutation log exceeds the bound (or a query demands
+``fresh=True``), the engine drains the log, splices the CSR overlay,
+and runs delta re-inference BEFORE the next gather; the store's
+double-buffered commit makes the epoch flip invisible to readers.
+Node additions cannot be expressed as a row delta (they re-partition
+the store); the engine refuses them and defers to an offline
+re-partition epoch (ROADMAP open item: incremental node onboarding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.gnnserve.delta import DeltaReinference
+from repro.gnnserve.mutations import MutationLog, apply_edge_mutations
+from repro.gnnserve.store import EmbeddingStore
+
+
+@dataclasses.dataclass
+class Query:
+    uid: int
+    node_ids: np.ndarray            # (n,) int64
+    level: int = -1                 # which store level to read
+    fresh: bool = False             # force a refresh before serving
+    out: Optional[np.ndarray] = None
+    served_version: int = -1
+    done: bool = False
+    # epoch snapshot pinned at first gather: a refresh committing while
+    # this query is mid-gather must not tear the response across epochs
+    snap: Optional[object] = dataclasses.field(default=None, repr=False)
+
+
+class EmbeddingServeEngine:
+    def __init__(self, store: EmbeddingStore, reinfer: DeltaReinference,
+                 graph: Graph, *, batch_slots: int = 4,
+                 rows_per_step: int = 256, staleness_bound: int = 64):
+        self.store = store
+        self.reinfer = reinfer
+        self.graph = graph
+        self.log = MutationLog()
+        self.B = batch_slots
+        self.rows_per_step = rows_per_step
+        self.staleness_bound = staleness_bound
+        self.slot_q: List[Optional[Query]] = [None] * batch_slots
+        self.cursor = np.zeros(batch_slots, np.int64)
+        self.queue: List[Query] = []
+        self.n_gather_steps = 0
+        self.n_refreshes = 0
+        self.n_full_epochs = 0
+        self.n_served = 0
+        self.last_refresh_stats: Dict = {}
+
+    # -- ingress --------------------------------------------------------
+    def submit(self, q: Query) -> None:
+        self.queue.append(q)
+
+    def mutate(self) -> MutationLog:
+        """The writable mutation log (add_edges / remove_edges /
+        update_features / add_nodes)."""
+        return self.log
+
+    # -- freshness ------------------------------------------------------
+    @property
+    def staleness(self) -> int:
+        return self.log.pending
+
+    def refresh(self) -> Dict:
+        """Drain the log and fold it into the store via delta
+        re-inference (full epoch when nodes were added)."""
+        if self.log.has_node_adds:      # check BEFORE draining: rejecting
+            raise NotImplementedError(  # must not discard pending edits
+                "node additions re-partition the store; run a full epoch "
+                "(see ROADMAP open items: incremental node onboarding)")
+        batch = self.log.drain()
+        try:
+            graph = apply_edge_mutations(self.graph, batch)
+            stats = self.reinfer.refresh(
+                self.store, graph, batch.feat_ids, batch.feat_rows,
+                batch.affected_dsts())
+        except Exception:
+            # a bad batch must not silently discard the good mutations
+            # drained alongside it — put everything back and re-raise
+            # (the engine is single-threaded, so no interleaved writes)
+            self.log.add_edges(batch.add_src, batch.add_dst)
+            self.log.remove_edges(batch.del_src, batch.del_dst)
+            if batch.feat_ids.size:
+                self.log.update_features(batch.feat_ids, batch.feat_rows)
+            raise
+        self.graph = graph
+        self.n_refreshes += 1
+        self.last_refresh_stats = stats
+        return stats
+
+    # -- serve loop -----------------------------------------------------
+    def _admit(self) -> None:
+        for i in range(self.B):
+            if self.slot_q[i] is None and self.queue:
+                q = self.queue.pop(0)
+                q.node_ids = np.asarray(q.node_ids, np.int64)
+                q.out = np.empty(
+                    (q.node_ids.size,
+                     self.store.level_dim(q.level % self.store.n_levels)),
+                    np.float32)
+                self.slot_q[i] = q
+                self.cursor[i] = 0
+
+    def step(self) -> bool:
+        """Admit, maybe refresh, then one batched gather. Returns False
+        when idle."""
+        self._admit()
+        active = [i for i in range(self.B) if self.slot_q[i] is not None]
+        if not active:
+            return False
+        needs_fresh = any(self.slot_q[i].fresh and self.cursor[i] == 0
+                          for i in active)
+        if self.log.pending and (needs_fresh
+                                 or self.log.pending >= self.staleness_bound):
+            self.refresh()
+
+        # round-robin a fixed row budget across active slots; fuse chunks
+        # that share (epoch, level) into one sharded gather
+        per_key: Dict[tuple, List] = {}
+        budget = self.rows_per_step
+        share = max(1, budget // len(active))
+        for i in active:
+            q = self.slot_q[i]
+            take = min(share, q.node_ids.size - self.cursor[i])
+            if take <= 0:
+                continue
+            if q.snap is None:
+                # pin the query to the CURRENT epoch: rows gathered after
+                # a mid-query refresh still come from this snapshot, so
+                # one response never mixes epochs
+                q.snap = self.store.snapshot()
+                q.served_version = q.snap.version
+            lo = self.cursor[i]
+            per_key.setdefault(
+                (q.snap.version, q.level % self.store.n_levels), []).append(
+                (i, lo, lo + take))
+            self.cursor[i] += take
+        for (_, level), chunks in per_key.items():
+            snap = self.slot_q[chunks[0][0]].snap
+            ids = np.concatenate([self.slot_q[i].node_ids[lo:hi]
+                                  for i, lo, hi in chunks])
+            rows = snap.lookup(ids, level)            # one sharded gather
+            off = 0
+            for i, lo, hi in chunks:
+                self.slot_q[i].out[lo:hi] = rows[off:off + (hi - lo)]
+                off += hi - lo
+        self.n_gather_steps += 1
+
+        for i in active:
+            q = self.slot_q[i]
+            if self.cursor[i] >= q.node_ids.size:
+                q.done = True
+                q.snap = None       # release the pinned epoch's shards
+                self.n_served += 1
+                self.slot_q[i] = None
+        return True
+
+    def run(self, max_steps: int = 100_000) -> None:
+        for _ in range(max_steps):
+            if not self.step() and not self.queue:
+                return
+
+    def stats(self) -> Dict[str, float]:
+        return {"n_served": self.n_served,
+                "n_gather_steps": self.n_gather_steps,
+                "n_refreshes": self.n_refreshes,
+                "store_version": self.store.version,
+                "pending_mutations": self.log.pending,
+                **{f"store_{k}": v for k, v in self.store.stats().items()}}

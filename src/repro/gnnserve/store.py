@@ -1,0 +1,154 @@
+"""Versioned, partition-sharded embedding store with double-buffered swap.
+
+The store holds the layerwise engine's output at every level: level 0 is
+the raw feature matrix X, level l (1..L) is the INPUT of layer l+1 (i.e.
+post-activation for inner layers) and level L is the final embedding —
+exactly the tensors ``delta.DeltaReinference`` needs to restart compute
+at any layer.  Rows are sharded into P contiguous partitions mirroring
+``core.partition``'s 1-D node ranges, so a production deployment maps one
+shard per host.
+
+Writers never touch what readers see: ``begin_update`` opens a staging
+overlay, ``write_rows`` copies-on-write only the shards it dirties, and
+``commit`` swaps the dirty shards in atomically and bumps ``version``
+(the double-buffered epoch swap).  ``lookup`` always reads the committed
+front; ``lookup_staged`` reads through the overlay (read-your-writes for
+the delta engine mid-refresh).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+class StoreSnapshot:
+    """Immutable view of one committed epoch.  Shard arrays are shared by
+    pointer with the store's front buffer at snapshot time; commits swap
+    pointers (never write in place), so reads through a snapshot keep
+    seeing one consistent epoch for free."""
+
+    def __init__(self, store: "EmbeddingStore"):
+        self._front = [list(shards) for shards in store._front]
+        self.bounds = store.bounds
+        self.version = store.version
+        self._store = store
+
+    def lookup(self, ids: np.ndarray, level: int = -1) -> np.ndarray:
+        level = level % len(self._front)
+        self._store.n_lookups += 1
+        self._store.rows_gathered += int(np.asarray(ids).size)
+        return _gather_rows(self._front[level], self.bounds, ids)
+
+
+def _gather_rows(shards: List[np.ndarray], bounds: np.ndarray,
+                 ids: np.ndarray) -> np.ndarray:
+    ids = np.asarray(ids, np.int64)
+    assert ids.size == 0 or (ids.min() >= 0 and ids.max() < bounds[-1]), \
+        "node id out of range"      # a negative id would silently wrap
+    out = np.empty((ids.size, shards[0].shape[1]), np.float32)
+    owner = np.searchsorted(bounds, ids, side="right") - 1
+    for s in np.unique(owner):
+        sel = owner == s
+        out[sel] = shards[s][ids[sel] - bounds[s]]
+    return out
+
+
+class EmbeddingStore:
+    def __init__(self, levels: Sequence[np.ndarray], n_shards: int = 4):
+        n = levels[0].shape[0]
+        assert all(h.shape[0] == n for h in levels), "levels must cover all nodes"
+        self.n_nodes = n
+        self.n_shards = n_shards
+        self.bounds = np.linspace(0, n, n_shards + 1).astype(np.int64)
+        # front[level][shard] -> (rows, D_level) float32
+        self._front: List[List[np.ndarray]] = [
+            [np.ascontiguousarray(h[self.bounds[s]:self.bounds[s + 1]],
+                                  dtype=np.float32)
+             for s in range(n_shards)]
+            for h in levels]
+        # staging overlay: {(level, shard): array}; None when no update open
+        self._staged: Optional[Dict[tuple, np.ndarray]] = None
+        self.version = 0
+        self.n_lookups = 0
+        self.rows_gathered = 0
+        self.n_swaps = 0
+
+    @property
+    def n_levels(self) -> int:
+        return len(self._front)
+
+    def level_dim(self, level: int) -> int:
+        return self._front[level][0].shape[1]
+
+    # -- read path ------------------------------------------------------
+    def _owner(self, ids: np.ndarray) -> np.ndarray:
+        return np.searchsorted(self.bounds, ids, side="right") - 1
+
+    def _gather(self, ids: np.ndarray, level: int, staged: bool) -> np.ndarray:
+        shards = self._front[level]
+        if staged and self._staged is not None:
+            shards = [self._staged.get((level, s), shards[s])
+                      for s in range(self.n_shards)]
+        return _gather_rows(shards, self.bounds, ids)
+
+    def lookup(self, ids: np.ndarray, level: int = -1) -> np.ndarray:
+        """Committed (front-buffer) rows; what the serve engine reads."""
+        level = level % self.n_levels
+        self.n_lookups += 1
+        self.rows_gathered += int(np.asarray(ids).size)
+        return self._gather(ids, level, staged=False)
+
+    def lookup_staged(self, ids: np.ndarray, level: int = -1) -> np.ndarray:
+        """Read-through the open staging overlay (delta refresh only)."""
+        return self._gather(ids, level % self.n_levels, staged=True)
+
+    def snapshot(self) -> StoreSnapshot:
+        """Pin the current committed epoch (cheap: pointer copies)."""
+        return StoreSnapshot(self)
+
+    # -- write path -----------------------------------------------------
+    def begin_update(self) -> None:
+        assert self._staged is None, "update already open"
+        self._staged = {}
+
+    def write_rows(self, level: int, ids: np.ndarray, rows: np.ndarray) -> None:
+        assert self._staged is not None, "begin_update first"
+        level = level % self.n_levels
+        ids = np.asarray(ids, np.int64)
+        owner = self._owner(ids)
+        for s in np.unique(owner):
+            key = (level, int(s))
+            if key not in self._staged:          # copy-on-write per shard
+                self._staged[key] = self._front[level][s].copy()
+            sel = owner == s
+            self._staged[key][ids[sel] - self.bounds[s]] = rows[sel]
+
+    def commit(self) -> int:
+        """Swap dirtied shards into the front buffer; readers see the new
+        epoch atomically (per-shard pointer swap, no row copies)."""
+        assert self._staged is not None, "no update open"
+        for (level, s), shard in self._staged.items():
+            self._front[level][s] = shard
+        self._staged = None
+        self.version += 1
+        self.n_swaps += 1
+        return self.version
+
+    def abort(self) -> None:
+        self._staged = None
+
+    # -- diagnostics ----------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        return {"version": self.version, "n_lookups": self.n_lookups,
+                "rows_gathered": self.rows_gathered, "n_swaps": self.n_swaps,
+                "n_shards": self.n_shards, "n_levels": self.n_levels}
+
+
+def store_from_inference(X: np.ndarray, level_outputs: Sequence[np.ndarray],
+                         n_shards: int = 4) -> EmbeddingStore:
+    """Build the store from a full epoch: X plus each layer's output as
+    consumed by the next layer (see DeltaReinference.full_levels)."""
+    return EmbeddingStore([np.asarray(X, np.float32)]
+                          + [np.asarray(h, np.float32)
+                             for h in level_outputs], n_shards=n_shards)

@@ -2,20 +2,15 @@
 device state; callers (dryrun) are responsible for the 512-device env."""
 from __future__ import annotations
 
-import jax
-
-
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+from repro.sharding.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(n_data: int = 1, n_model: int = 1):
     """Small mesh over host devices (tests / benchmarks subprocesses)."""
-    return jax.make_mesh((n_data, n_model), ("data", "model"),
-                         axis_types=_auto(2))
+    return make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,46 @@
+"""Version-portability shims for the shard_map / mesh JAX surface.
+
+The repo is written against the modern spelling (``jax.shard_map`` with
+``check_vma``, ``jax.make_mesh`` with ``axis_types``).  Other runtimes
+disagree on every piece: 0.4.x keeps shard_map in ``jax.experimental``
+and spells the replication check ``check_rep`` (as do some newer
+top-level versions), and ``jax.make_mesh``/``AxisType`` appear mid-0.4.
+Every call site routes through these two wrappers so one code path runs
+everywhere.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+import numpy as np
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` where available (either flag spelling), else the
+    experimental one."""
+    if hasattr(jax, "shard_map"):
+        # pick the spelling from the signature rather than retrying on
+        # TypeError, which would misattribute unrelated TypeErrors
+        params = inspect.signature(jax.shard_map).parameters
+        flag = "check_vma" if "check_vma" in params else "check_rep"
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **{flag: check_vma})
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with Auto axis types when the runtime has them,
+    degrading to a plain device-grid ``Mesh`` on older versions."""
+    try:
+        auto = (jax.sharding.AxisType.Auto,) * len(axis_names)
+        return jax.make_mesh(axis_shapes, axis_names, axis_types=auto)
+    except (AttributeError, TypeError):
+        pass
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(axis_shapes, axis_names)
+    n = int(np.prod(axis_shapes))
+    devs = np.asarray(jax.devices()[:n]).reshape(axis_shapes)
+    return jax.sharding.Mesh(devs, axis_names)

@@ -1,6 +1,9 @@
 """Hypothesis property tests on the system's invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.graph import csr_from_edges, csr_from_edges_distributed
 from repro.core.partition import build_plan
