@@ -42,8 +42,9 @@ def _train(engine, init_fn, lgs_train, X, labels, train_mask, dims,
     return {**train_p, **static}, float(l)
 
 
-def run():
-    n, n_comm = 1024, 8
+def run(smoke: bool = False):
+    n, n_comm = (256, 4) if smoke else (1024, 8)
+    steps = 5 if smoke else 60
     src, dst, labels = planted_partition(n, n_comm, p_in=0.85, p_out=0.15,
                                          seed=1)
     g = csr_from_edges(src, dst, n)
@@ -59,7 +60,7 @@ def run():
             ("gat", lambda l, x, p: local_gat_infer(l, x, p),
              lambda k, d: init_gat(k, d, heads=4))):
         params, loss = _train(engine, init_fn, full, X, labels, train_mask,
-                              dims)
+                              dims, steps=steps)
         acc_full = _accuracy(engine(full, X, params), labels, train_mask)
         # DEAL: shared sampled 1-hop layer graphs for all nodes
         deal_lgs = sample_layer_graphs(g, fanout=8, n_layers=2, seed=7)
@@ -67,7 +68,7 @@ def run():
                              train_mask)
         # mini-batch style: per-batch resampled neighborhoods
         accs = []
-        for s in range(4):
+        for s in range(1 if smoke else 4):
             lgs_s = sample_layer_graphs(g, fanout=8, n_layers=2,
                                         seed=100 + s)
             accs.append(_accuracy(engine(lgs_s, X, params), labels,

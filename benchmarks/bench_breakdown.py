@@ -8,10 +8,13 @@ from repro.core.partition import build_plan
 from repro.core.sampler import sample_layer_graphs
 
 
-def run():
-    D = 128
-    for name in ("ogbn-products", "social-spammer"):
-        src, dst, n = make_dataset(name, scale=0.5)
+def run(smoke: bool = False):
+    D = 32 if smoke else 128
+    for name in ("ogbn-products",) if smoke else ("ogbn-products",
+                                                  "social-spammer"):
+        src, dst, n = make_dataset(name, scale=0.05 if smoke else 0.5)
+        from repro.core.graph import truncate_to_multiple
+        src, dst, n = truncate_to_multiple(src, dst, n, 8)
         t_con, (g, _) = time_host(
             lambda: csr_from_edges_distributed(src, dst, n, n_workers=4),
             iters=1)

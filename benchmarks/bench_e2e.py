@@ -1,19 +1,84 @@
 """Fig 14: DEAL layer-wise all-node inference vs ego-network batched
-baseline (DGI/SALIENT++-style), GCN + GAT, three datasets."""
-import jax
+baseline (DGI/SALIENT++-style), GCN + GAT, three datasets.
+
+``executor`` retargets the DEAL engine onto any backend of the layer-op
+executor layer: "ref" (jnp oracle), "pallas" (the kernels, interpret off
+TPU), or "dist" (shard_map mesh in a subprocess).  Non-ref rows carry
+the max error vs the ref engine in their derived column and fail loudly
+if outside tolerance, so a rotting backend can't silently post numbers.
+"""
 import numpy as np
 
-from benchmarks.common import emit, time_host
-from repro.core.gnn_models import init_gat, init_gcn
+from benchmarks.common import emit, run_dist_script, time_host
 from repro.core.graph import csr_from_edges, make_dataset
-from repro.core.layerwise import (ego_batched_gcn_infer, local_gat_infer,
-                                  local_gcn_infer)
 from repro.core.sampler import sample_layer_graphs
 
+_DATASETS = ("ogbn-products", "social-spammer", "ogbn-papers100M")
 
-def run():
-    for name in ("ogbn-products", "social-spammer", "ogbn-papers100M"):
-        src, dst, n = make_dataset(name, scale=0.5)
+_DIST_SCRIPT = r"""
+import numpy as np, jax, time
+from repro.core.graph import csr_from_edges, make_dataset, truncate_to_multiple
+from repro.core.gnn_models import init_gat, init_gcn
+from repro.core.layerwise import DistributedLayerwise, LOCAL_ENGINES
+from repro.core.sampler import sample_layer_graphs
+from repro.launch.mesh import make_host_mesh
+
+SMOKE = @SMOKE@
+mesh = make_host_mesh(4, 2)
+datasets = ("ogbn-products",) if SMOKE else (
+    "ogbn-products", "social-spammer", "ogbn-papers100M")
+for name in datasets:
+    src, dst, n = make_dataset(name, scale=0.05 if SMOKE else 0.5)
+    src, dst, n = truncate_to_multiple(src, dst, n, 8)
+    g = csr_from_edges(src, dst, n)
+    lgs = sample_layer_graphs(g, fanout=8, n_layers=3, seed=0)
+    D = 64
+    X = np.random.default_rng(0).standard_normal((n, D), dtype=np.float32)
+    for model, init in (("gcn", init_gcn),
+                        ("gat", lambda k, d: init_gat(k, d, heads=1))):
+        params = init(jax.random.PRNGKey(0), [D, D, D, D])
+        eng = DistributedLayerwise(mesh, lgs, model, params)
+        jax.block_until_ready(eng.infer(X))
+        ts = []
+        for _ in range(1 if SMOKE else 3):
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(eng.infer(X))
+            ts.append(time.perf_counter() - t0)
+        t = sorted(ts)[len(ts) // 2]
+        want = np.asarray(LOCAL_ENGINES[model](lgs, X, params))
+        err = float(np.abs(np.asarray(out) - want).max())
+        assert err < 5e-4, (model, name, err)
+        print(f"CSV,fig14/e2e_{model}/{name}/deal_dist,{t*1e6:.1f},"
+              f"max_err_vs_ref={err:.2e}")
+"""
+
+
+def _err_vs_ref(engine, lgs, X, params, got, executor, tag):
+    """Non-ref executors must land within tolerance of the jnp oracle;
+    return the derived-column suffix recording how close they came."""
+    if executor == "ref":
+        return ""
+    want = np.asarray(engine(lgs, X, params))
+    e = float(np.abs(got - want).max())
+    assert e < 5e-4, (tag, e)
+    return f";max_err_vs_ref={e:.2e}"
+
+
+def run(smoke: bool = False, executor: str = "ref"):
+    if executor == "dist":
+        run_dist_script(_DIST_SCRIPT, smoke)
+        return
+
+    import jax
+
+    from repro.core.gnn_models import init_gat, init_gcn
+    from repro.core.layerwise import (ego_batched_gcn_infer, local_gat_infer,
+                                      local_gcn_infer)
+    suffix = "" if executor == "ref" else f"_{executor}"
+    scale = 0.05 if smoke else 0.5
+    iters = 1 if smoke else 3
+    for name in _DATASETS[:1] if smoke else _DATASETS:
+        src, dst, n = make_dataset(name, scale=scale)
         g = csr_from_edges(src, dst, n)
         lgs = sample_layer_graphs(g, fanout=8, n_layers=3, seed=0)
         rng = np.random.default_rng(0)
@@ -21,23 +86,32 @@ def run():
         X = rng.standard_normal((n, D), dtype=np.float32)
 
         pg = init_gcn(jax.random.PRNGKey(0), [D, D, D, D])
-        t_deal, _ = time_host(
-            lambda: np.asarray(local_gcn_infer(lgs, X, pg)), iters=3)
+        t_deal, got = time_host(
+            lambda: np.asarray(local_gcn_infer(lgs, X, pg,
+                                               executor=executor)),
+            iters=iters)
+        err = _err_vs_ref(local_gcn_infer, lgs, X, pg, got, executor,
+                          (name, "gcn"))
         # paper: memory caps the baseline batch at ~6% of nodes
         bs = max(64, int(0.06 * n))
         t_ego, (out, work) = time_host(
             lambda: ego_batched_gcn_infer(lgs, X, pg, batch_size=bs),
             iters=1)
-        emit(f"fig14/e2e_gcn/{name}/deal", t_deal * 1e6,
-             f"speedup={t_ego/t_deal:.2f}x")
-        emit(f"fig14/e2e_gcn/{name}/ego_batched", t_ego * 1e6,
-             f"work_rows={work};deal_rows={3*n}")
+        emit(f"fig14/e2e_gcn/{name}/deal{suffix}", t_deal * 1e6,
+             f"speedup={t_ego/t_deal:.2f}x{err}")
+        if executor == "ref":
+            emit(f"fig14/e2e_gcn/{name}/ego_batched", t_ego * 1e6,
+                 f"work_rows={work};deal_rows={3*n}")
 
         pa = init_gat(jax.random.PRNGKey(1), [D, D, D, D], heads=4)
-        t_gat, _ = time_host(
-            lambda: np.asarray(local_gat_infer(lgs, X, pa)), iters=3)
+        t_gat, got = time_host(
+            lambda: np.asarray(local_gat_infer(lgs, X, pa,
+                                               executor=executor)),
+            iters=iters)
+        err = _err_vs_ref(local_gat_infer, lgs, X, pa, got, executor,
+                          (name, "gat"))
         # GAT baseline modeled by GCN row-redundancy ratio (same frontiers,
         # more primitives per row — see EXPERIMENTS.md)
         ratio = work / (3 * n)
-        emit(f"fig14/e2e_gat/{name}/deal", t_gat * 1e6,
-             f"modeled_speedup={ratio:.2f}x")
+        emit(f"fig14/e2e_gat/{name}/deal{suffix}", t_gat * 1e6,
+             f"modeled_speedup={ratio:.2f}x{err}")

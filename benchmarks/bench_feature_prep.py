@@ -8,12 +8,12 @@ from repro.core.feature_prep import (fused_load, redistribute_load,
                                      scan_all_load, write_feature_files)
 
 
-def run():
-    N, D = 32_768, 128
+def run(smoke: bool = False):
+    N, D = (2048, 32) if smoke else (32_768, 128)
     w = np.random.default_rng(0).standard_normal((D, D)).astype(np.float32)
     with tempfile.TemporaryDirectory() as td:
-        files, _ = write_feature_files(td, N, D, n_files=16)
-        for M in (2, 4, 8):
+        files, _ = write_feature_files(td, N, D, n_files=4 if smoke else 16)
+        for M in (2,) if smoke else (2, 4, 8):
             _, s1 = scan_all_load(files, M, N, D)
             _, s2 = redistribute_load(files, M, N, D)
             _, s3 = fused_load(files, M, N, D, w)

@@ -7,13 +7,15 @@ from repro.core.graph import (csr_from_edges, csr_from_edges_distributed,
                               make_dataset)
 
 
-def run():
-    for name in ("ogbn-products", "social-spammer", "ogbn-papers100M"):
-        src, dst, n = make_dataset(name)
+def run(smoke: bool = False):
+    names = (("ogbn-products",) if smoke
+             else ("ogbn-products", "social-spammer", "ogbn-papers100M"))
+    for name in names:
+        src, dst, n = make_dataset(name, scale=0.1 if smoke else 1.0)
         t_single, _ = time_host(lambda: csr_from_edges(src, dst, n),
-                                iters=3)
+                                iters=1 if smoke else 3)
         emit(f"fig20/construct/{name}/single_machine", t_single * 1e6, "")
-        for w in (2, 4, 8):
+        for w in (2,) if smoke else (2, 4, 8):
             t_meas, (g, stats) = time_host(
                 lambda: csr_from_edges_distributed(src, dst, n,
                                                    n_workers=w), iters=1)

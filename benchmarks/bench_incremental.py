@@ -11,13 +11,14 @@ Emits wall time per refresh and the speedup.  The crossover is the
 point where the k-hop frontier of the batch approaches N — past it a
 full epoch is cheaper, which is exactly the staleness/batching tradeoff
 the serve engine's ``staleness_bound`` controls.
+
+``executor`` retargets both refresh paths through the layer-op executor
+layer: "ref", "pallas" (kernels), or "dist" (the per-partition frontier
+split on a shard_map mesh, run in a subprocess).
 """
 import numpy as np
 
 from benchmarks import common
-from repro.core.gnn_models import init_gcn
-from repro.core.graph import csr_from_edges, rmat_edges
-from repro.core.sampler import sample_layer_graphs
 
 N = 8192
 DEG = 14
@@ -26,28 +27,36 @@ LAYERS = 3
 D = 64
 FRACTIONS = (0.001, 0.005, 0.01, 0.05)
 
+_DIST_SCRIPT = r"""
+import copy
+import numpy as np, jax, time
+from repro.core.gnn_models import init_gcn
+from repro.core.graph import csr_from_edges, rmat_edges
+from repro.core.ops import DistExecutor
+from repro.core.sampler import sample_layer_graphs
+from repro.gnnserve import (DeltaReinference, MutationLog,
+                            apply_edge_mutations, store_from_inference)
+from repro.launch.mesh import make_host_mesh
 
-def _setup(seed=0):
-    import copy
+SMOKE = @SMOKE@
+N = 1024 if SMOKE else 4096
+FANOUT, LAYERS, D = 4, 3, 64
+FRACTIONS = (0.01,) if SMOKE else (0.001, 0.005, 0.01, 0.05)
+seed = 0
+src, dst = rmat_edges(N, N * 14, seed=seed)
+g = csr_from_edges(src, dst, N)
+lgs = sample_layer_graphs(g, fanout=FANOUT, n_layers=LAYERS, seed=seed)
+rng = np.random.default_rng(seed)
+X = rng.standard_normal((N, D), dtype=np.float32)
+params = init_gcn(jax.random.PRNGKey(seed), [D] * LAYERS + [D])
+dex = DistExecutor(make_host_mesh(4, 2))
+ri = DeltaReinference([copy.deepcopy(l) for l in lgs], "gcn", params,
+                      executor=dex)
+levels = ri.full_levels(X)
+store = store_from_inference(X, levels[1:], n_shards=4)
 
-    import jax
-
-    from repro.gnnserve import DeltaReinference, store_from_inference
-    src, dst = rmat_edges(N, N * DEG, seed=seed)
-    g = csr_from_edges(src, dst, N)
-    lgs = sample_layer_graphs(g, fanout=FANOUT, n_layers=LAYERS, seed=seed)
-    rng = np.random.default_rng(seed)
-    X = rng.standard_normal((N, D), dtype=np.float32)
-    params = init_gcn(jax.random.PRNGKey(seed), [D] * LAYERS + [D])
-    ri = DeltaReinference([copy.deepcopy(l) for l in lgs], "gcn", params)
-    levels = ri.full_levels(X)
-    store = store_from_inference(X, levels[1:], n_shards=4)
-    return g, src, dst, X, params, ri, store, rng
-
-
-def _mutation(rng, src, dst, frac):
+def mutation(frac):
     k = max(1, int(N * frac))
-    from repro.gnnserve import MutationLog
     log = MutationLog()
     log.add_edges(rng.integers(0, N, k), rng.integers(0, N, k))
     pick = rng.choice(src.size, k, replace=False)
@@ -57,42 +66,124 @@ def _mutation(rng, src, dst, frac):
                                                  dtype=np.float32))
     return log.drain()
 
+for frac in FRACTIONS:
+    warm = mutation(frac)
+    g = apply_edge_mutations(g, warm)
+    ri.refresh(store, g, warm.feat_ids, warm.feat_rows,
+               warm.affected_dsts())
+    ts = []
+    for _ in range(1 if SMOKE else 3):
+        batch = mutation(frac)
+        g = apply_edge_mutations(g, batch)
+        t0 = time.perf_counter()
+        stats = ri.refresh(store, g, batch.feat_ids, batch.feat_rows,
+                           batch.affected_dsts())
+        ts.append(time.perf_counter() - t0)
+    t = sorted(ts)[len(ts) // 2]
+    # full recompute through the SAME executor (epoch-based alternative);
+    # full_levels never mutates the layer graphs, so no copy needed
+    X2 = store.lookup(np.arange(N), 0)
+    tf = []
+    for _ in range(1 if SMOKE else 3):
+        t0 = time.perf_counter()
+        oracle = DeltaReinference(ri.layer_graphs, "gcn", params,
+                                  executor=dex).full_levels(X2)
+        store_from_inference(X2, oracle[1:], n_shards=4)
+        tf.append(time.perf_counter() - t0)
+    t_full = sorted(tf)[len(tf) // 2]
+    print(f"CSV,incremental/delta_frac{frac}_dist,{t*1e6:.1f},"
+          f"frontier={max(stats['frontier_sizes'])}/{N} "
+          f"rows_gemm={stats['rows_gemm']}")
+    print(f"CSV,incremental/full_frac{frac}_dist,{t_full*1e6:.1f},"
+          f"rows_gemm={N * LAYERS}")
+    print(f"CSV,incremental/speedup_frac{frac}_dist,"
+          f"{t_full / max(t, 1e-12):.1f},"
+          + ("delta_wins" if t < t_full else "full_wins") + f";n={N}")
+"""
 
-def run():
+
+def _setup(seed=0, n=N, executor="ref"):
+    import copy
+
+    import jax
+
+    from repro.core.gnn_models import init_gcn
+    from repro.core.graph import csr_from_edges, rmat_edges
+    from repro.core.sampler import sample_layer_graphs
+    from repro.gnnserve import DeltaReinference, store_from_inference
+    src, dst = rmat_edges(n, n * DEG, seed=seed)
+    g = csr_from_edges(src, dst, n)
+    lgs = sample_layer_graphs(g, fanout=FANOUT, n_layers=LAYERS, seed=seed)
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, D), dtype=np.float32)
+    params = init_gcn(jax.random.PRNGKey(seed), [D] * LAYERS + [D])
+    ri = DeltaReinference([copy.deepcopy(l) for l in lgs], "gcn", params,
+                          executor=executor)
+    levels = ri.full_levels(X)
+    store = store_from_inference(X, levels[1:], n_shards=4)
+    return g, src, dst, X, params, ri, store, rng
+
+
+def _mutation(rng, src, dst, frac, n=N):
+    k = max(1, int(n * frac))
+    from repro.gnnserve import MutationLog
+    log = MutationLog()
+    log.add_edges(rng.integers(0, n, k), rng.integers(0, n, k))
+    pick = rng.choice(src.size, k, replace=False)
+    log.remove_edges(src[pick], dst[pick])
+    fid = rng.choice(n, max(1, k // 4), replace=False)
+    log.update_features(fid, rng.standard_normal((fid.size, D),
+                                                 dtype=np.float32))
+    return log.drain()
+
+
+def run(smoke: bool = False, executor: str = "ref"):
+    if executor == "dist":
+        # smaller N than the single-host rows (mesh subprocess cost);
+        # the _dist speedup row carries its own n= so rows aren't
+        # cross-compared blindly
+        common.run_dist_script(_DIST_SCRIPT, smoke)
+        return
+
     from repro.gnnserve import (DeltaReinference, apply_edge_mutations,
                                 store_from_inference)
-    g, src, dst, X, params, ri, store, rng = _setup()
-    for frac in FRACTIONS:
+    n = 1024 if smoke else N
+    fractions = (0.01,) if smoke else FRACTIONS
+    iters = 1 if smoke else 3
+    suffix = "" if executor == "ref" else f"_{executor}"
+    g, src, dst, X, params, ri, store, rng = _setup(n=n, executor=executor)
+    for frac in fractions:
         # warmup round: populates the pow2-bucket compile caches this
         # batch size hits (steady-state serving reuses them)
-        warm = _mutation(rng, src, dst, frac)
+        warm = _mutation(rng, src, dst, frac, n=n)
         g = apply_edge_mutations(g, warm)
         ri.refresh(store, g, warm.feat_ids, warm.feat_rows,
                    warm.affected_dsts())
 
-        batch = _mutation(rng, src, dst, frac)
+        batch = _mutation(rng, src, dst, frac, n=n)
         g = apply_edge_mutations(g, batch)
         t_delta, stats = common.time_host(
             lambda: ri.refresh(store, g, batch.feat_ids, batch.feat_rows,
-                               batch.affected_dsts()), iters=3)
+                               batch.affected_dsts()), iters=iters)
 
         # full recompute on the SAME (already resampled) layer graphs,
         # rebuilding the store from scratch — the epoch-based alternative
-        X2 = store.lookup(np.arange(N), 0)
+        # (full_levels never mutates them, so no copy in the timed path)
+        X2 = store.lookup(np.arange(n), 0)
 
         def full_epoch():
-            oracle = DeltaReinference(ri.layer_graphs, "gcn",
-                                      params).full_levels(X2)
+            oracle = DeltaReinference(ri.layer_graphs, "gcn", params,
+                                      executor=executor).full_levels(X2)
             return store_from_inference(X2, oracle[1:], n_shards=4)
 
-        t_full, _ = common.time_host(full_epoch, iters=3)
+        t_full, _ = common.time_host(full_epoch, iters=iters)
         frontier = stats["frontier_sizes"]
-        common.emit(f"incremental/delta_frac{frac}", t_delta * 1e6,
-                    f"frontier={max(frontier)}/{N} "
+        common.emit(f"incremental/delta_frac{frac}{suffix}", t_delta * 1e6,
+                    f"frontier={max(frontier)}/{n} "
                     f"rows_gemm={stats['rows_gemm']}")
-        common.emit(f"incremental/full_frac{frac}", t_full * 1e6,
-                    f"rows_gemm={N * LAYERS}")
-        common.emit(f"incremental/speedup_frac{frac}",
+        common.emit(f"incremental/full_frac{frac}{suffix}", t_full * 1e6,
+                    f"rows_gemm={n * LAYERS}")
+        common.emit(f"incremental/speedup_frac{frac}{suffix}",
                     t_full / max(t_delta, 1e-12),
                     "delta_wins" if t_delta < t_full else "full_wins")
 

@@ -1,13 +1,14 @@
 """Figs 16-19 in ONE subprocess (8 host devices): distributed GEMM
 (DEAL vs CAGNET), SPMM (feature- vs graph-exchange), SDDMM (approach i vs
 ii over (P, M) grids), and partitioned-communication + pipelining."""
-from benchmarks.common import emit, run_devices_subprocess
+from benchmarks.common import run_dist_script
 
 _SCRIPT = r"""
+SMOKE = @SMOKE@
 import numpy as np, jax, jax.numpy as jnp, time
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import primitives as prim
-from repro.core.graph import csr_from_edges, make_dataset
+from repro.core.graph import csr_from_edges, make_dataset, truncate_to_multiple
 from repro.core.gnn_models import mean_weights
 from repro.core.partition import build_plan, comm_volume
 from repro.core.sampler import sample_layer_graphs
@@ -24,9 +25,9 @@ def tmed(fn, *a, iters=3):
 rng = np.random.default_rng(0)
 
 # ---------------- Fig 16: GEMM ----------------
-for D in (256, 1024):
+for D in (256,) if SMOKE else (256, 1024):
     mesh = make_host_mesh(4, 2)
-    N = 8192
+    N = 512 if SMOKE else 8192
     H = jax.device_put(jnp.asarray(rng.standard_normal((N, D), dtype=np.float32)),
                        NamedSharding(mesh, P("data", "model")))
     W = jnp.asarray(rng.standard_normal((D, D), dtype=np.float32))
@@ -39,11 +40,11 @@ for D in (256, 1024):
 
 # shared graph setup for sparse primitives
 datasets = {}
-for name in ("ogbn-products", "social-spammer", "ogbn-papers100M"):
-    src, dst, n = make_dataset(name, scale=0.25)
-    n -= n % 8
-    keep = (src < n) & (dst < n)
-    g = csr_from_edges(src[keep], dst[keep], n)
+for name in ("social-spammer",) if SMOKE else (
+        "ogbn-products", "social-spammer", "ogbn-papers100M"):
+    src, dst, n = make_dataset(name, scale=0.05 if SMOKE else 0.25)
+    src, dst, n = truncate_to_multiple(src, dst, n, 8)
+    g = csr_from_edges(src, dst, n)
     lgs = sample_layer_graphs(g, fanout=8, n_layers=1, seed=0)
     datasets[name] = (g, lgs)
 
@@ -70,7 +71,7 @@ for name, (g, lgs) in datasets.items():
 name = "social-spammer"
 g, lgs = datasets[name]
 n = g.n_nodes
-for (Pg, M) in ((1, 8), (2, 4), (4, 2), (8, 1)):
+for (Pg, M) in ((4, 2),) if SMOKE else ((1, 8), (2, 4), (4, 2), (8, 1)):
     mesh = make_host_mesh(Pg, M)
     plan = build_plan(lgs, Pg, M)
     lp = plan.layers[0]; dev = prim.plan_device_arrays(lp)
@@ -111,9 +112,5 @@ for name, (g, lgs) in datasets.items():
 """
 
 
-def run():
-    out = run_devices_subprocess(_SCRIPT, n_devices=8, timeout=3000)
-    for line in out.splitlines():
-        if line.startswith("CSV,"):
-            _, name, us, derived = line.split(",", 3)
-            emit(name, float(us), derived)
+def run(smoke: bool = False):
+    run_dist_script(_SCRIPT, smoke)

@@ -1,10 +1,12 @@
 """Fig 15: weak scaling (graph grows with the mesh) and strong scaling
 (fixed graph, growing mesh) of the distributed layer-wise engine."""
-from benchmarks.common import emit, run_devices_subprocess
+from benchmarks.common import run_dist_script
 
 _SCRIPT = r"""
+SMOKE = @SMOKE@
 import numpy as np, jax, jax.numpy as jnp, time
-from repro.core.graph import csr_from_edges, rmat_edges, make_dataset
+from repro.core.graph import (csr_from_edges, rmat_edges, make_dataset,
+                              truncate_to_multiple)
 from repro.core.gnn_models import init_gcn
 from repro.core.layerwise import DistributedLayerwise
 from repro.core.sampler import sample_layer_graphs
@@ -29,21 +31,21 @@ def bench(n, e, Pg, M, seed=0, name=""):
     print(f"CSV,fig15/{name},{t*1e6:.1f},edges_per_s_per_dev={eps:.0f};edges={g.n_edges}")
 
 # weak scaling: edges proportional to devices
-for Pg in (1, 2, 4, 8):
-    n = 1024 * Pg
+for Pg in (1, 2) if SMOKE else (1, 2, 4, 8):
+    n = (256 if SMOKE else 1024) * Pg
     bench(n, n * 16, Pg, 1, name=f"weak/p{Pg}")
 
 # strong scaling on fixed graphs
-for name in ("ogbn-products", "social-spammer"):
-    src, dst, n = make_dataset(name, scale=0.25)
-    n -= n % 8
-    keep = (src < n) & (dst < n)
-    g = csr_from_edges(src[keep], dst[keep], n)
+for name in ("ogbn-products",) if SMOKE else ("ogbn-products",
+                                              "social-spammer"):
+    src, dst, n = make_dataset(name, scale=0.05 if SMOKE else 0.25)
+    src, dst, n = truncate_to_multiple(src, dst, n, 8)
+    g = csr_from_edges(src, dst, n)
     lgs = sample_layer_graphs(g, fanout=8, n_layers=3, seed=0)
     D = 64
     X = np.random.default_rng(0).standard_normal((n, D), dtype=np.float32)
     params = init_gcn(jax.random.PRNGKey(0), [D, D, D, D])
-    for Pg in (2, 4, 8):
+    for Pg in (2,) if SMOKE else (2, 4, 8):
         mesh = make_host_mesh(Pg, 1)
         eng = DistributedLayerwise(mesh, lgs, "gcn", params)
         jax.block_until_ready(eng.infer(X))
@@ -56,9 +58,5 @@ for name in ("ogbn-products", "social-spammer"):
 """
 
 
-def run():
-    out = run_devices_subprocess(_SCRIPT, n_devices=8, timeout=3000)
-    for line in out.splitlines():
-        if line.startswith("CSV,"):
-            _, name, us, derived = line.split(",", 3)
-            emit(name, float(us), derived)
+def run(smoke: bool = False):
+    run_dist_script(_SCRIPT, smoke)

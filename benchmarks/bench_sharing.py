@@ -8,9 +8,11 @@ from repro.core.sampler import sample_layer_graphs
 from repro.core.sharing import sharing_table, sharing_vs_batch_size
 
 
-def run():
-    for name in ("ogbn-products", "social-spammer", "ogbn-papers100M"):
-        src, dst, n = make_dataset(name, scale=0.25)
+def run(smoke: bool = False):
+    names = (("ogbn-products",) if smoke
+             else ("ogbn-products", "social-spammer", "ogbn-papers100M"))
+    for name in names:
+        src, dst, n = make_dataset(name, scale=0.05 if smoke else 0.25)
         g = csr_from_edges(src, dst, n)
         lgs = sample_layer_graphs(g, fanout=8, n_layers=3, seed=0)
         bs = max(32, int(0.06 * n))
@@ -19,8 +21,9 @@ def run():
              f"deal={tab['deal']:.3f};dgi={tab['dgi_batched']:.3f};"
              f"p3={tab['p3']:.3f};salientpp={tab['salientpp']:.3f}")
         t2, curve = time_host(
-            lambda: sharing_vs_batch_size(lgs,
-                                          fractions=(0.01, 0.06, 0.25, 1.0)),
+            lambda: sharing_vs_batch_size(
+                lgs, fractions=(0.06, 1.0) if smoke
+                else (0.01, 0.06, 0.25, 1.0)),
             iters=1)
         emit(f"fig5/sharing_vs_batch/{name}", t2 * 1e6,
              ";".join(f"{f}:{v:.3f}" for f, v in curve.items()))

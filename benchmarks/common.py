@@ -44,6 +44,19 @@ def time_host(fn: Callable, *args, iters: int = 3):
     return ts[len(ts) // 2], out
 
 
+def run_dist_script(script: str, smoke: bool = False, n_devices: int = 8,
+                    timeout: int = 3000) -> None:
+    """Fill the @SMOKE@ token, run the script under a forced host-device
+    count, and emit its ``CSV,name,us,derived`` rows — the shared
+    protocol of every subprocess-mesh bench."""
+    out = run_devices_subprocess(script.replace("@SMOKE@", str(int(smoke))),
+                                 n_devices=n_devices, timeout=timeout)
+    for line in out.splitlines():
+        if line.startswith("CSV,"):
+            _, name, us, derived = line.split(",", 3)
+            emit(name, float(us), derived)
+
+
 def run_devices_subprocess(script: str, n_devices: int = 8,
                            timeout: int = 1800) -> str:
     """Run a python snippet under a forced host-device count; returns

@@ -1,12 +1,17 @@
 """Benchmark harness — one module per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig16-19,fig20]
+                                          [--executor ref|pallas|dist]
+                                          [--smoke]
 
-Prints ``name,us_per_call,derived`` CSV rows (also saved to
-results/bench.csv).
+Prints ``name,us_per_call,derived`` CSV rows.  Real runs MERGE their rows
+into results/bench.csv by name (so partial/--only/--executor runs never
+clobber other rows); ``--smoke`` runs every registered bench at tiny
+shapes as a CI liveness check and writes nothing.
 """
 import argparse
 import importlib
+import inspect
 import pathlib
 import sys
 import traceback
@@ -27,29 +32,74 @@ MODULES = {
     "fig3": "benchmarks.bench_breakdown",
     "incremental": "benchmarks.bench_incremental",
 }
+ALIASES = {"e2e": "fig14"}
+
+
+def _merge_csv(path: pathlib.Path, rows) -> None:
+    """Merge rows into the CSV by name: replace same-name rows in place,
+    append new ones, keep everything else."""
+    header = "name,us_per_call,derived"
+    old = []
+    if path.exists():
+        old = [ln for ln in path.read_text().splitlines()[1:] if ln]
+    new_by_name = {r.split(",", 1)[0]: r for r in rows}   # last write wins
+    out, seen = [], set()
+    for ln in old:
+        name = ln.split(",", 1)[0]
+        if name in seen:                     # heal pre-existing dupes
+            continue
+        seen.add(name)
+        out.append(new_by_name.pop(name, ln))
+    appended = set()
+    for r in rows:
+        name = r.split(",", 1)[0]
+        if name in new_by_name and name not in appended:
+            out.append(new_by_name[name])
+            appended.add(name)
+    path.write_text(header + "\n" + "\n".join(out) + "\n")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("keys", nargs="*",
+                    help="bench keys (same as --only), e.g. `run.py e2e`")
     ap.add_argument("--only", default=None,
                     help="comma list of keys: " + ",".join(MODULES))
+    ap.add_argument("--executor", default="ref",
+                    choices=["ref", "pallas", "dist"],
+                    help="backend for benches that support retargeting")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, all benches, no bench.csv write "
+                         "(CI liveness check)")
     args = ap.parse_args()
-    keys = args.only.split(",") if args.only else list(MODULES)
+    wanted = list(args.keys) + (args.only.split(",") if args.only else [])
+    keys = [ALIASES.get(k, k) for k in wanted] if wanted else list(MODULES)
+    keys = list(dict.fromkeys(keys))         # dedupe, keep order
+    unknown = [k for k in keys if k not in MODULES]
+    if unknown:
+        sys.exit(f"unknown bench key(s) {unknown}; valid: "
+                 f"{', '.join(list(MODULES) + list(ALIASES))}")
     print("name,us_per_call,derived")
     failures = []
     for k in keys:
         mod = importlib.import_module(MODULES[k])
         print(f"# === {k} ({MODULES[k]}) ===", flush=True)
         try:
-            mod.run()
+            sig = inspect.signature(mod.run).parameters
+            kw = {}
+            if "smoke" in sig:
+                kw["smoke"] = args.smoke
+            if "executor" in sig:
+                kw["executor"] = args.executor
+            mod.run(**kw)
         except Exception as e:
             failures.append((k, e))
             print(f"# FAILED {k}: {e}")
             traceback.print_exc()
-    out = pathlib.Path(__file__).resolve().parents[1] / "results"
-    out.mkdir(exist_ok=True)
-    (out / "bench.csv").write_text(
-        "name,us_per_call,derived\n" + "\n".join(common.ROWS) + "\n")
+    if not args.smoke and common.ROWS:
+        out = pathlib.Path(__file__).resolve().parents[1] / "results"
+        out.mkdir(exist_ok=True)
+        _merge_csv(out / "bench.csv", common.ROWS)
     if failures:
         sys.exit(f"{len(failures)} benchmark group(s) failed: "
                  f"{[k for k, _ in failures]}")

@@ -1,4 +1,4 @@
-"""GNN models on top of the DEAL primitives: GCN, dot-GAT, GraphSAGE.
+"""GNN models: parameter initializers and the DECLARATIVE layer specs.
 
 The paper evaluates 3-layer GCN and GAT (4 heads).  Our GAT uses dot-product
 attention (q.k per sampled edge) so that edge scoring exercises the SDDMM
@@ -6,10 +6,19 @@ primitive exactly as §3.4 describes; classic additive GAT decomposes into
 node terms and would never need SDDMM.  Heads are laid out head-major in the
 feature dim so each `model` shard belongs to one head (requires M % heads
 == 0 in the distributed engine).
+
+Each model's per-layer math is defined ONCE, as a sequence of declarative
+layer ops (gemm / spmm / attn_scores / edge_softmax / attend / add) over
+two input slots — ``h_tgt`` (rows being produced) and ``h_src`` (rows
+being aggregated from; identical to ``h_tgt`` in full-graph inference,
+the gathered universe in row-subset delta refresh).  ``core.ops``
+interprets the spec against one of the interchangeable executors
+(ref / pallas / dist), so no engine reimplements the layer math.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List
+import dataclasses
+from typing import Any, Callable, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -65,12 +74,78 @@ def masked_softmax(scores: jax.Array, mask: jax.Array) -> jax.Array:
 
 
 def gat_head_scores(q, kf, nbr, mask, heads: int):
-    """Per-head dot scores (N, F, h) from full-width q/k (single host)."""
+    """Per-head dot scores (N, F, h) from full-width q/k (single host).
+    kf rows may outnumber q rows (row-subset universe gather)."""
     N, D = q.shape
     dh = D // heads
     qh = q.reshape(N, heads, dh)
-    kh = kf.reshape(N, heads, dh)
+    kh = kf.reshape(-1, heads, dh)
     kn = jnp.take(kh, nbr.reshape(-1), axis=0).reshape(
         nbr.shape + (heads, dh))
     s = jnp.einsum("nhd,nfhd->nfh", qh, kn) / jnp.sqrt(jnp.float32(dh))
     return s
+
+
+# ----------------------------------------------------------------------
+# declarative layer specs (executed by core.ops — see module docstring)
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerOp:
+    """One declarative op inside a layer program.
+
+    kind     gemm | spmm | add | attn_scores | edge_softmax | attend
+    out      env slot written
+    src      env slots read ("h_tgt"/"h_src" are the layer inputs)
+    param    weight matrix (gemm only)
+    """
+    kind: str
+    out: str
+    src: Tuple[str, ...] = ()
+    param: Any = None
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    ops: Tuple[LayerOp, ...]
+    out: str = "h"
+
+
+@dataclasses.dataclass
+class ModelSpec:
+    """One model == a sequence of LayerSpecs + head count + activation
+    (applied between layers, not after the last)."""
+    model: str
+    layers: List[LayerSpec]
+    heads: int
+    activation: Callable
+
+
+def model_spec(model: str, params: Dict[str, Any]) -> ModelSpec:
+    """The single definition of gcn/sage/gat layer math, as data."""
+    if model == "gcn":
+        layers = [LayerSpec(ops=(
+            LayerOp("gemm", "hw", ("h_src",), w),
+            LayerOp("spmm", "h", ("hw",)),
+        )) for w in params["w"]]
+        return ModelSpec("gcn", layers, heads=1, activation=jax.nn.relu)
+    if model == "sage":
+        layers = [LayerSpec(ops=(
+            LayerOp("spmm", "agg", ("h_src",)),
+            LayerOp("gemm", "own", ("h_tgt",), p["w_self"]),
+            LayerOp("gemm", "nb", ("agg",), p["w_nbr"]),
+            LayerOp("add", "h", ("own", "nb")),
+        )) for p in params["layers"]]
+        return ModelSpec("sage", layers, heads=1, activation=jax.nn.relu)
+    if model == "gat":
+        layers = [LayerSpec(ops=(
+            LayerOp("gemm", "q", ("h_tgt",), p["wq"]),
+            LayerOp("gemm", "k", ("h_src",), p["wk"]),
+            LayerOp("gemm", "v", ("h_src",), p["wv"]),
+            LayerOp("attn_scores", "s", ("q", "k")),
+            LayerOp("edge_softmax", "alpha", ("s",)),
+            LayerOp("attend", "h", ("alpha", "v")),
+        )) for p in params["layers"]]
+        return ModelSpec("gat", layers, heads=int(params.get("heads", 1)),
+                         activation=jax.nn.elu)
+    raise ValueError(f"unknown model {model!r}")

@@ -184,5 +184,14 @@ def make_dataset(name: str, seed: int = 0,
     return src, dst, n
 
 
+def truncate_to_multiple(src: np.ndarray, dst: np.ndarray, n_nodes: int,
+                         mult: int) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Trim the node count to a multiple of ``mult`` (the P*M mesh needs
+    n % P == 0) and drop edges touching the removed tail."""
+    n = n_nodes - n_nodes % mult
+    keep = (src < n) & (dst < n)
+    return src[keep], dst[keep], n
+
+
 def dataset_names():
     return list(_DATASETS)

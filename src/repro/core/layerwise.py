@@ -1,28 +1,32 @@
 """The DEAL engine: layer-by-layer all-node inference (§3.2, Fig 4).
 
-Two engines:
-  * ``local_*`` — single-host pure-jnp (oracle + CPU benchmarks);
-  * ``DistributedLayerwise`` — shard_map on a ("data","model") mesh using
-    the §3.4 primitives and the static CommPlan.
+All engines are thin drivers over the pluggable executor layer
+(``core.ops``): each model's layer math is declared once in
+``gnn_models.model_spec`` and interpreted against a backend —
+
+  * ``local_*`` — single-host engines (oracle + CPU benchmarks); take an
+    ``executor`` argument ("ref" default, "pallas" for the kernels in
+    ``kernels/``);
+  * ``DistributedLayerwise`` — ``DistExecutor`` on a ("data", "model")
+    mesh using the §3.4 primitives and the static CommPlan.
 
 Plus the ego-network BASELINE (DGI/SALIENT++-style batched inference) used
 by the Fig 14 comparison: identical math on the same sampled layer graphs,
 but computed batch-by-batch over multi-hop dependency frontiers, so
 cross-batch redundancy costs real work — exactly the waste DEAL removes.
+The baseline runs through the same executor primitives, so it too can
+retarget backends.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional
+from typing import List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding
-from jax.sharding import PartitionSpec as P
 
-from repro.core import primitives as prim
-from repro.core.gnn_models import gat_head_scores, masked_softmax, mean_weights
-from repro.core.partition import PartitionPlan, build_plan
+from repro.core.gnn_models import mean_weights, model_spec
+from repro.core.ops import DenseIO, DistExecutor, get_executor, run_model
 from repro.core.sampler import LayerGraph
 
 
@@ -30,57 +34,31 @@ from repro.core.sampler import LayerGraph
 # single-host engines
 # ----------------------------------------------------------------------
 
-def local_gcn_infer(layer_graphs: List[LayerGraph], X, params,
-                    activation=jax.nn.relu):
-    H = jnp.asarray(X)
-    L = len(params["w"])
-    for l, w in enumerate(params["w"]):
-        lg = layer_graphs[l]
-        wts = jnp.asarray(mean_weights(lg.mask))
-        H = prim.ref_gemm(H, w)
-        H = prim.ref_spmm(H, wts, jnp.asarray(lg.nbr), jnp.asarray(lg.mask))
-        if l < L - 1:
-            H = activation(H)
-    return H
+def _local_infer(model: str, layer_graphs: List[LayerGraph], X, params,
+                 activation=None, executor="ref"):
+    ex = get_executor(executor)
+    spec = model_spec(model, params)
+    ios = [DenseIO.from_layer_graph(lg)
+           for lg in layer_graphs[:len(spec.layers)]]
+    return run_model(ex, spec, ios, X, activation=activation)
 
 
-def local_gat_infer(layer_graphs: List[LayerGraph], X, params,
-                    activation=jax.nn.elu):
-    H = jnp.asarray(X)
-    heads = params["heads"]
-    L = len(params["layers"])
-    for l, p in enumerate(params["layers"]):
-        lg = layer_graphs[l]
-        nbr, mask = jnp.asarray(lg.nbr), jnp.asarray(lg.mask)
-        q = prim.ref_gemm(H, p["wq"])
-        kf = prim.ref_gemm(H, p["wk"])
-        v = prim.ref_gemm(H, p["wv"])
-        s = gat_head_scores(q, kf, nbr, mask, heads)       # (N,F,h)
-        alpha = masked_softmax(s.transpose(0, 2, 1),
-                               mask[:, None, :]).transpose(0, 2, 1)
-        N, D = v.shape
-        dh = D // heads
-        vn = jnp.take(v.reshape(N, heads, dh), nbr.reshape(-1),
-                      axis=0).reshape(nbr.shape + (heads, dh))
-        H = jnp.einsum("nfh,nfhd->nhd", alpha, vn).reshape(N, D)
-        if l < L - 1:
-            H = activation(H)
-    return H
+def local_gcn_infer(layer_graphs, X, params, activation=jax.nn.relu,
+                    executor="ref"):
+    return _local_infer("gcn", layer_graphs, X, params, activation,
+                        executor)
 
 
-def local_sage_infer(layer_graphs: List[LayerGraph], X, params,
-                     activation=jax.nn.relu):
-    H = jnp.asarray(X)
-    L = len(params["layers"])
-    for l, p in enumerate(params["layers"]):
-        lg = layer_graphs[l]
-        wts = jnp.asarray(mean_weights(lg.mask))
-        agg = prim.ref_spmm(H, wts, jnp.asarray(lg.nbr),
-                            jnp.asarray(lg.mask))
-        H = prim.ref_gemm(H, p["w_self"]) + prim.ref_gemm(agg, p["w_nbr"])
-        if l < L - 1:
-            H = activation(H)
-    return H
+def local_gat_infer(layer_graphs, X, params, activation=jax.nn.elu,
+                    executor="ref"):
+    return _local_infer("gat", layer_graphs, X, params, activation,
+                        executor)
+
+
+def local_sage_infer(layer_graphs, X, params, activation=jax.nn.relu,
+                     executor="ref"):
+    return _local_infer("sage", layer_graphs, X, params, activation,
+                        executor)
 
 
 LOCAL_ENGINES = {"gcn": local_gcn_infer, "gat": local_gat_infer,
@@ -92,9 +70,11 @@ LOCAL_ENGINES = {"gcn": local_gcn_infer, "gat": local_gat_infer,
 # ----------------------------------------------------------------------
 
 def ego_batched_gcn_infer(layer_graphs: List[LayerGraph], X, params,
-                          batch_size: int, activation=jax.nn.relu):
+                          batch_size: int, activation=jax.nn.relu,
+                          executor="ref"):
     """Identical outputs to local_gcn_infer, computed per target batch over
     multi-hop frontiers; work scales with the summed frontier sizes."""
+    ex = get_executor(executor)
     X = jnp.asarray(X)
     N = layer_graphs[0].n_nodes
     L = len(params["w"])
@@ -116,13 +96,13 @@ def ego_batched_gcn_infer(layer_graphs: List[LayerGraph], X, params,
             lg = layer_graphs[l]
             nxt = needed[l + 1]
             work_rows += cur.size
-            Hw = prim.ref_gemm(H, w)
+            Hw = ex.gemm(H, w)
             # remap the layer graph of `nxt` onto positions in `cur`
             pos = np.searchsorted(cur, lg.nbr[nxt])
             pos = np.clip(pos, 0, cur.size - 1)
             valid = lg.mask[nxt] & (cur[pos] == lg.nbr[nxt])
             wts = jnp.asarray(mean_weights(lg.mask[nxt]) * valid)
-            H = prim.ref_spmm(Hw, wts, jnp.asarray(pos), jnp.asarray(valid))
+            H = ex.spmm(Hw, wts, DenseIO(pos, valid))
             if l < L - 1:
                 H = activation(H)
             cur = nxt
@@ -135,7 +115,8 @@ def ego_batched_gcn_infer(layer_graphs: List[LayerGraph], X, params,
 # ----------------------------------------------------------------------
 
 class DistributedLayerwise:
-    """DEAL distributed inference on a ("data","model") mesh."""
+    """DEAL distributed inference: a thin driver binding the model spec
+    to a ``DistExecutor`` on a ("data", "model") mesh."""
 
     def __init__(self, mesh, layer_graphs: List[LayerGraph], model: str,
                  params, *, spmm_variant: str = "deal",
@@ -144,82 +125,16 @@ class DistributedLayerwise:
         self.mesh = mesh
         self.model = model
         self.params = params
-        self.P = mesh.shape["data"]
-        self.M = mesh.shape["model"]
-        self.plan: PartitionPlan = build_plan(layer_graphs, self.P, self.M)
         self.layer_graphs = layer_graphs
-        self._gemm = prim.make_gemm(mesh, gemm_variant)
-        self._spmm = [prim.make_spmm(mesh, lp, spmm_variant, grouped)
-                      for lp in self.plan.layers]
-        if model == "gat":
-            self._sddmm = [prim.make_sddmm(mesh, lp, sddmm_variant)
-                           for lp in self.plan.layers]
-        self._dev_plans = [prim.plan_device_arrays(lp)
-                           for lp in self.plan.layers]
-        self._row_spec = NamedSharding(mesh, P("data", None))
-        self._hd_spec = NamedSharding(mesh, P("data", "model"))
-
-    def _put(self, x, spec):
-        return jax.device_put(jnp.asarray(x), spec)
-
-    def _spmm_args(self, l, variant="deal"):
-        d = self._dev_plans[l]
-        if variant == "graph_exchange":
-            return (d["mirror_src"], d["edge_dst"], d["edge_slot"],
-                    d["edge_mask"])
-        return (d["send_local"], d["edge_dst"], d["edge_slot"],
-                d["edge_pos"], d["edge_mask"])
+        self.ex = DistExecutor(mesh, spmm_variant=spmm_variant,
+                               gemm_variant=gemm_variant,
+                               sddmm_variant=sddmm_variant, grouped=grouped)
+        self.P = self.ex.P
+        self.M = self.ex.M
+        self.spec = model_spec(model, params)
+        self.ios = self.ex.bind(layer_graphs[:len(self.spec.layers)],
+                                need_sddmm=(model == "gat"))
+        self.plan = self.ex.plan
 
     def infer(self, X) -> jax.Array:
-        H = self._put(X, self._hd_spec)
-        if self.model == "gcn":
-            ws = self.params["w"]
-            L = len(ws)
-            for l, w in enumerate(ws):
-                wts = self._put(mean_weights(self.layer_graphs[l].mask),
-                                self._row_spec)
-                H = self._gemm(H, jnp.asarray(w))
-                H = self._spmm[l](H, wts, *self._spmm_args(l))
-                if l < L - 1:
-                    H = jax.nn.relu(H)
-            return H
-        if self.model == "gat":
-            return self._infer_gat(H)
-        if self.model == "sage":
-            return self._infer_sage(H)
-        raise ValueError(self.model)
-
-    def _infer_sage(self, H):
-        layers = self.params["layers"]
-        L = len(layers)
-        for l, p in enumerate(layers):
-            wts = self._put(mean_weights(self.layer_graphs[l].mask),
-                            self._row_spec)
-            agg = self._spmm[l](H, wts, *self._spmm_args(l))
-            H = self._gemm(H, jnp.asarray(p["w_self"])) + \
-                self._gemm(agg, jnp.asarray(p["w_nbr"]))
-            if l < L - 1:
-                H = jax.nn.relu(H)
-        return H
-
-    def _infer_gat(self, H):
-        layers = self.params["layers"]
-        heads = self.params["heads"]
-        assert self.M % heads == 0, "feature parts must align to heads"
-        L = len(layers)
-        for l, p in enumerate(layers):
-            lg = self.layer_graphs[l]
-            mask = self._put(lg.mask.astype(np.float32), self._row_spec)
-            q = self._gemm(H, jnp.asarray(p["wq"]))
-            kf = self._gemm(H, jnp.asarray(p["wk"]))
-            v = self._gemm(H, jnp.asarray(p["wv"]))
-            # NOTE: the distributed engine scores edges with the FULL-width
-            # dot (heads=1 semantics; the psum over `model` assembles the
-            # full-D dot product) — matches local_gat_infer with heads=1.
-            scores = self._sddmm[l](q, kf, *self._spmm_args(l))
-            D = layers[l]["wq"].shape[1]
-            alpha = masked_softmax(scores / np.sqrt(D), mask > 0)
-            H = self._spmm[l](v, alpha, *self._spmm_args(l))
-            if l < L - 1:
-                H = jax.nn.elu(H)
-        return H
+        return run_model(self.ex, self.spec, self.ios, X)

@@ -1,0 +1,403 @@
+"""The pluggable layer-op executor layer (InferTurbo-style retargeting).
+
+One layer's semantics — the GEMM -> SPMM / SDDMM dataflow over a sampled
+layer graph (Deal §3.4) — is declared once per model in
+``gnn_models.model_spec`` and executed here against one of three
+interchangeable backends:
+
+  ``RefExecutor``     pure-jnp oracle (the ``kernels.ref`` primitives);
+                      bitwise-identical to the pre-executor engines.
+  ``PallasExecutor``  the Pallas SPMM/SDDMM kernels from ``kernels/``:
+                      compiled on TPU, interpret mode elsewhere.  Pads
+                      rows/columns to kernel block multiples internally,
+                      so non-aligned N/D shapes just work.
+  ``DistExecutor``    the §3.4 shard_map primitives on a (data, model)
+                      mesh with the static CommPlan — plus a ROW-SUBSET
+                      mode (``run_rows``) that executes one layer for a
+                      frontier of rows with a per-partition frontier
+                      split (the ROADMAP "distributed delta refresh").
+
+Executor primitives take a graph binding ``io`` object:
+``DenseIO`` (neighbor matrix + mask indexing the source rows directly)
+for the single-host executors, ``DistIO`` (plan tensors + sharded edge
+weights) for the mesh.  ``run_layer`` interprets a ``LayerSpec`` over an
+executor; ``run_model`` drives a whole forward pass.  The source slot
+``h_src`` and target slot ``h_tgt`` decouple so the same spec serves
+full-graph inference (h_src is h_tgt) and delta refresh (h_src is the
+gathered universe) — see ``gnnserve.delta``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import primitives as prim
+from repro.core.gnn_models import (LayerSpec, ModelSpec, gat_head_scores,
+                                   masked_softmax, mean_weights)
+from repro.core.partition import build_plan, build_subset_plan
+from repro.core.sampler import LayerGraph
+from repro.kernels import ops as kops
+
+
+# ----------------------------------------------------------------------
+# graph bindings
+# ----------------------------------------------------------------------
+
+class DenseIO:
+    """Graph binding for the single-host executors: a fixed-fanout
+    neighbor matrix whose ids index the spmm/sddmm source rows directly
+    (global ids in full-graph mode, universe positions in delta mode)."""
+
+    def __init__(self, nbr: np.ndarray, mask: np.ndarray):
+        self.nbr_np = np.asarray(nbr)
+        self.mask_np = np.asarray(mask)
+        self.nbr = jnp.asarray(self.nbr_np)
+        self.mask = jnp.asarray(self.mask_np)
+        self._mean_w = None
+
+    @classmethod
+    def from_layer_graph(cls, lg: LayerGraph) -> "DenseIO":
+        return cls(lg.nbr, lg.mask)
+
+    @property
+    def mean_w(self):
+        """Mean-aggregation edge weights (computed lazily: gat never
+        reads them)."""
+        if self._mean_w is None:
+            self._mean_w = jnp.asarray(mean_weights(self.mask_np))
+        return self._mean_w
+
+
+@dataclasses.dataclass
+class DistIO:
+    """Graph binding for DistExecutor: the jitted collectives plus the
+    plan tensors they consume, and the sharded per-row edge weights.
+    ``args`` follows the spmm variant's signature; ``sddmm_args`` is
+    always the deal-style 5-tuple the SDDMM collective expects."""
+    spmm: Callable
+    args: Tuple                      # plan arrays, sharded over "data"
+    mean_w: Any                      # (N, F) mean weights, row-sharded
+    mask_f: Any                      # (N, F) float mask, row-sharded (gat)
+    sddmm: Optional[Callable] = None
+    sddmm_args: Tuple = ()
+
+
+# ----------------------------------------------------------------------
+# spec interpreter
+# ----------------------------------------------------------------------
+
+def run_layer(ex, layer: LayerSpec, io, h_tgt, h_src, heads: int = 1):
+    """Execute one LayerSpec.  ``h_tgt``/``h_src`` may be zero-arg
+    callables, resolved on first use (delta refresh reads target rows
+    from the store only for models that reference them)."""
+    env: Dict[str, Any] = {"h_tgt": h_tgt, "h_src": h_src}
+
+    def get(name):
+        v = env[name]
+        if callable(v):
+            v = v()
+            env[name] = v
+        return v
+
+    for op in layer.ops:
+        if op.kind == "gemm":
+            out = ex.gemm(get(op.src[0]), op.param)
+        elif op.kind == "spmm":
+            out = ex.spmm(get(op.src[0]), io.mean_w, io)
+        elif op.kind == "add":
+            out = get(op.src[0]) + get(op.src[1])
+        elif op.kind == "attn_scores":
+            out = ex.attn_scores(get(op.src[0]), get(op.src[1]), io, heads)
+        elif op.kind == "edge_softmax":
+            out = ex.edge_softmax(get(op.src[0]), io)
+        elif op.kind == "attend":
+            out = ex.attend(get(op.src[0]), get(op.src[1]), io, heads)
+        else:
+            raise ValueError(f"unknown layer op {op.kind!r}")
+        env[op.out] = out
+    return env[layer.out]
+
+
+def run_model(ex, spec: ModelSpec, ios: Sequence, X,
+              activation: Optional[Callable] = None):
+    """Full forward pass: layer l reads/writes the same row set
+    (h_src == h_tgt == H), activation between layers."""
+    act = activation or spec.activation
+    H = ex.prepare(X)
+    L = len(spec.layers)
+    for l, layer in enumerate(spec.layers):
+        H = run_layer(ex, layer, ios[l], H, H, spec.heads)
+        if l < L - 1:
+            H = act(H)
+    return H
+
+
+# ----------------------------------------------------------------------
+# RefExecutor — the jnp oracle
+# ----------------------------------------------------------------------
+
+class RefExecutor:
+    """Single-host pure-jnp backend; op-for-op the pre-refactor
+    ``local_*_infer`` / delta math, so outputs are bitwise-preserved."""
+
+    name = "ref"
+
+    def prepare(self, X):
+        return jnp.asarray(X)
+
+    def gemm(self, H, W):
+        return prim.ref_gemm(H, jnp.asarray(W))
+
+    def spmm(self, H_src, w_edge, io: DenseIO):
+        return prim.ref_spmm(H_src, w_edge, io.nbr, io.mask)
+
+    def attn_scores(self, q, k, io: DenseIO, heads: int):
+        """Per-head scaled dot scores (R, F, h); k rows may outnumber q
+        rows (universe gather)."""
+        return gat_head_scores(q, k, io.nbr, io.mask, heads)
+
+    def edge_softmax(self, s, io: DenseIO):
+        return masked_softmax(s.transpose(0, 2, 1),
+                              io.mask[:, None, :]).transpose(0, 2, 1)
+
+    def attend(self, alpha, v, io: DenseIO, heads: int):
+        D = v.shape[-1]
+        dh = D // heads
+        vn = jnp.take(v.reshape(-1, heads, dh), io.nbr.reshape(-1),
+                      axis=0).reshape(io.nbr.shape + (heads, dh))
+        return jnp.einsum("nfh,nfhd->nhd", alpha, vn).reshape(
+            alpha.shape[0], D)
+
+
+# ----------------------------------------------------------------------
+# PallasExecutor — the kernels in kernels/ (compiled on TPU)
+# ----------------------------------------------------------------------
+
+class PallasExecutor(RefExecutor):
+    """Routes spmm/sddmm through the Pallas kernels (``kernels.ops``
+    dispatch: compiled on TPU, interpret mode elsewhere).  GEMM stays on
+    XLA's MXU path — a hand-written matmul kernel would only lose.
+    Rows are padded to ``block_n`` multiples and feature columns to a
+    block that divides them, then sliced back — non-aligned shapes work.
+    """
+
+    name = "pallas"
+
+    def __init__(self, block_n: int = 8, block_d: int = 128,
+                 use_kernel: bool = True):
+        self.block_n = block_n
+        self.block_d = block_d
+        self.use_kernel = use_kernel
+
+    def _pad_rows(self, a, R_pad, fill=0):
+        if a.shape[0] == R_pad:
+            return a
+        pad = [(0, R_pad - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
+        return jnp.pad(a, pad, constant_values=fill)
+
+    def _spmm_kernel(self, H_src, w_edge, nbr, mask):
+        R, F = nbr.shape
+        D = H_src.shape[1]
+        Rp = -(-R // self.block_n) * self.block_n
+        bd = math.gcd(D, self.block_d)
+        Dp = D
+        if bd < 8:                       # awkward width: pad columns
+            Dp = -(-D // 8) * 8
+            bd = math.gcd(Dp, self.block_d)
+            H_src = jnp.pad(H_src, ((0, 0), (0, Dp - D)))
+        out = kops.spmm(H_src, self._pad_rows(w_edge, Rp),
+                        self._pad_rows(nbr, Rp),
+                        self._pad_rows(mask, Rp, fill=False),
+                        use_kernel=self.use_kernel,
+                        block_n=self.block_n, block_d=bd)
+        return out[:R, :D]
+
+    def spmm(self, H_src, w_edge, io: DenseIO):
+        return self._spmm_kernel(H_src, w_edge, io.nbr, io.mask)
+
+    def attn_scores(self, q, k, io: DenseIO, heads: int):
+        """Per-head SDDMM kernel calls over head-major column slices."""
+        R = io.nbr.shape[0]
+        D = q.shape[1]
+        dh = D // heads
+        Rp = -(-R // self.block_n) * self.block_n
+        nbr = self._pad_rows(io.nbr, Rp)
+        mask = self._pad_rows(io.mask, Rp, fill=False)
+        qp = self._pad_rows(q, Rp)
+        per_head = [kops.sddmm(qp[:, h * dh:(h + 1) * dh],
+                               k[:, h * dh:(h + 1) * dh], nbr, mask,
+                               use_kernel=self.use_kernel,
+                               block_n=self.block_n)
+                    for h in range(heads)]
+        s = jnp.stack(per_head, axis=-1)[:R]            # (R, F, h)
+        return s / jnp.sqrt(jnp.float32(dh))
+
+    def attend(self, alpha, v, io: DenseIO, heads: int):
+        D = v.shape[-1]
+        dh = D // heads
+        outs = [self._spmm_kernel(v[:, h * dh:(h + 1) * dh],
+                                  alpha[..., h], io.nbr, io.mask)
+                for h in range(heads)]
+        return jnp.concatenate(outs, axis=-1)
+
+
+# ----------------------------------------------------------------------
+# DistExecutor — shard_map primitives + CommPlan, full or row-subset
+# ----------------------------------------------------------------------
+
+class DistExecutor:
+    """Deal's distributed backend on a ("data", "model") mesh.
+
+    Full-graph mode: ``bind`` builds the static CommPlan for a list of
+    layer graphs and returns per-layer ``DistIO``s.  Row-subset mode:
+    ``run_rows`` executes ONE layer for a frontier of rows, splitting
+    the frontier per partition by the same 1-D ownership as the full
+    plan — per-row reduction order (and hence bitwise output) matches a
+    full epoch through this executor.
+
+    GAT note: edge scores use the full-width dot (heads=1 semantics; the
+    psum over `model` assembles the full-D product) — matching the
+    pre-refactor distributed engine.
+    """
+
+    name = "dist"
+
+    def __init__(self, mesh, *, spmm_variant: str = "deal",
+                 gemm_variant: str = "deal", sddmm_variant: str = "deal",
+                 grouped: bool = True, subset_floor: int = 64):
+        self.mesh = mesh
+        self.P = mesh.shape["data"]
+        self.M = mesh.shape["model"]
+        # pow2-bucket floor for row-subset plans: higher = fewer compiled
+        # shapes across refreshes, more padded compute per refresh
+        self.subset_floor = subset_floor
+        self.spmm_variant = spmm_variant
+        self.sddmm_variant = sddmm_variant
+        self._gemm = prim.make_gemm(mesh, gemm_variant)
+        self._spmm = prim.make_spmm_p(mesh, self.P, spmm_variant, grouped)
+        self._sddmm_cache: Dict[int, Callable] = {}
+        self._row_spec = NamedSharding(mesh, P("data", None))
+        self._hd_spec = NamedSharding(mesh, P("data", "model"))
+        self.plan = None
+
+    # -- plumbing -------------------------------------------------------
+    def _put(self, x, spec):
+        return jax.device_put(jnp.asarray(x), spec)
+
+    def _sddmm_fn(self, fanout: int) -> Callable:
+        if fanout not in self._sddmm_cache:
+            self._sddmm_cache[fanout] = prim.make_sddmm_p(
+                self.mesh, self.P, fanout, self.sddmm_variant)
+        return self._sddmm_cache[fanout]
+
+    def _deal_args(self, dev: Dict[str, Any]) -> Tuple:
+        return (dev["send_local"], dev["edge_dst"], dev["edge_slot"],
+                dev["edge_pos"], dev["edge_mask"])
+
+    def _plan_args(self, dev: Dict[str, Any]) -> Tuple:
+        if self.spmm_variant == "graph_exchange":
+            return (dev["mirror_src"], dev["edge_dst"], dev["edge_slot"],
+                    dev["edge_mask"])
+        return self._deal_args(dev)
+
+    # -- full-graph binding ---------------------------------------------
+    def bind(self, layer_graphs: Sequence[LayerGraph],
+             need_sddmm: bool = False) -> List[DistIO]:
+        self.plan = build_plan(list(layer_graphs), self.P, self.M)
+        ios = []
+        for l, lp in enumerate(self.plan.layers):
+            lg = layer_graphs[l]
+            dev = prim.plan_device_arrays(lp)
+            ios.append(DistIO(
+                spmm=self._spmm,
+                args=self._plan_args(dev),
+                mean_w=self._put(mean_weights(lg.mask), self._row_spec),
+                mask_f=self._put(lg.mask.astype(np.float32),
+                                 self._row_spec),
+                sddmm=self._sddmm_fn(lp.fanout) if need_sddmm else None,
+                sddmm_args=self._deal_args(dev) if need_sddmm else ()))
+        return ios
+
+    # -- executor primitives --------------------------------------------
+    def prepare(self, X):
+        return self._put(X, self._hd_spec)
+
+    def gemm(self, H, W):
+        return self._gemm(H, jnp.asarray(W))
+
+    def spmm(self, H_src, w_edge, io: DistIO):
+        return io.spmm(H_src, w_edge, *io.args)
+
+    def attn_scores(self, q, k, io: DistIO, heads: int):
+        assert self.M % heads == 0, "feature parts must align to heads"
+        scores = io.sddmm(q, k, *io.sddmm_args)
+        D = q.shape[1]                   # full width (global array)
+        return scores / np.sqrt(D)
+
+    def edge_softmax(self, s, io: DistIO):
+        return masked_softmax(s, io.mask_f > 0)
+
+    def attend(self, alpha, v, io: DistIO, heads: int):
+        return io.spmm(v, alpha, *io.args)
+
+    # -- row-subset mode (distributed delta refresh) --------------------
+    def run_rows(self, layer: LayerSpec, lg: LayerGraph, rows: np.ndarray,
+                 read_level: Callable, level: int, heads: int = 1):
+        """Execute ``layer`` for the sorted row subset ``rows``, frontier
+        split per partition.  ``read_level(level, ids)`` supplies input
+        rows (the store's staged view during a refresh).  Returns the
+        (pre-activation) global padded output plus (take, n_src): the
+        real-row indices into it and the universe-row work count."""
+        assert self.spmm_variant == "deal", \
+            "row-subset mode needs the unique-row exchange plan"
+        assert self.M & (self.M - 1) == 0, \
+            "model axis must be a power of two (pad buckets)"
+        sp = build_subset_plan(lg, rows, self.P, m_align=self.M,
+                               floor=self.subset_floor)
+        args = (jnp.asarray(sp.send_local), jnp.asarray(sp.edge_dst),
+                jnp.asarray(sp.edge_slot), jnp.asarray(sp.edge_pos),
+                jnp.asarray(sp.edge_mask))
+        io = DistIO(
+            spmm=self._spmm,
+            args=args,
+            sddmm_args=args,
+            mean_w=self._put(
+                mean_weights(sp.row_mask.reshape(-1, sp.fanout)),
+                self._row_spec),
+            mask_f=self._put(
+                sp.row_mask.reshape(-1, sp.fanout).astype(np.float32),
+                self._row_spec),
+            sddmm=self._sddmm_fn(sp.fanout))
+        H_src = self._put(read_level(level, sp.src_ids.reshape(-1)),
+                          self._hd_spec)
+        h_tgt = lambda: self._put(                       # noqa: E731
+            read_level(level, sp.row_ids.reshape(-1)), self._hd_spec)
+        H = run_layer(self, layer, io, h_tgt, H_src, heads)
+        return H, sp.take, sp.n_src_rows
+
+
+# ----------------------------------------------------------------------
+# factory
+# ----------------------------------------------------------------------
+
+def get_executor(executor="ref", *, mesh=None, **kw):
+    """Resolve an executor name ("ref" | "pallas" | "dist") or pass an
+    instance through.  "dist" needs a mesh."""
+    if not isinstance(executor, str):
+        return executor
+    if executor == "ref":
+        return RefExecutor()
+    if executor == "pallas":
+        return PallasExecutor(**kw)
+    if executor == "dist":
+        if mesh is None:
+            raise ValueError("dist executor needs a mesh= argument")
+        return DistExecutor(mesh, **kw)
+    raise ValueError(f"unknown executor {executor!r}")

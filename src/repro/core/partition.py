@@ -139,6 +139,127 @@ def _layer_plan(lg: LayerGraph, bounds: np.ndarray, P: int) -> LayerPlan:
                      edge_mask=edge_mask, mirror_src=mirror_src)
 
 
+# ----------------------------------------------------------------------
+# row-subset (frontier) plans — the distributed-delta-refresh machinery
+# ----------------------------------------------------------------------
+
+def pad_bucket(n: int, floor: int = 8) -> int:
+    """Pad bucket: next power of two, floored, so varying frontier sizes
+    share a small set of compiled shapes instead of minting one each."""
+    return max(floor, 1 << max(0, int(n - 1).bit_length()))
+
+
+@dataclasses.dataclass
+class SubsetPlan:
+    """Static comm plan for ONE layer restricted to a row subset, with the
+    frontier split per partition by the SAME 1-D ownership as the full
+    plan (so per-row reduction order — and therefore bitwise output —
+    matches a full epoch through the same primitives).
+
+    Row space: each partition p computes its own frontier rows, padded to
+    a common pow2 bucket ``Rmax``; source rows are each partition's
+    universe of requested ids, padded to ``Umax``.  ``edge_pos[p, 0]``
+    indexes the LOCAL source tile (k == 0 consumes it directly);
+    ``edge_pos[p, k>0]`` indexes the ring-step recv buffer, exactly like
+    ``LayerPlan``.
+    """
+    P: int
+    fanout: int
+    row_ids: np.ndarray       # (P, Rmax) int64 global target ids (pads = 0)
+    row_mask: np.ndarray      # (P, Rmax, F) bool fanout masks (False on pads)
+    src_ids: np.ndarray       # (P, Umax) int64 global source ids per owner
+    send_local: np.ndarray    # (P, P, R) int32 positions in sender src tile
+    edge_dst: np.ndarray      # (P, P, E) int32 local target row
+    edge_slot: np.ndarray     # (P, P, E) int32
+    edge_pos: np.ndarray      # (P, P, E) int32
+    edge_mask: np.ndarray     # (P, P, E) bool
+    take: np.ndarray          # indices of real rows in the flat (P*Rmax) out
+    n_src_rows: int           # unpadded universe total (work accounting)
+
+
+def build_subset_plan(lg: LayerGraph, rows: np.ndarray, P: int,
+                      *, m_align: int = 1, floor: int = 8) -> SubsetPlan:
+    """Comm plan for recomputing ``rows`` of one layer on a P-way data
+    axis.  ``rows`` must be sorted unique global ids; ``m_align`` forces
+    the row buckets to a multiple of the model-axis size (the tiled
+    all-to-all GEMM splits rows M ways)."""
+    rows = np.asarray(rows, np.int64)
+    n, F = lg.n_nodes, lg.fanout
+    bounds = partition_nodes(n, P)
+    floor = pad_bucket(max(floor, m_align))
+    split = np.searchsorted(rows, bounds)
+    counts = np.diff(split)
+    Rmax = pad_bucket(int(counts.max()), floor)
+
+    nbr_r, mask_r = lg.nbr[rows], lg.mask[rows]
+    owner = np.searchsorted(bounds, nbr_r, side="right") - 1
+
+    # per-owner source universes (union over all requesting partitions)
+    uni: List[np.ndarray] = []
+    for q in range(P):
+        ids = nbr_r[mask_r & (owner == q)]
+        uni.append(np.unique(ids.astype(np.int64)))
+    Umax = pad_bucket(max(1, max(u.size for u in uni)), floor)
+    src_ids = np.zeros((P, Umax), np.int64)
+    for q in range(P):
+        src_ids[q, :uni[q].size] = uni[q]
+        src_ids[q, uni[q].size:] = bounds[q]      # benign in-range pad
+
+    req: List[List[np.ndarray]] = [[None] * P for _ in range(P)]
+    entries = [[None] * P for _ in range(P)]
+    for p in range(P):
+        sl = slice(split[p], split[p + 1])
+        nbr_p, mask_p, own_p = nbr_r[sl], mask_r[sl], owner[sl]
+        for k in range(P):
+            q = (p + k) % P
+            sel = mask_p & (own_p == q)
+            dst_loc, slot = np.nonzero(sel)
+            ids = nbr_p[sel].astype(np.int64)
+            if k == 0:
+                # local group: positions index the local source tile
+                uniq = np.empty(0, np.int64)
+                pos = np.searchsorted(uni[q], ids)
+            else:
+                uniq_ids, pos = np.unique(ids, return_inverse=True)
+                uniq = np.searchsorted(uni[q], uniq_ids)
+            req[p][k] = uniq
+            entries[p][k] = (dst_loc.astype(np.int32),
+                             slot.astype(np.int32), pos.astype(np.int32))
+    R = pad_bucket(max(1, max(r.size for row in req for r in row)), floor)
+    E = pad_bucket(max(1, max(e[0].size for row in entries for e in row)),
+                   floor)
+
+    send_local = np.zeros((P, P, R), np.int32)
+    edge_dst = np.zeros((P, P, E), np.int32)
+    edge_slot = np.zeros((P, P, E), np.int32)
+    edge_pos = np.zeros((P, P, E), np.int32)
+    edge_mask = np.zeros((P, P, E), bool)
+    row_ids = np.zeros((P, Rmax), np.int64)
+    row_mask = np.zeros((P, Rmax, F), bool)
+    take = []
+    for p in range(P):
+        c = int(counts[p])
+        row_ids[p, :c] = rows[split[p]:split[p + 1]]
+        row_mask[p, :c] = mask_r[split[p]:split[p + 1]]
+        take.append(p * Rmax + np.arange(c))
+        for k in range(P):
+            d, s, pos = entries[p][k]
+            m = d.size
+            edge_dst[p, k, :m] = d
+            edge_slot[p, k, :m] = s
+            edge_pos[p, k, :m] = pos
+            edge_mask[p, k, :m] = True
+            r = req[p][k]
+            send_local[(p + k) % P, k, :r.size] = r
+    return SubsetPlan(P=P, fanout=F, row_ids=row_ids, row_mask=row_mask,
+                      src_ids=src_ids, send_local=send_local,
+                      edge_dst=edge_dst, edge_slot=edge_slot,
+                      edge_pos=edge_pos, edge_mask=edge_mask,
+                      take=np.concatenate(take) if take else
+                      np.empty(0, np.int64),
+                      n_src_rows=int(sum(u.size for u in uni)))
+
+
 def comm_volume(plan: PartitionPlan, d_feature: int, bytes_per: int = 4
                 ) -> dict:
     """Analytic per-layer communication volumes (Tables 1-3 checks)."""

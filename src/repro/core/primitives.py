@@ -6,6 +6,19 @@ Mesh geometry: ("data", "model") == DEAL's (P, M) grid.  All collectives
 are explicit jax.lax calls so the communication schedule is exactly the
 paper's: ring ppermute of requested feature rows (SPMM), two tiled
 all-to-alls (GEMM), edge-scalar psum (SDDMM approach (ii)).
+
+These primitives are consumed through ``core.ops.DistExecutor`` (the
+distributed backend of the pluggable executor layer); the ``make_*_p``
+factories build jitted shard_map calls keyed only on static geometry
+(P, fanout, variant) so one compiled function serves every layer — and
+every row-subset refresh — with the same shapes.  The edge plans are
+runtime arguments, so full-graph plans (``core.partition.build_plan``)
+and frontier-subset plans (``build_subset_plan``) flow through the same
+compiled collectives.
+
+The single-host ``ref_*`` oracles are re-exported from ``kernels.ref``
+— one canonical definition shared with the Pallas kernel tests, so the
+two copies can never drift.
 """
 from __future__ import annotations
 
@@ -17,7 +30,15 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.partition import LayerPlan
+from repro.kernels.ref import gemm_ref as ref_gemm
+from repro.kernels.ref import sddmm_ref as ref_sddmm
+from repro.kernels.ref import spmm_ref as ref_spmm
 from repro.sharding.compat import shard_map
+
+__all__ = [
+    "make_gemm", "make_spmm", "make_spmm_p", "make_sddmm", "make_sddmm_p",
+    "plan_device_arrays", "ref_gemm", "ref_spmm", "ref_sddmm",
+]
 
 
 # ----------------------------------------------------------------------
@@ -88,9 +109,11 @@ def make_gemm(mesh, variant: str = "deal"):
 # SPMM
 # ----------------------------------------------------------------------
 
-def _ring_bufs(H, send_local, P_: int, pipelined: bool = True):
-    """Yield (k, buffer) for every ring step; buffer rows are the rows this
-    device requested from peer (p+k)%P."""
+def _ring_bufs(H, send_local, P_: int):
+    """Return the list of recv buffers for ring steps k = 1..P-1; buffer
+    k-1 holds the rows this device requested from peer (p+k)%P.  All
+    ppermutes are issued before any consumer runs — the monolithic
+    (ungrouped) communication schedule."""
     bufs = []
     for k in range(1, P_):
         rows = jnp.take(H, send_local[k], axis=0)
@@ -109,11 +132,13 @@ def _spmm_deal_local(H, w, send_local, edge_dst, edge_slot, edge_pos,
                      edge_mask, *, P_: int, grouped: bool = True):
     """DEAL SPMM: ship only requested unique rows; grouped accumulation.
 
-    H (n_loc, d_loc); w (n_loc, F) edge weights; plan arrays squeezed to
-    this device: send_local (P, R), edge_* (P, E).
+    H (u_loc, d_loc) source rows; w (r_loc, F) edge weights — output rows
+    follow w, so a frontier subset (r_loc < u_loc) runs through the same
+    compiled collective as the full graph (r_loc == u_loc).  Plan arrays
+    squeezed to this device: send_local (P, R), edge_* (P, E).
     """
-    n_loc, d_loc = H.shape
-    out = jnp.zeros((n_loc, d_loc), jnp.float32)
+    d_loc = H.shape[1]
+    out = jnp.zeros((w.shape[0], d_loc), jnp.float32)
     # group 0: local tile first (Fig 12c — covers pipeline fill)
     out = _accumulate(out, w, H, edge_dst[0], edge_slot[0], edge_pos[0],
                       edge_mask[0])
@@ -148,8 +173,8 @@ def _spmm_graph_exchange_local(H, w, mirror_src, edge_dst, edge_slot,
     """'Exchange G0' baseline (§3.4): the SOURCE owner gathers per-edge rows
     (duplicates included) and ships them to the destination — Z x more
     traffic than DEAL's unique-row exchange."""
-    n_loc, d_loc = H.shape
-    out = jnp.zeros((n_loc, d_loc), jnp.float32)
+    d_loc = H.shape[1]
+    out = jnp.zeros((w.shape[0], d_loc), jnp.float32)
     # k=0: mirror_src == local row ids for the local group
     out = _accumulate(out, w, H, edge_dst[0], edge_slot[0], mirror_src[0],
                       edge_mask[0])
@@ -168,9 +193,11 @@ def _squeeze0(x):
     return x[0]
 
 
-def make_spmm(mesh, lp: LayerPlan, variant: str = "deal",
-              grouped: bool = True):
-    P_ = lp.P
+def make_spmm_p(mesh, P_: int, variant: str = "deal",
+                grouped: bool = True):
+    """Jitted SPMM keyed on static geometry only (P, variant, grouped);
+    the per-layer plan tensors are runtime arguments, so one compiled
+    function serves every layer and every frontier-subset plan."""
     plan_spec = P("data", None, None)
 
     if variant == "allgather":
@@ -201,6 +228,11 @@ def make_spmm(mesh, lp: LayerPlan, variant: str = "deal",
         fn, mesh=mesh,
         in_specs=(P("data", "model"), P("data", None)) + (plan_spec,) * 5,
         out_specs=P("data", "model")))
+
+
+def make_spmm(mesh, lp: LayerPlan, variant: str = "deal",
+              grouped: bool = True):
+    return make_spmm_p(mesh, lp.P, variant, grouped)
 
 
 # ----------------------------------------------------------------------
@@ -254,14 +286,15 @@ def _sddmm_dup_local(q, kf, send_local, edge_dst, edge_slot, edge_pos,
     return attn
 
 
-def make_sddmm(mesh, lp: LayerPlan, variant: str = "deal"):
-    P_, F = lp.P, lp.fanout
+def make_sddmm_p(mesh, P_: int, fanout: int, variant: str = "deal"):
+    """Jitted SDDMM keyed on static geometry only (P, fanout, variant) —
+    see ``make_spmm_p``."""
     local = _sddmm_deal_local if variant == "deal" else _sddmm_dup_local
     plan_spec = P("data", None, None)
 
     def fn(q, kf, send_local, edge_dst, edge_slot, edge_pos, edge_mask):
         return local(q, kf, send_local[0], edge_dst[0], edge_slot[0],
-                     edge_pos[0], edge_mask[0], P_=P_, fanout=F)
+                     edge_pos[0], edge_mask[0], P_=P_, fanout=fanout)
     # approach (i) duplicates the computation, so its output is replicated
     # over `model` by construction — not statically inferable (check_vma).
     return jax.jit(shard_map(
@@ -270,26 +303,14 @@ def make_sddmm(mesh, lp: LayerPlan, variant: str = "deal"):
         out_specs=P("data", None), check_vma=(variant == "deal")))
 
 
+def make_sddmm(mesh, lp: LayerPlan, variant: str = "deal"):
+    return make_sddmm_p(mesh, lp.P, lp.fanout, variant)
+
+
 # ----------------------------------------------------------------------
-# single-host references (oracles for tests; also the CPU bench engine)
+# single-host references: re-exported from kernels.ref (see module
+# docstring) — ref_gemm / ref_spmm / ref_sddmm are bound in the imports.
 # ----------------------------------------------------------------------
-
-def ref_gemm(H, W):
-    return jnp.dot(H, W, preferred_element_type=jnp.float32).astype(H.dtype)
-
-
-def ref_spmm(H, w, nbr, mask):
-    vals = jnp.take(H, nbr.reshape(-1), axis=0).astype(jnp.float32)
-    vals = vals.reshape(nbr.shape + (H.shape[-1],))
-    return ((vals * (w * mask).astype(jnp.float32)[..., None]).sum(axis=1)
-            ).astype(H.dtype)
-
-
-def ref_sddmm(q, kf, nbr, mask):
-    vals = jnp.take(kf, nbr.reshape(-1), axis=0).reshape(
-        nbr.shape + (kf.shape[-1],)).astype(jnp.float32)
-    return (q[:, None, :].astype(jnp.float32) * vals).sum(-1) * mask
-
 
 def plan_device_arrays(lp: LayerPlan) -> Dict[str, Any]:
     """The per-layer plan tensors shipped to devices (leading dim = P,

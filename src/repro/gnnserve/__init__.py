@@ -23,8 +23,10 @@ graph mutates, without re-running full epochs:
                  forward-affected frontier is computed in closed form
                  from reversed fanout matrices (the forward twin of
                  ``core.sharing``'s backward dependency walk), and ONLY
-                 those rows re-run through the existing primitives —
-                 bitwise-identical to a from-scratch epoch.
+                 those rows re-run through the pluggable executor layer
+                 (``core.ops``: ref / pallas / dist with a per-partition
+                 frontier split on the mesh) — bitwise-identical to a
+                 from-scratch epoch through the same executor.
 
   ``engine``     Continuous-batching lookup engine (the fixed-slot
                  pattern of ``serve.engine``): B slots, one fused

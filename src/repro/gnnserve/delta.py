@@ -12,10 +12,20 @@ forward-affected set is computable in closed form BEFORE any compute:
 where ``consumers_l`` is the REVERSE of layer l's fanout matrix (who
 sampled me?) — the same frontier machinery as ``core.sharing``'s
 backward dependency walk, run forward.  Re-inference then re-runs ONLY
-those rows through the existing reference primitives, remapping each
-layer's neighbor ids onto the gathered row set exactly like the
-ego-batched baseline does — so a delta-refreshed row is BITWISE equal to
-a from-scratch epoch (same per-row reductions, same order).
+those rows through the pluggable executor layer (``core.ops``): the
+layer math comes from the same declarative spec as every other engine,
+and the backend is selectable —
+
+  ref / pallas   single-host row-subset mode: neighbor ids remapped onto
+                 the gathered universe exactly like the ego-batched
+                 baseline;
+  dist           ``DistExecutor.run_rows``: the frontier is split per
+                 partition and recomputed through the §3.4 shard_map
+                 primitives on the mesh (a per-refresh SubsetPlan built
+                 over the same 1-D ownership as the full CommPlan).
+
+On every backend a delta-refreshed row is BITWISE equal to a from-scratch
+epoch through the SAME executor (same per-row reductions, same order).
 
 Masked fanout slots are remapped to position 0, never out-of-range:
 jnp's gather fills OOB with NaN and NaN*0 poisons the aggregation.
@@ -28,9 +38,10 @@ from typing import Dict, List, Optional, Sequence
 import jax
 import numpy as np
 
-from repro.core import primitives as prim
-from repro.core.gnn_models import masked_softmax, mean_weights
+from repro.core.gnn_models import model_spec
 from repro.core.graph import Graph
+from repro.core.ops import DenseIO, DistExecutor, get_executor, run_layer
+from repro.core.partition import pad_bucket
 from repro.core.sampler import LayerGraph, draw_fixed_fanout
 from repro.gnnserve.store import EmbeddingStore
 
@@ -108,9 +119,9 @@ def forward_frontier(rev: Sequence[ReverseIndex], feat_dirty: np.ndarray,
 # ----------------------------------------------------------------------
 
 def _pow2(n: int, floor: int = 256) -> int:
-    """Pad bucket: next power of two, floored so tiny frontiers share one
-    compiled shape instead of minting many."""
-    return max(floor, 1 << max(0, int(n - 1).bit_length()))
+    """Pad bucket (``partition.pad_bucket``): floored high so tiny
+    frontiers share one compiled shape instead of minting many."""
+    return pad_bucket(n, floor)
 
 
 def _remap(nbr_rows: np.ndarray, mask_rows: np.ndarray, universe: np.ndarray):
@@ -126,15 +137,18 @@ class DeltaReinference:
 
     ``layer_graphs`` are held by reference and mutated in place by
     ``resample_rows``; reverse indexes for mutated layers are rebuilt
-    lazily at the next refresh.
+    lazily at the next refresh.  ``executor`` selects the backend
+    ("ref" | "pallas" | a ``DistExecutor`` instance for mesh refresh).
     """
 
     def __init__(self, layer_graphs: Sequence[LayerGraph], model: str,
-                 params, *, sample_seed: int = 0):
+                 params, *, sample_seed: int = 0, executor="ref"):
         assert model in ("gcn", "gat", "sage"), model
         self.layer_graphs = list(layer_graphs)
         self.model = model
         self.params = params
+        self.spec = model_spec(model, params)
+        self.executor = get_executor(executor)
         self.sample_seed = sample_seed
         self.rows_gemm = 0
         self._rev: List[Optional[ReverseIndex]] = \
@@ -142,9 +156,7 @@ class DeltaReinference:
 
     @property
     def n_layers(self) -> int:
-        if self.model == "gcn":
-            return len(self.params["w"])
-        return len(self.params["layers"])
+        return len(self.spec.layers)
 
     def _reverse(self, l: int) -> ReverseIndex:
         if self._rev[l] is None:
@@ -166,17 +178,32 @@ class DeltaReinference:
 
     # -- one layer over a row subset ------------------------------------
     def _layer_rows(self, l: int, rows: np.ndarray, read_level) -> np.ndarray:
-        """Recompute layer l's output for `rows`; `read_level(level, ids)`
-        supplies input rows (the store's staged view during a refresh).
+        """Recompute layer l's output for `rows` through the bound
+        executor; `read_level(level, ids)` supplies input rows (the
+        store's staged view during a refresh).
 
-        Row/universe counts are padded to power-of-two buckets so the
-        op-by-op compile cache hits across refreshes (frontier sizes vary
-        per mutation batch; unpadded shapes would recompile every time).
-        Padding rows duplicate row 0 with an all-False mask, so real rows
-        stay bitwise-identical and the pad is sliced off on return.
+        Single-host backends: row/universe counts are padded to
+        power-of-two buckets so the op-by-op compile cache hits across
+        refreshes (frontier sizes vary per mutation batch; unpadded
+        shapes would recompile every time).  Padding rows duplicate row 0
+        with an all-False mask, so real rows stay bitwise-identical and
+        the pad is sliced off on return.  The dist backend buckets inside
+        its per-partition SubsetPlan instead.
         """
         lg = self.layer_graphs[l]
         L = self.n_layers
+        spec = self.spec
+        layer = spec.layers[l]
+        ex = self.executor
+
+        if isinstance(ex, DistExecutor):
+            h, take, n_src = ex.run_rows(layer, lg, rows, read_level, l,
+                                         spec.heads)
+            self.rows_gemm += n_src
+            if l < L - 1:
+                h = spec.activation(h)
+            return np.asarray(jax.block_until_ready(h))[take]
+
         F = lg.fanout
         nbrs = lg.nbr[rows][lg.mask[rows]]
         U = np.unique(np.concatenate([rows, nbrs.astype(np.int64)]))
@@ -188,49 +215,14 @@ class DeltaReinference:
         mask_np[:R] = lg.mask[rows]
         rows_p = np.concatenate([rows, np.zeros(Rp - R, np.int64)])
         U_p = np.concatenate([U, np.zeros(Up - U.size, np.int64)])
-        rows = rows_p
-        mask = jnp.asarray(mask_np)
-        H_U = jnp.asarray(read_level(l, U_p))
         self.rows_gemm += int(U.size)
 
-        if self.model == "gcn":
-            w = self.params["w"][l]
-            wts = jnp.asarray(mean_weights(mask_np))
-            Hw = prim.ref_gemm(H_U, jnp.asarray(w))
-            h = prim.ref_spmm(Hw, wts, jnp.asarray(pos), mask)
-        elif self.model == "sage":
-            p = self.params["layers"][l]
-            wts = jnp.asarray(mean_weights(mask_np))
-            agg = prim.ref_spmm(H_U, wts, jnp.asarray(pos), mask)
-            own = jnp.asarray(read_level(l, rows))
-            h = prim.ref_gemm(own, jnp.asarray(p["w_self"])) + \
-                prim.ref_gemm(agg, jnp.asarray(p["w_nbr"]))
-        else:                                           # gat
-            p = self.params["layers"][l]
-            heads = self.params["heads"]
-            q = prim.ref_gemm(jnp.asarray(read_level(l, rows)),
-                              jnp.asarray(p["wq"]))
-            kf = prim.ref_gemm(H_U, jnp.asarray(p["wk"]))
-            v = prim.ref_gemm(H_U, jnp.asarray(p["wv"]))
-            # gat_head_scores with q (rows) and kf (universe) row counts
-            # decoupled — same per-row ops, so still bitwise-identical
-            n, D = q.shape
-            dh = D // heads
-            qh = q.reshape(n, heads, dh)
-            kh = kf.reshape(-1, heads, dh)
-            kn = jnp.take(kh, pos.reshape(-1), axis=0).reshape(
-                pos.shape + (heads, dh))
-            s = jnp.einsum("nhd,nfhd->nfh", qh, kn) / \
-                jnp.sqrt(jnp.float32(dh))
-            alpha = masked_softmax(s.transpose(0, 2, 1),
-                                   mask[:, None, :]).transpose(0, 2, 1)
-            vn = jnp.take(v.reshape(-1, heads, dh), pos.reshape(-1),
-                          axis=0).reshape(pos.shape + (heads, dh))
-            h = jnp.einsum("nfh,nfhd->nhd", alpha, vn).reshape(n, D)
-
+        io = DenseIO(pos, mask_np)
+        h_src = jnp.asarray(read_level(l, U_p))
+        h_tgt = lambda: jnp.asarray(read_level(l, rows_p))  # noqa: E731
+        h = run_layer(ex, layer, io, h_tgt, h_src, spec.heads)
         if l < L - 1:
-            act = jax.nn.relu if self.model in ("gcn", "sage") else jax.nn.elu
-            h = act(h)
+            h = spec.activation(h)
         return np.asarray(jax.block_until_ready(h))[:R]
 
     # -- the refresh ----------------------------------------------------

@@ -1,10 +1,22 @@
-"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+"""Pure-jnp reference primitives — the ONE canonical definition.
+
+These serve double duty: they are the allclose targets for the Pallas
+kernels AND the math behind ``core.ops.RefExecutor`` (the single-host
+oracle engine).  ``core.primitives`` re-exports them under the ``ref_*``
+names, so the oracle cannot drift between the kernel tests and the
+inference engines.
+"""
 from __future__ import annotations
 
 import math
 
 import jax
 import jax.numpy as jnp
+
+
+def gemm_ref(h, w):
+    """out = h @ w, accumulated in f32, cast back to h.dtype."""
+    return jnp.dot(h, w, preferred_element_type=jnp.float32).astype(h.dtype)
 
 
 def spmm_ref(h, w, nbr, mask):

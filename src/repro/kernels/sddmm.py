@@ -32,7 +32,9 @@ def _sddmm_kernel(nbr_ref, mask_ref, q_ref, k_ref, o_ref, *, fanout: int,
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def sddmm(q, k, nbr, mask, *, block_n: int = 8, interpret: bool = True):
-    """q, k: (N, D); nbr, mask: (N, F).  Returns (N, F) f32 scores."""
+    """q: (N, D); k: (U, D) source table; nbr, mask: (N, F) with ids into
+    k's rows (U and N decouple for row-subset execution).  Returns (N, F)
+    f32 scores."""
     N, D = q.shape
     F = nbr.shape[1]
     assert N % block_n == 0, (N, block_n)

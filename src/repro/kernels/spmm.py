@@ -45,13 +45,16 @@ def spmm(h, w, nbr, mask, *, block_n: int = 8, block_d: int = 128,
          interpret: bool = True):
     """out[i] = sum_f w[i,f]*mask[i,f]*h[nbr[i,f]].
 
-    h: (N, D); w/mask/nbr: (N, F).  N % block_n == 0, D % block_d == 0.
+    h: (N, D) source-row table; w/mask/nbr: (R, F).  The output has R rows
+    — R and N are decoupled so the layer-op executors can gather from a
+    universe table while producing only the target rows (row-subset mode).
+    R % block_n == 0, D % block_d == 0.
     """
     N, D = h.shape
-    F = nbr.shape[1]
-    assert N % block_n == 0 and D % block_d == 0, (N, D, block_n, block_d)
+    R, F = nbr.shape
+    assert R % block_n == 0 and D % block_d == 0, (R, D, block_n, block_d)
     wm = (w * mask).astype(h.dtype)
-    grid = (N // block_n, D // block_d)
+    grid = (R // block_n, D // block_d)
     return pl.pallas_call(
         functools.partial(_spmm_kernel, block_d=block_d, fanout=F,
                           block_n=block_n),
@@ -62,6 +65,6 @@ def spmm(h, w, nbr, mask, *, block_n: int = 8, block_d: int = 128,
             pl.BlockSpec(memory_space=pl.ANY),
         ],
         out_specs=pl.BlockSpec((block_n, block_d), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((N, D), h.dtype),
+        out_shape=jax.ShapeDtypeStruct((R, D), h.dtype),
         interpret=interpret,
     )(nbr, wm, h)

@@ -25,7 +25,12 @@ from repro.launch.mesh import make_host_mesh
 
 def run(dataset: str, model: str = "gcn", p: int = 2, m: int = 1,
         fanout: int = 8, n_layers: int = 3, d_feature: int = 64,
-        seed: int = 0, distributed: bool = True):
+        seed: int = 0, distributed: bool = True, executor: str = "dist"):
+    """``executor`` selects the backend: "dist" (mesh, needs p*m
+    devices), "ref" (single-host jnp oracle) or "pallas" (the Pallas
+    kernels, compiled on TPU / interpret elsewhere)."""
+    if executor == "dist" and (not distributed or p * m <= 1):
+        executor = "ref"                # no mesh to run on — jnp oracle
     t0 = time.time()
     src, dst, n = make_dataset(dataset, seed=seed)
     g, cstats = csr_from_edges_distributed(src, dst, n, n_workers=p)
@@ -47,7 +52,7 @@ def run(dataset: str, model: str = "gcn", p: int = 2, m: int = 1,
               else init_gat(key, dims, heads=1))
 
     t2 = time.time()
-    if distributed and p * m > 1:
+    if executor == "dist":
         if len(jax.devices()) < p * m:
             raise SystemExit(
                 f"need {p*m} devices; run under "
@@ -56,11 +61,13 @@ def run(dataset: str, model: str = "gcn", p: int = 2, m: int = 1,
         eng = DistributedLayerwise(mesh, lgs, model, params)
         H = np.asarray(eng.infer(X))
     else:
-        H = np.asarray(LOCAL_ENGINES[model](lgs, X, params))
+        H = np.asarray(LOCAL_ENGINES[model](lgs, X, params,
+                                            executor=executor))
     t_inf = time.time() - t2
     assert not np.isnan(H).any()
     print(f"[infer] embeddings {H.shape} for ALL nodes in {t_inf:.2f}s "
-          f"({g.n_edges/max(t_inf,1e-9)/1e6:.2f} M edges/s)")
+          f"({g.n_edges/max(t_inf,1e-9)/1e6:.2f} M edges/s, "
+          f"executor={executor})")
     return H
 
 
@@ -73,9 +80,13 @@ def main():
     ap.add_argument("--fanout", type=int, default=8)
     ap.add_argument("--layers", type=int, default=3)
     ap.add_argument("--local", action="store_true")
+    ap.add_argument("--executor", default="dist",
+                    choices=["ref", "pallas", "dist"],
+                    help="backend: dist mesh / ref jnp / pallas kernels")
     args = ap.parse_args()
     run(args.dataset, args.model, args.p, args.m, fanout=args.fanout,
-        n_layers=args.layers, distributed=not args.local)
+        n_layers=args.layers, distributed=not args.local,
+        executor=args.executor)
 
 
 if __name__ == "__main__":

@@ -8,6 +8,10 @@ mutations, printing serve/freshness stats.
   PYTHONPATH=src python -m repro.launch.serve_embeddings \
       --dataset ogbn-products --model gcn --ticks 50 \
       --mutations-per-tick 8 --staleness-bound 64
+
+``--executor dist`` runs the epoch AND every delta refresh through the
+distributed executor (per-partition frontier split on a p x m mesh);
+needs p*m devices, e.g.  XLA_FLAGS=--xla_force_host_platform_device_count=8.
 """
 from __future__ import annotations
 
@@ -27,7 +31,8 @@ from repro.gnnserve import (DeltaReinference, EmbeddingServeEngine, Query,
 
 def build_service(dataset: str, model: str, *, fanout: int = 8,
                   n_layers: int = 3, d_feature: int = 64, n_shards: int = 4,
-                  staleness_bound: int = 64, seed: int = 0
+                  staleness_bound: int = 64, seed: int = 0,
+                  executor: str = "ref", p: int = 4, m: int = 2
                   ) -> EmbeddingServeEngine:
     src, dst, n = make_dataset(dataset, seed=seed)
     g, _ = csr_from_edges_distributed(src, dst, n, n_workers=4)
@@ -40,8 +45,23 @@ def build_service(dataset: str, model: str, *, fanout: int = 8,
               "sage": lambda: init_sage(key, dims),
               "gat": lambda: init_gat(key, dims, heads=1)}[model]()
 
+    if executor == "dist":
+        from repro.core.ops import DistExecutor
+        from repro.launch.mesh import make_host_mesh
+        if len(jax.devices()) < p * m:
+            raise SystemExit(
+                f"--executor dist needs {p*m} devices; run under "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={p*m}")
+        if n % p != 0:
+            raise SystemExit(f"--p {p} must divide the node count {n}")
+        if m & (m - 1) != 0:
+            raise SystemExit(f"--m {m} must be a power of two "
+                             "(row-subset pad buckets)")
+        executor = DistExecutor(make_host_mesh(p, m))
+
     t0 = time.time()
-    ri = DeltaReinference([copy.deepcopy(l) for l in lgs], model, params)
+    ri = DeltaReinference([copy.deepcopy(l) for l in lgs], model, params,
+                          executor=executor)
     levels = ri.full_levels(X)
     print(f"[epoch0] {n} nodes x {n_layers} layers in {time.time()-t0:.2f}s")
     store = store_from_inference(X, levels[1:], n_shards=n_shards)
@@ -94,10 +114,16 @@ def main():
     ap.add_argument("--queries-per-tick", type=int, default=4)
     ap.add_argument("--mutations-per-tick", type=int, default=8)
     ap.add_argument("--staleness-bound", type=int, default=64)
+    ap.add_argument("--executor", default="ref",
+                    choices=["ref", "pallas", "dist"],
+                    help="delta-refresh backend (dist needs p*m devices)")
+    ap.add_argument("--p", type=int, default=4, help="graph partitions")
+    ap.add_argument("--m", type=int, default=2, help="feature partitions")
     args = ap.parse_args()
     eng = build_service(args.dataset, args.model, fanout=args.fanout,
                         n_layers=args.layers,
-                        staleness_bound=args.staleness_bound)
+                        staleness_bound=args.staleness_bound,
+                        executor=args.executor, p=args.p, m=args.m)
     drive(eng, ticks=args.ticks, queries_per_tick=args.queries_per_tick,
           mutations_per_tick=args.mutations_per_tick)
 

@@ -95,12 +95,74 @@ def main():
     pa = init_gat(jax.random.PRNGKey(1), [D, 64, 32], heads=1)
     eng2 = DistributedLayerwise(mesh, lgs, "gat", pa)
     check("engine/gat", eng2.infer(X), local_gat_infer(lgs, X, pa), 5e-5)
+    # sddmm must keep its deal-style plan args even when the spmm
+    # variant changes (regression: gat + graph_exchange)
+    eng2b = DistributedLayerwise(mesh, lgs, "gat", pa,
+                                 spmm_variant="graph_exchange")
+    check("engine/gat-graph_exchange", eng2b.infer(X),
+          local_gat_infer(lgs, X, pa), 5e-5)
 
     ps = init_sage(jax.random.PRNGKey(2), [D, 64, 32])
     eng3 = DistributedLayerwise(mesh, lgs, "sage", ps)
     check("engine/sage", eng3.infer(X), local_sage_infer(lgs, X, ps), 5e-5)
 
+    check_dist_delta(mesh, g, lgs, X)
+
     print("ALL DISTRIBUTED CHECKS PASSED")
+
+
+def check_dist_delta(mesh, g, lgs, X):
+    """Row-subset (frontier) execution on the mesh: DistExecutor-backed
+    delta refresh must be BITWISE-equal to a full epoch through the same
+    executor, for every model — the distributed-delta-refresh guarantee.
+    """
+    import copy
+
+    from repro.core.ops import DistExecutor
+    from repro.gnnserve import (DeltaReinference, MutationLog,
+                                apply_edge_mutations, store_from_inference)
+
+    N, D = X.shape
+    L = len(lgs)
+    rng = np.random.default_rng(3)
+    dex = DistExecutor(mesh)
+    for model in ("gcn", "sage", "gat"):
+        key = jax.random.PRNGKey(4)
+        dims = [D] * L + [32]
+        params = {"gcn": lambda: init_gcn(key, dims),
+                  "sage": lambda: init_sage(key, dims),
+                  "gat": lambda: init_gat(key, dims, heads=1)}[model]()
+        ri = DeltaReinference([copy.deepcopy(l) for l in lgs], model,
+                              params, executor=dex)
+        levels = ri.full_levels(X)
+        ref = DeltaReinference([copy.deepcopy(l) for l in lgs], model,
+                               params).full_levels(X)
+        check(f"delta_dist/{model}/full_levels_vs_ref",
+              levels[-1], ref[-1], 5e-5)
+
+        store = store_from_inference(X, levels[1:], n_shards=4)
+        log = MutationLog()
+        log.add_edges(rng.integers(0, N, 8), rng.integers(0, N, 8))
+        fid = rng.choice(N, 3, replace=False)
+        log.update_features(fid, rng.standard_normal(
+            (3, D)).astype(np.float32))
+        batch = log.drain()
+        g2 = apply_edge_mutations(g, batch)
+        stats = ri.refresh(store, g2, batch.feat_ids, batch.feat_rows,
+                           batch.affected_dsts())
+        assert 0 < stats["frontier_sizes"][-1] < N, stats
+        X2 = X.copy()
+        X2[batch.feat_ids] = batch.feat_rows
+        oracle = DeltaReinference(ri.layer_graphs, model, params,
+                                 executor=dex).full_levels(X2)
+        for lvl in range(1, L + 1):
+            got = store.lookup(np.arange(N), lvl)
+            exact = bool((got == oracle[lvl]).all())
+            print(f"{'OK ' if exact else 'FAIL'} delta_dist/{model}/"
+                  f"level{lvl}: bitwise={exact} "
+                  f"frontier={stats['frontier_sizes']}")
+            if not exact:
+                sys.exit(1)
 
 
 if __name__ == "__main__":
