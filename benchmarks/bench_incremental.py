@@ -15,7 +15,14 @@ the serve engine's ``staleness_bound`` controls.
 ``executor`` retargets both refresh paths through the layer-op executor
 layer: "ref", "pallas" (kernels), or "dist" (the per-partition frontier
 split on a shard_map mesh, run in a subprocess).
+
+The ``incremental/evict_*`` rows sweep the memory-budgeted store
+(``budget_rows`` at 25% / 50% residency, heat eviction) under a mixed
+lookup/mutation workload: hit-rate, evictions, and recompute-on-miss
+latency — the serve-side cost of trading resident memory for compute.
 """
+import time
+
 import numpy as np
 
 from benchmarks import common
@@ -26,6 +33,7 @@ FANOUT = 4
 LAYERS = 3
 D = 64
 FRACTIONS = (0.001, 0.005, 0.01, 0.05)
+BUDGET_FRACS = (0.25, 0.5)     # eviction sweep: resident-row cap / level
 
 _DIST_SCRIPT = r"""
 import copy
@@ -186,6 +194,81 @@ def run(smoke: bool = False, executor: str = "ref"):
         common.emit(f"incremental/speedup_frac{frac}{suffix}",
                     t_full / max(t_delta, 1e-12),
                     "delta_wins" if t_delta < t_full else "full_wins")
+
+    if executor == "ref":
+        _evict_sweep(smoke)
+
+
+def _evict_sweep(smoke: bool):
+    """Memory-budgeted store under a mixed lookup/mutation workload: for
+    each budget fraction, cap residency per level, serve a skewed query
+    stream (80% of lookups over a 10% hot set, so heat eviction has
+    something to keep) interleaved with delta refreshes, and report
+    hit-rate, evictions, and recompute-on-miss latency.  Ends with a
+    bitwise check against an unbudgeted twin driven in lockstep."""
+    import copy
+
+    from repro.gnnserve import (DeltaReinference, apply_edge_mutations,
+                                attach_recompute, store_from_inference)
+    n = 1024 if smoke else N
+    ticks = 4 if smoke else 16
+    rows_per_lookup = 256
+    g0, src, dst, X, params, ri_o, oracle, _ = _setup(n=n)
+    all_ids = np.arange(n)
+
+    for bf in BUDGET_FRACS:
+        rng = np.random.default_rng(17)
+        ri = DeltaReinference([copy.deepcopy(l) for l in ri_o.layer_graphs],
+                              "gcn", params)
+        store = attach_recompute(
+            store_from_inference(X, ri.full_levels(X)[1:], n_shards=4,
+                                 budget_rows=int(n * bf),
+                                 evict_policy="heat"), ri)
+        # lockstep unbudgeted twin (for the bitwise acceptance check)
+        ri_t = DeltaReinference([copy.deepcopy(l) for l in ri_o.layer_graphs],
+                                "gcn", params)
+        twin = store_from_inference(X, ri_t.full_levels(X)[1:], n_shards=4)
+
+        g = g0
+        hot = int(n * 0.1)
+        lookup_ts = []
+        t0 = time.perf_counter()
+        for tick in range(ticks):
+            for _ in range(4):
+                ids = (rng.integers(0, hot, rows_per_lookup)
+                       if rng.random() < 0.8
+                       else rng.integers(0, n, rows_per_lookup))
+                t1 = time.perf_counter()
+                store.lookup(ids, -1)
+                lookup_ts.append(time.perf_counter() - t1)
+            if tick % 4 == 3:
+                batch = _mutation(rng, src, dst, 0.002, n=n)
+                g = apply_edge_mutations(g, batch)
+                for r, s in ((ri, store), (ri_t, twin)):
+                    r.refresh(s, g, batch.feat_ids, batch.feat_rows,
+                              batch.affected_dsts())
+        wall = time.perf_counter() - t0
+        s = store.stats()       # BEFORE the full-scan bitwise check:
+        # the verification gather would dominate every counter below
+        for lvl in range(1, store.n_levels):
+            assert np.array_equal(store.lookup(all_ids, lvl),
+                                  twin.lookup(all_ids, lvl)), \
+                f"budget {bf}: level {lvl} diverged from unbudgeted twin"
+        mem_mb = s["resident_bytes"] / 2 ** 20
+        common.emit(f"incremental/evict_hitrate_frac{bf}",
+                    100.0 * s["hit_rate"],
+                    f"hits={s['hits']};misses={s['misses']};"
+                    f"policy=heat;n={n}")
+        common.emit(f"incremental/evict_evictions_frac{bf}",
+                    s["n_evictions"],
+                    f"rows_evicted={s['rows_evicted']};"
+                    f"resident_mb={mem_mb:.2f};util={s['budget_util']:.2f}")
+        common.emit(f"incremental/evict_recompute_us_frac{bf}",
+                    1e6 * s["recompute_s"] / max(s["n_recompute_spans"], 1),
+                    f"rows_recomputed={s['rows_recomputed']};"
+                    f"spans={s['n_recompute_spans']};"
+                    f"lookup_p50_us={1e6*sorted(lookup_ts)[len(lookup_ts)//2]:.0f};"
+                    f"wall_s={wall:.2f}")
 
 
 if __name__ == "__main__":

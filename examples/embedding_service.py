@@ -1,5 +1,8 @@
 """Minimal gnnserve walkthrough: serve embeddings, mutate the graph,
-watch the staleness bound trigger an incremental refresh.
+watch the staleness bound trigger an incremental refresh — then rerun
+the same traffic on a memory-budgeted store (50% resident rows, heat
+eviction) and check it serves bitwise-identical rows via
+recompute-on-miss.
 
   PYTHONPATH=src python examples/embedding_service.py
 """
@@ -17,7 +20,7 @@ from repro.core.gnn_models import init_gcn  # noqa: E402
 from repro.core.graph import csr_from_edges, rmat_edges  # noqa: E402
 from repro.core.sampler import sample_layer_graphs  # noqa: E402
 from repro.gnnserve import (DeltaReinference, EmbeddingServeEngine,  # noqa: E402
-                            Query, store_from_inference)
+                            Query, attach_recompute, store_from_inference)
 
 N, D, LAYERS = 1024, 32, 3
 
@@ -55,3 +58,25 @@ print(f"served v{q2.served_version} after delta refresh: frontier "
 print(f"node 0 embedding moved: "
       f"{not np.array_equal(q.out[0], q2.out[0])}")
 assert eng.store.version == 1 and eng.n_refreshes == 1
+
+# memory-budgeted replay: cap each level at 50% resident rows; evicted
+# shards rebuild exactly the missing rows through the delta engine
+ri_b = DeltaReinference([copy.deepcopy(l) for l in lgs], "gcn", params)
+store_b = attach_recompute(
+    store_from_inference(X, ri_b.full_levels(X)[1:], n_shards=4,
+                         budget_rows=N // 2, evict_policy="heat"), ri_b)
+eng_b = EmbeddingServeEngine(store_b, ri_b, g, staleness_bound=8)
+eng_b.mutate().add_edges(np.random.default_rng(1).integers(0, N, 10),
+                         np.zeros(10, np.int64))
+q3 = Query(uid=2, node_ids=np.arange(16))
+eng_b.submit(q3)
+eng_b.run()
+assert np.array_equal(q3.out, q2.out), "budgeted store must serve the " \
+    "same bits"
+s = eng_b.stats()
+mem = eng_b.memory_stats()
+print(f"budgeted(50%): identical rows; hit-rate {s['store_hit_rate']:.2f}, "
+      f"{s['store_n_evictions']} evictions, "
+      f"{s['store_rows_recomputed']} rows recomputed; resident "
+      + " ".join(f"L{i}:{v['resident_bytes']//1024}KB"
+                 for i, v in enumerate(mem.values())))

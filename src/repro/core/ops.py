@@ -41,7 +41,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import primitives as prim
 from repro.core.gnn_models import (LayerSpec, ModelSpec, gat_head_scores,
                                    masked_softmax, mean_weights)
-from repro.core.partition import build_plan, build_subset_plan
+from repro.core.partition import build_plan, build_subset_plan_cached
 from repro.core.sampler import LayerGraph
 from repro.kernels import ops as kops
 
@@ -359,8 +359,8 @@ class DistExecutor:
             "row-subset mode needs the unique-row exchange plan"
         assert self.M & (self.M - 1) == 0, \
             "model axis must be a power of two (pad buckets)"
-        sp = build_subset_plan(lg, rows, self.P, m_align=self.M,
-                               floor=self.subset_floor)
+        sp = build_subset_plan_cached(lg, rows, self.P, m_align=self.M,
+                                      floor=self.subset_floor)
         args = (jnp.asarray(sp.send_local), jnp.asarray(sp.edge_dst),
                 jnp.asarray(sp.edge_slot), jnp.asarray(sp.edge_pos),
                 jnp.asarray(sp.edge_mask))

@@ -203,7 +203,10 @@ def build_subset_plan(lg: LayerGraph, rows: np.ndarray, P: int,
     src_ids = np.zeros((P, Umax), np.int64)
     for q in range(P):
         src_ids[q, :uni[q].size] = uni[q]
-        src_ids[q, uni[q].size:] = bounds[q]      # benign in-range pad
+        # pad with ids already being read: pad values never reach real
+        # outputs, but on a budgeted store a pad pointing at an evicted
+        # row would trigger a spurious recompute (see gnnserve.delta)
+        src_ids[q, uni[q].size:] = uni[q][0] if uni[q].size else rows[0]
 
     req: List[List[np.ndarray]] = [[None] * P for _ in range(P)]
     entries = [[None] * P for _ in range(P)]
@@ -240,6 +243,7 @@ def build_subset_plan(lg: LayerGraph, rows: np.ndarray, P: int,
     for p in range(P):
         c = int(counts[p])
         row_ids[p, :c] = rows[split[p]:split[p + 1]]
+        row_ids[p, c:] = rows[split[p]] if c else rows[0]   # see src_ids
         row_mask[p, :c] = mask_r[split[p]:split[p + 1]]
         take.append(p * Rmax + np.arange(c))
         for k in range(P):
@@ -258,6 +262,60 @@ def build_subset_plan(lg: LayerGraph, rows: np.ndarray, P: int,
                       take=np.concatenate(take) if take else
                       np.empty(0, np.int64),
                       n_src_rows=int(sum(u.size for u in uni)))
+
+
+# -- frontier-signature plan cache -------------------------------------
+#
+# ``build_subset_plan`` is pure numpy and runs per refreshed layer; a hot
+# frontier hit repeatedly by recompute-on-miss (the budgeted store's
+# eviction escape hatch) would otherwise rebuild the identical plan every
+# time (ROADMAP: subset-plan build off the hot path).  Plans are cached
+# ON the layer graph keyed by the frontier signature — a hash of the
+# sorted row ids plus everything the partition bounds derive from
+# (P / n_nodes / m_align / floor).  ``resample_rows`` mutates the layer
+# graph in place, so it must call ``invalidate_subset_plans``.
+
+SUBSET_PLAN_CACHE = {"hits": 0, "misses": 0}
+_SUBSET_CACHE_ATTR = "_subset_plan_cache"
+_SUBSET_CACHE_CAP = 64          # plans are small; bound pathological churn
+
+
+def subset_plan_cache_stats() -> dict:
+    return dict(SUBSET_PLAN_CACHE)
+
+
+def invalidate_subset_plans(lg: LayerGraph) -> None:
+    """Drop cached frontier plans after an in-place layer-graph mutation."""
+    getattr(lg, _SUBSET_CACHE_ATTR, {}).clear()
+
+
+def build_subset_plan_cached(lg: LayerGraph, rows: np.ndarray, P: int,
+                             *, m_align: int = 1, floor: int = 8
+                             ) -> SubsetPlan:
+    """``build_subset_plan`` memoized per (layer graph, frontier
+    signature).  Safe because plans depend only on (lg.nbr, lg.mask,
+    rows, P, n_nodes, m_align, floor) and every nbr/mask mutation goes
+    through ``resample_rows`` -> ``invalidate_subset_plans``."""
+    rows = np.asarray(rows, np.int64)
+    cache = getattr(lg, _SUBSET_CACHE_ATTR, None)
+    if cache is None:
+        cache = {}
+        setattr(lg, _SUBSET_CACHE_ATTR, cache)
+    # the row bytes themselves, not their hash: a 64-bit hash collision
+    # would silently return another frontier's exchange plan, and the
+    # key bytes are tiny next to the cached plan arrays
+    key = (P, m_align, floor, lg.n_nodes, rows.tobytes())
+    plan = cache.get(key)
+    if plan is not None:
+        SUBSET_PLAN_CACHE["hits"] += 1
+        return plan
+    SUBSET_PLAN_CACHE["misses"] += 1
+    if len(cache) >= _SUBSET_CACHE_CAP:
+        cache.pop(next(iter(cache)))    # FIFO drop-one: clearing all
+        # would also evict the hot frontier the cache exists to keep
+    plan = build_subset_plan(lg, rows, P, m_align=m_align, floor=floor)
+    cache[key] = plan
+    return plan
 
 
 def comm_volume(plan: PartitionPlan, d_feature: int, bytes_per: int = 4

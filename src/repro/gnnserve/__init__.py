@@ -13,6 +13,12 @@ graph mutates, without re-running full epochs:
                  each layer's input, final embedding).  Double-buffered:
                  writers stage copy-on-write shards, ``commit`` swaps
                  them in atomically (the epoch flip readers never see).
+                 Memory-budgeted: ``budget_rows`` caps residency per
+                 level; cold shards are evicted (heat/LRU) and misses
+                 rebuild exactly the missing rows through the delta
+                 engine (``RecomputeOnMiss``), bitwise-equal to a
+                 never-evicted store (docs/ARCHITECTURE.md: "The store's
+                 memory model").
 
   ``mutations``  Edge/node mutation log + CSR delta overlay over
                  ``core.graph.Graph``.  ``apply_edge_mutations`` splices
@@ -43,14 +49,19 @@ Entry points: ``launch/serve_embeddings.py`` (CLI service loop),
 ``examples/embedding_service.py`` (demo), and
 ``benchmarks/bench_incremental.py`` (delta vs full-recompute study).
 """
-from repro.gnnserve.delta import (DeltaReinference, build_reverse_index,
+from repro.gnnserve.delta import (DeltaReinference, RecomputeOnMiss,
+                                  attach_recompute, build_reverse_index,
                                   forward_frontier, resample_rows)
 from repro.gnnserve.engine import EmbeddingServeEngine, Query
 from repro.gnnserve.mutations import (MutationBatch, MutationLog,
                                       apply_edge_mutations)
-from repro.gnnserve.store import EmbeddingStore, store_from_inference
+from repro.gnnserve.store import (EmbeddingStore, EvictedRowMiss,
+                                  SnapshotMiss, StoreSnapshot,
+                                  store_from_inference)
 
-__all__ = ["DeltaReinference", "build_reverse_index", "forward_frontier",
+__all__ = ["DeltaReinference", "RecomputeOnMiss", "attach_recompute",
+           "build_reverse_index", "forward_frontier",
            "resample_rows", "EmbeddingServeEngine", "Query",
            "MutationBatch", "MutationLog", "apply_edge_mutations",
-           "EmbeddingStore", "store_from_inference"]
+           "EmbeddingStore", "EvictedRowMiss", "SnapshotMiss",
+           "StoreSnapshot", "store_from_inference"]

@@ -41,7 +41,7 @@ import numpy as np
 from repro.core.gnn_models import model_spec
 from repro.core.graph import Graph
 from repro.core.ops import DenseIO, DistExecutor, get_executor, run_layer
-from repro.core.partition import pad_bucket
+from repro.core.partition import invalidate_subset_plans, pad_bucket
 from repro.core.sampler import LayerGraph, draw_fixed_fanout
 from repro.gnnserve.store import EmbeddingStore
 
@@ -98,6 +98,7 @@ def resample_rows(g: Graph, layer_graphs: Sequence[LayerGraph],
                                       lg.fanout, rng)
         lg.nbr[rows] = nbr
         lg.mask[rows] = mask
+        invalidate_subset_plans(lg)     # cached frontier plans are stale
 
 
 def forward_frontier(rev: Sequence[ReverseIndex], feat_dirty: np.ndarray,
@@ -213,8 +214,11 @@ class DeltaReinference:
         pos[:R] = _remap(lg.nbr[rows], lg.mask[rows], U)
         mask_np = np.zeros((Rp, F), bool)
         mask_np[:R] = lg.mask[rows]
-        rows_p = np.concatenate([rows, np.zeros(Rp - R, np.int64)])
-        U_p = np.concatenate([U, np.zeros(Up - U.size, np.int64)])
+        # pad with rows already being read (NOT row 0): on a budgeted
+        # store a pad id pointing at an evicted row would trigger a
+        # spurious recompute; pad values never reach real outputs
+        rows_p = np.concatenate([rows, np.full(Rp - R, rows[0], np.int64)])
+        U_p = np.concatenate([U, np.full(Up - U.size, U[0], np.int64)])
         self.rows_gemm += int(U.size)
 
         io = DenseIO(pos, mask_np)
@@ -224,6 +228,35 @@ class DeltaReinference:
         if l < L - 1:
             h = spec.activation(h)
         return np.asarray(jax.block_until_ready(h))[:R]
+
+    # -- row-level recompute (decoupled from mutation batches) ----------
+    def recompute_rows(self, store: EmbeddingStore, level: int,
+                       ids: np.ndarray, *, staged: bool = False
+                       ) -> np.ndarray:
+        """Rebuild store level ``level`` (1..L) for ``ids`` from the
+        lowest resident levels: one ``_layer_rows`` pass whose inputs
+        read through the store — a non-resident input row recurses into
+        the store's own recompute-on-miss path, terminating at level 0
+        (the pinned features).  Bitwise-equal to the rows a never-evicted
+        store would hold, because it is the SAME executor, reduction
+        order, and activation as the epoch that produced them.
+
+        ``staged=True`` reads through the open overlay (a mid-refresh
+        miss); with ``staged=False`` between ``resample_rows`` and
+        ``commit`` the result is undefined for frontier rows — the
+        single-threaded engine never does that.
+        """
+        assert 1 <= level <= self.n_layers, level
+        ids = np.asarray(ids, np.int64)
+        if ids.size == 0:
+            return np.empty((0, store.level_dim(level)), np.float32)
+        assert ids.size == 1 or (np.diff(ids) > 0).all(), \
+            "ids must be sorted unique (the frontier-split plans need it)"
+        read = (store.lookup_staged if staged else
+                lambda want, lvl: store._gather(
+                    np.asarray(want, np.int64), lvl, staged=False))
+        return self._layer_rows(level - 1, ids,
+                                lambda lvl, want: read(want, lvl))
 
     # -- the refresh ----------------------------------------------------
     def refresh(self, store: EmbeddingStore, g_new: Graph,
@@ -272,6 +305,9 @@ class DeltaReinference:
                 for lg, (nbr, mask) in zip(self.layer_graphs, old_rows):
                     lg.nbr[resampled] = nbr
                     lg.mask[resampled] = mask
+                    # the failed refresh may have cached frontier plans
+                    # over the now-rolled-back samples
+                    invalidate_subset_plans(lg)
                 self._rev = [None] * len(self.layer_graphs)
             raise
         version = store.commit()
@@ -279,3 +315,40 @@ class DeltaReinference:
                 "frontier_sizes": [int(f.size) for f in frontier],
                 "n_resampled": int(resampled.size),
                 "n_feat_updates": int(feat_ids.size)}
+
+
+# ----------------------------------------------------------------------
+# recompute-on-miss: the store's eviction escape hatch
+# ----------------------------------------------------------------------
+
+class RecomputeOnMiss:
+    """Binds a ``DeltaReinference`` to a memory-budgeted store as its
+    recompute hook: a ``lookup`` (or mid-refresh ``lookup_staged``) that
+    touches evicted rows rebuilds exactly those rows through the bound
+    executor and re-admits them.
+
+        store = store_from_inference(X, levels[1:], budget_rows=cap)
+        store.recompute = RecomputeOnMiss(ri, store)
+
+    The reinference instance must be the one whose layer graphs track the
+    store's epochs (the engine's ``reinfer``) — recompute replays the
+    CURRENT layer graphs, which is only bitwise-faithful for rows whose
+    graph rows match the committed epoch (always true outside a refresh,
+    and true for every non-frontier row inside one).
+    """
+
+    def __init__(self, reinfer: DeltaReinference, store: EmbeddingStore):
+        self.reinfer = reinfer
+        self.store = store
+
+    def __call__(self, level: int, ids: np.ndarray,
+                 staged: bool) -> np.ndarray:
+        return self.reinfer.recompute_rows(self.store, level, ids,
+                                           staged=staged)
+
+
+def attach_recompute(store: EmbeddingStore,
+                     reinfer: DeltaReinference) -> EmbeddingStore:
+    """Convenience wiring used by the launchers and benches."""
+    store.recompute = RecomputeOnMiss(reinfer, store)
+    return store

@@ -26,7 +26,7 @@ import numpy as np
 from repro.core.graph import Graph
 from repro.gnnserve.delta import DeltaReinference
 from repro.gnnserve.mutations import MutationLog, apply_edge_mutations
-from repro.gnnserve.store import EmbeddingStore
+from repro.gnnserve.store import EmbeddingStore, SnapshotMiss
 
 
 @dataclasses.dataclass
@@ -92,12 +92,10 @@ class EmbeddingServeEngine:
                 batch.affected_dsts())
         except Exception:
             # a bad batch must not silently discard the good mutations
-            # drained alongside it — put everything back and re-raise
-            # (the engine is single-threaded, so no interleaved writes)
-            self.log.add_edges(batch.add_src, batch.add_dst)
-            self.log.remove_edges(batch.del_src, batch.del_dst)
-            if batch.feat_ids.size:
-                self.log.update_features(batch.feat_ids, batch.feat_rows)
+            # drained alongside it — put everything back (in original op
+            # order) and re-raise (the engine is single-threaded, so no
+            # interleaved writes)
+            self.log.requeue(batch)
             raise
         self.graph = graph
         self.n_refreshes += 1
@@ -143,8 +141,11 @@ class EmbeddingServeEngine:
             if q.snap is None:
                 # pin the query to the CURRENT epoch: rows gathered after
                 # a mid-query refresh still come from this snapshot, so
-                # one response never mixes epochs
-                q.snap = self.store.snapshot()
+                # one response never mixes epochs.  Pinning admits every
+                # row the query will read FIRST (recompute-on-miss) and
+                # only then lets the budget evict — a mid-query eviction
+                # can drop the store's pointer but never the snapshot's
+                q.snap = self.store.pinned_snapshot(q.node_ids, q.level)
                 q.served_version = q.snap.version
             lo = self.cursor[i]
             per_key.setdefault(
@@ -155,7 +156,18 @@ class EmbeddingServeEngine:
             snap = self.slot_q[chunks[0][0]].snap
             ids = np.concatenate([self.slot_q[i].node_ids[lo:hi]
                                   for i, lo, hi in chunks])
-            rows = snap.lookup(ids, level)            # one sharded gather
+            try:
+                rows = snap.lookup(ids, level)        # one sharded gather
+            except SnapshotMiss:
+                # same-version queries can still pin DIFFERENT shard
+                # arrays (an eviction + re-admission between their pins);
+                # after an epoch flip the shared snapshot can't serve the
+                # other queries' rows — each query's own snapshot can,
+                # by the pinning guarantee
+                rows = np.concatenate([
+                    self.slot_q[i].snap.lookup(
+                        self.slot_q[i].node_ids[lo:hi], level)
+                    for i, lo, hi in chunks])
             off = 0
             for i, lo, hi in chunks:
                 self.slot_q[i].out[lo:hi] = rows[off:off + (hi - lo)]
@@ -177,9 +189,17 @@ class EmbeddingServeEngine:
                 return
 
     def stats(self) -> Dict[str, float]:
+        """Serve counters plus the store's (``store_`` prefix) — which now
+        carry the memory model: hits/misses, evictions, recompute counts,
+        resident bytes and budget utilization."""
         return {"n_served": self.n_served,
                 "n_gather_steps": self.n_gather_steps,
                 "n_refreshes": self.n_refreshes,
                 "store_version": self.store.version,
                 "pending_mutations": self.log.pending,
                 **{f"store_{k}": v for k, v in self.store.stats().items()}}
+
+    def memory_stats(self) -> Dict:
+        """Per-level residency/budget breakdown (see
+        ``EmbeddingStore.memory_stats``)."""
+        return self.store.memory_stats()

@@ -88,6 +88,19 @@ class MutationLog:
     def has_node_adds(self) -> bool:
         return self._new_nodes > 0
 
+    def requeue(self, batch: MutationBatch) -> None:
+        """Put a drained batch BACK (a failed refresh must not discard
+        the good mutations drained alongside a bad one).  Edge ops replay
+        from ``batch.edge_ops`` in their original order — rebuilding from
+        the add_*/del_* projections would reorder del-then-add of the
+        same edge into add-then-del and flip its net effect."""
+        for kind, s, d in batch.edge_ops:
+            (self.add_edge if kind == "add" else self.remove_edge)(s, d)
+        if batch.feat_ids.size:
+            self.update_features(batch.feat_ids, batch.feat_rows)
+        if batch.n_new_nodes:
+            self.add_nodes(batch.n_new_nodes)
+
     def drain(self) -> MutationBatch:
         def _cols(kind):
             pairs = [(s, d) for k, s, d in self._edges if k == kind]

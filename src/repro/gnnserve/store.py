@@ -1,4 +1,5 @@
-"""Versioned, partition-sharded embedding store with double-buffered swap.
+"""Versioned, partition-sharded embedding store with double-buffered swap
+and a per-level memory budget (heat/LRU shard eviction, recompute-on-miss).
 
 The store holds the layerwise engine's output at every level: level 0 is
 the raw feature matrix X, level l (1..L) is the INPUT of layer l+1 (i.e.
@@ -14,103 +15,357 @@ overlay, ``write_rows`` copies-on-write only the shards it dirties, and
 (the double-buffered epoch swap).  ``lookup`` always reads the committed
 front; ``lookup_staged`` reads through the overlay (read-your-writes for
 the delta engine mid-refresh).
+
+Memory model (the production constraint every full-graph system hits):
+``budget_rows`` caps the resident rows of EVERY evictable level (1..L;
+level 0 — the features — is pinned, it is the ground truth nothing can
+rebuild).  Each (level, shard) keeps a row-level residency bitmap next
+to its array; ``evict`` drops a whole shard's array and replaces the
+bitmap with a fresh all-False one (snapshots holding the old array+bitmap
+pair keep serving it — eviction never writes in place).  A ``lookup``
+that touches non-resident rows no longer asserts: it routes the exact
+missing row ids through the ``recompute`` hook (``delta.RecomputeOnMiss``
+— level-l rows rebuilt from the lowest resident level through the bound
+executor, bitwise-equal to a never-evicted store), re-admits them into
+the shard, and charges the budget.  Victims are chosen by ``evict_policy``:
+``"heat"`` (exponentially-decayed access mass) or ``"lru"`` (last-touch
+tick).  Budget enforcement runs only at the END of a top-level gather /
+commit, never mid-recursion, so a recompute can't evict rows it is about
+to read.
+
+Snapshot-vs-eviction ordering: ``pinned_snapshot(ids, level)`` admits any
+missing rows FIRST (with enforcement suppressed), captures the shard
+array+bitmap pointers, and only then lets the budget evict — so a
+mid-query eviction (or a later epoch commit) can never tear a pinned
+response.  A plain ``snapshot()`` pins whatever is resident; reading rows
+it never pinned falls back to the store while the epoch still matches and
+raises ``SnapshotMiss`` after the epoch has moved on (recompute against a
+mutated graph could not reproduce the old epoch).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+import time
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
 
+class EvictedRowMiss(RuntimeError):
+    """A gather touched evicted rows and no ``recompute`` hook is bound."""
+
+
+class SnapshotMiss(RuntimeError):
+    """A snapshot read touched rows it never pinned, after the store's
+    epoch moved on — the old epoch is not reconstructible."""
+
+
 class StoreSnapshot:
-    """Immutable view of one committed epoch.  Shard arrays are shared by
-    pointer with the store's front buffer at snapshot time; commits swap
-    pointers (never write in place), so reads through a snapshot keep
-    seeing one consistent epoch for free."""
+    """Immutable view of one committed epoch.  Shard arrays AND residency
+    bitmaps are shared by pointer with the store's front buffer at
+    snapshot time; commits and evictions swap pointers (never write in
+    place), so reads through a snapshot keep seeing one consistent epoch
+    for free.  Rows admitted into a pinned shard later are same-epoch by
+    construction (dirty rows always land in swapped shards), so the
+    snapshot only ever GAINS rows."""
 
     def __init__(self, store: "EmbeddingStore"):
         self._front = [list(shards) for shards in store._front]
+        self._mask = [list(masks) for masks in store._mask]
         self.bounds = store.bounds
         self.version = store.version
         self._store = store
 
     def lookup(self, ids: np.ndarray, level: int = -1) -> np.ndarray:
         level = level % len(self._front)
-        self._store.n_lookups += 1
-        self._store.rows_gathered += int(np.asarray(ids).size)
-        return _gather_rows(self._front[level], self.bounds, ids)
+        ids = np.asarray(ids, np.int64)
+        st = self._store
+        st.n_lookups += 1
+        st.rows_gathered += int(ids.size)
+        _check_ids(ids, self.bounds)
+        out = np.empty((ids.size, st.level_dim(level)), np.float32)
+        missing = np.zeros(ids.size, bool)
+        owner = np.searchsorted(self.bounds, ids, side="right") - 1
+        for s in np.unique(owner):
+            sel = owner == s
+            local = ids[sel] - self.bounds[s]
+            data, mask = self._front[level][s], self._mask[level][s]
+            if data is None:
+                missing |= sel
+                continue
+            have = mask[local]
+            if have.all():
+                out[sel] = data[local]
+            else:
+                got = np.zeros((local.size, out.shape[1]), np.float32)
+                got[have] = data[local[have]]
+                out[sel] = got
+                miss_sel = sel.copy()
+                miss_sel[sel] = ~have
+                missing |= miss_sel
+        if missing.any():
+            if self.version != st.version:
+                raise SnapshotMiss(
+                    "snapshot read touched rows that were never pinned and "
+                    "the store's epoch has advanced; pin the query's rows "
+                    "with pinned_snapshot(ids, level) before the commit")
+            # same epoch: serve the stragglers through the store (admits
+            # them via recompute-on-miss and charges the budget)
+            out[missing] = st._gather(ids[missing], level, staged=False)
+        return out
 
 
-def _gather_rows(shards: List[np.ndarray], bounds: np.ndarray,
-                 ids: np.ndarray) -> np.ndarray:
-    ids = np.asarray(ids, np.int64)
+def _check_ids(ids: np.ndarray, bounds: np.ndarray) -> None:
     assert ids.size == 0 or (ids.min() >= 0 and ids.max() < bounds[-1]), \
         "node id out of range"      # a negative id would silently wrap
-    out = np.empty((ids.size, shards[0].shape[1]), np.float32)
-    owner = np.searchsorted(bounds, ids, side="right") - 1
-    for s in np.unique(owner):
-        sel = owner == s
-        out[sel] = shards[s][ids[sel] - bounds[s]]
-    return out
 
 
 class EmbeddingStore:
-    def __init__(self, levels: Sequence[np.ndarray], n_shards: int = 4):
+    def __init__(self, levels: Sequence[np.ndarray], n_shards: int = 4,
+                 *, budget_rows: Optional[int] = None,
+                 evict_policy: str = "heat", heat_decay: float = 0.98):
         n = levels[0].shape[0]
         assert all(h.shape[0] == n for h in levels), "levels must cover all nodes"
+        assert evict_policy in ("heat", "lru"), evict_policy
+        assert budget_rows is None or budget_rows >= 0
         self.n_nodes = n
         self.n_shards = n_shards
         self.bounds = np.linspace(0, n, n_shards + 1).astype(np.int64)
-        # front[level][shard] -> (rows, D_level) float32
-        self._front: List[List[np.ndarray]] = [
+        self._shard_rows = np.diff(self.bounds)
+        self._dims = [int(h.shape[1]) for h in levels]
+        # front[level][shard] -> (rows, D_level) float32 | None (evicted)
+        self._front: List[List[Optional[np.ndarray]]] = [
             [np.ascontiguousarray(h[self.bounds[s]:self.bounds[s + 1]],
                                   dtype=np.float32)
              for s in range(n_shards)]
             for h in levels]
-        # staging overlay: {(level, shard): array}; None when no update open
+        # residency bitmap per (level, shard); evict swaps in a NEW
+        # all-False array so pinned snapshots keep the old pair
+        self._mask: List[List[np.ndarray]] = [
+            [np.ones(int(self._shard_rows[s]), bool)
+             for s in range(n_shards)]
+            for _ in levels]
+        # bitmap popcounts, maintained incrementally: budget enforcement
+        # runs after every top-level gather and must not rescan
+        # O(n_levels * n_nodes) bitmap bytes each time
+        self._res = np.tile(self._shard_rows, (len(levels), 1))
+        # staging overlay: {(level, shard): array (+ bitmap)}; None when
+        # no update open
         self._staged: Optional[Dict[tuple, np.ndarray]] = None
+        self._staged_mask: Optional[Dict[tuple, np.ndarray]] = None
+        # memory budget + shard heat (eviction policy inputs)
+        self.budget_rows = budget_rows
+        self.evict_policy = evict_policy
+        self.heat_decay = heat_decay
+        self._heat = np.zeros((len(levels), n_shards))
+        self._last = np.zeros((len(levels), n_shards), np.int64)
+        self._tick = 0
+        self._gather_depth = 0
+        self._recompute_depth = 0
+        # recompute-on-miss hook: (level, sorted-unique global ids,
+        # staged) -> (len(ids), D_level) rows, bitwise-equal to what a
+        # never-evicted store would hold for that view
+        self.recompute: Optional[Callable] = None
         self.version = 0
         self.n_lookups = 0
         self.rows_gathered = 0
         self.n_swaps = 0
+        self.hits = 0               # rows served from resident shards
+        self.misses = 0             # rows that had to be recomputed
+        self.n_evictions = 0        # shards dropped
+        self.rows_evicted = 0
+        self.n_recomputes = 0       # hook invocations (nested included)
+        self.n_recompute_spans = 0  # outermost invocations (timed ones)
+        self.rows_recomputed = 0
+        self.recompute_s = 0.0      # cumulative outermost wall time
+        self._enforce_budget()      # a tight budget evicts at build time
 
     @property
     def n_levels(self) -> int:
         return len(self._front)
 
     def level_dim(self, level: int) -> int:
-        return self._front[level][0].shape[1]
+        return self._dims[level]
 
     # -- read path ------------------------------------------------------
     def _owner(self, ids: np.ndarray) -> np.ndarray:
         return np.searchsorted(self.bounds, ids, side="right") - 1
 
-    def _gather(self, ids: np.ndarray, level: int, staged: bool) -> np.ndarray:
-        shards = self._front[level]
+    def _view_shard(self, level: int, s: int, staged: bool):
+        key = (level, s)
+        if staged and self._staged is not None and key in self._staged:
+            return self._staged[key], self._staged_mask[key]
+        return self._front[level][s], self._mask[level][s]
+
+    def _materialize_staged(self, level: int, s: int):
+        """Copy-on-write a shard into the open overlay (write or
+        staged-miss admission; the front must stay untouched so an abort
+        is a pure pointer drop)."""
+        key = (level, s)
+        if key not in self._staged:
+            data = self._front[level][s]
+            self._staged[key] = (data.copy() if data is not None else
+                                 np.zeros((int(self._shard_rows[s]),
+                                           self._dims[level]), np.float32))
+            self._staged_mask[key] = self._mask[level][s].copy()
+        return self._staged[key], self._staged_mask[key]
+
+    def _ensure(self, level: int, s: int, local: np.ndarray, staged: bool):
+        """Make ``local`` rows of (level, shard) resident in the given
+        view, recomputing misses through the hook.  Returns (data, mask)."""
+        data, mask = self._view_shard(level, s, staged)
+        have = mask[local] if data is not None else np.zeros(local.size, bool)
+        n_hit = int(have.sum())
+        self.hits += n_hit
+        self.misses += local.size - n_hit
+        if n_hit == local.size:
+            return data, mask
+        need = np.unique(local[~have])
+        if self.recompute is None:
+            raise EvictedRowMiss(
+                f"level {level} shard {s}: {need.size} rows not resident "
+                "and no recompute hook bound (store.recompute — see "
+                "gnnserve.delta.RecomputeOnMiss)")
+        assert level > 0, "level 0 (features) must never be evicted"
+        t0 = time.perf_counter()
+        self._recompute_depth += 1
+        try:
+            rows = np.asarray(
+                self.recompute(level, need + self.bounds[s], staged),
+                np.float32)
+        finally:
+            self._recompute_depth -= 1
+        if self._recompute_depth == 0:
+            # outermost calls only: nested recursion (lower-level inputs
+            # rebuilt on the way) is already inside this wall time —
+            # per-recompute latency is recompute_s / n_recompute_spans
+            self.recompute_s += time.perf_counter() - t0
+            self.n_recompute_spans += 1
+        self.n_recomputes += 1
+        self.rows_recomputed += int(need.size)
         if staged and self._staged is not None:
-            shards = [self._staged.get((level, s), shards[s])
-                      for s in range(self.n_shards)]
-        return _gather_rows(shards, self.bounds, ids)
+            # an overlay read must never leak in-progress values into the
+            # committed front (an abort would leave them behind) — admit
+            # into a copy-on-write staged shard instead
+            data, mask = self._materialize_staged(level, s)
+        else:
+            if data is None:
+                data = np.zeros((int(self._shard_rows[s]),
+                                 self._dims[level]), np.float32)
+                self._front[level][s] = data
+            self._res[level, s] += need.size        # front admission
+        data[need] = rows
+        mask[need] = True
+        return data, mask
+
+    def _gather(self, ids: np.ndarray, level: int,
+                staged: bool) -> np.ndarray:
+        ids = np.asarray(ids, np.int64)
+        _check_ids(ids, self.bounds)
+        self._tick += 1
+        out = np.empty((ids.size, self._dims[level]), np.float32)
+        owner = self._owner(ids)
+        self._gather_depth += 1
+        try:
+            for s in np.unique(owner):
+                sel = owner == s
+                local = ids[sel] - self.bounds[s]
+                data, mask = self._ensure(level, int(s), local, staged)
+                out[sel] = data[local]
+                self._heat[level, s] = self._heat_now(level, int(s)) \
+                    + local.size
+                self._last[level, s] = self._tick
+        finally:
+            self._gather_depth -= 1
+        if self._gather_depth == 0:
+            self._enforce_budget()
+        return out
 
     def lookup(self, ids: np.ndarray, level: int = -1) -> np.ndarray:
-        """Committed (front-buffer) rows; what the serve engine reads."""
+        """Committed (front-buffer) rows; what the serve engine reads.
+        Non-resident rows are rebuilt through the recompute hook."""
         level = level % self.n_levels
         self.n_lookups += 1
         self.rows_gathered += int(np.asarray(ids).size)
         return self._gather(ids, level, staged=False)
 
     def lookup_staged(self, ids: np.ndarray, level: int = -1) -> np.ndarray:
-        """Read-through the open staging overlay (delta refresh only)."""
+        """Read-through the open staging overlay (delta refresh only).
+        Misses are admitted into copy-on-write staged shards, never the
+        front — an abort discards them with the rest of the overlay."""
         return self._gather(ids, level % self.n_levels, staged=True)
 
     def snapshot(self) -> StoreSnapshot:
         """Pin the current committed epoch (cheap: pointer copies)."""
         return StoreSnapshot(self)
 
+    def ensure_resident(self, ids: np.ndarray, level: int = -1) -> None:
+        """Admit any non-resident rows of ``ids`` (recompute-on-miss)."""
+        self._gather(np.asarray(ids, np.int64), level % self.n_levels,
+                     staged=False)
+
+    def pinned_snapshot(self, ids: np.ndarray, level: int = -1
+                        ) -> StoreSnapshot:
+        """Admit ``ids`` at ``level`` and pin the epoch in one step:
+        budget enforcement is suppressed until AFTER the snapshot captures
+        the shard pointers, so an eviction racing the pin can never drop
+        rows the snapshot is about to serve."""
+        self._gather_depth += 1
+        try:
+            self._gather(np.asarray(ids, np.int64),
+                         level % self.n_levels, staged=False)
+            snap = StoreSnapshot(self)
+        finally:
+            self._gather_depth -= 1
+        self._enforce_budget()
+        return snap
+
+    # -- eviction -------------------------------------------------------
+    def _heat_now(self, level: int, s: int) -> float:
+        return float(self._heat[level, s]
+                     * self.heat_decay ** (self._tick - self._last[level, s]))
+
+    def resident_rows(self, level: int) -> int:
+        return int(self._res[level].sum())
+
+    def evict(self, level: int, s: int) -> int:
+        """Drop one shard's array; the residency bitmap is REPLACED with
+        a fresh all-False one (snapshots keep the old array+bitmap pair).
+        Level 0 is pinned.  Returns the number of rows evicted."""
+        level = level % self.n_levels
+        assert level > 0, "level 0 (features) is pinned"
+        if self._front[level][s] is None:
+            return 0
+        n = int(self._res[level, s])
+        self._front[level][s] = None
+        self._mask[level][s] = np.zeros(int(self._shard_rows[s]), bool)
+        self._res[level, s] = 0
+        self._heat[level, s] = 0.0
+        self.n_evictions += 1
+        self.rows_evicted += n
+        return n
+
+    def _victim_key(self, level: int):
+        if self.evict_policy == "lru":
+            return lambda s: (int(self._last[level, s]), s)
+        return lambda s: (self._heat_now(level, s),
+                          int(self._last[level, s]), s)
+
+    def _enforce_budget(self) -> None:
+        if self.budget_rows is None:
+            return
+        for level in range(1, self.n_levels):
+            total = int(self._res[level].sum())
+            while total > self.budget_rows:
+                cand = [s for s in range(self.n_shards)
+                        if self._res[level, s] > 0]
+                victim = min(cand, key=self._victim_key(level))
+                total -= self.evict(level, victim)
+
     # -- write path -----------------------------------------------------
     def begin_update(self) -> None:
         assert self._staged is None, "update already open"
         self._staged = {}
+        self._staged_mask = {}
 
     def write_rows(self, level: int, ids: np.ndarray, rows: np.ndarray) -> None:
         assert self._staged is not None, "begin_update first"
@@ -118,11 +373,11 @@ class EmbeddingStore:
         ids = np.asarray(ids, np.int64)
         owner = self._owner(ids)
         for s in np.unique(owner):
-            key = (level, int(s))
-            if key not in self._staged:          # copy-on-write per shard
-                self._staged[key] = self._front[level][s].copy()
+            data, mask = self._materialize_staged(level, int(s))
             sel = owner == s
-            self._staged[key][ids[sel] - self.bounds[s]] = rows[sel]
+            local = ids[sel] - self.bounds[s]
+            data[local] = rows[sel]
+            mask[local] = True
 
     def commit(self) -> int:
         """Swap dirtied shards into the front buffer; readers see the new
@@ -130,25 +385,69 @@ class EmbeddingStore:
         assert self._staged is not None, "no update open"
         for (level, s), shard in self._staged.items():
             self._front[level][s] = shard
+            self._mask[level][s] = self._staged_mask[(level, s)]
+            # popcount only the swapped (dirty) shards
+            self._res[level, s] = int(self._mask[level][s].sum())
         self._staged = None
+        self._staged_mask = None
         self.version += 1
         self.n_swaps += 1
+        self._enforce_budget()
         return self.version
 
     def abort(self) -> None:
         self._staged = None
+        self._staged_mask = None
 
     # -- diagnostics ----------------------------------------------------
+    def memory_stats(self) -> Dict[str, Dict[str, float]]:
+        """Per-level residency: rows resident, bytes resident, and budget
+        utilization (1.0 == at budget; level 0 reports util 0, pinned)."""
+        out = {}
+        for level in range(self.n_levels):
+            res = self.resident_rows(level)
+            cap = (self.budget_rows if (self.budget_rows is not None
+                                        and level > 0) else self.n_nodes)
+            out[f"level{level}"] = {
+                "resident_rows": res,
+                "total_rows": self.n_nodes,
+                "resident_bytes": res * self._dims[level] * 4,
+                "budget_rows": cap,
+                "budget_util": res / max(cap, 1) if level > 0 else 0.0,
+            }
+        return out
+
     def stats(self) -> Dict[str, float]:
+        mem = self.memory_stats()
+        evictable = [mem[f"level{l}"] for l in range(1, self.n_levels)]
+        resident_bytes = sum(v["resident_bytes"] for v in mem.values())
+        budget_total = sum(v["budget_rows"] for v in evictable)
+        resident_ev = sum(v["resident_rows"] for v in evictable)
         return {"version": self.version, "n_lookups": self.n_lookups,
                 "rows_gathered": self.rows_gathered, "n_swaps": self.n_swaps,
-                "n_shards": self.n_shards, "n_levels": self.n_levels}
+                "n_shards": self.n_shards, "n_levels": self.n_levels,
+                "hits": self.hits, "misses": self.misses,
+                "hit_rate": self.hits / max(self.hits + self.misses, 1),
+                "n_evictions": self.n_evictions,
+                "rows_evicted": self.rows_evicted,
+                "n_recomputes": self.n_recomputes,
+                "n_recompute_spans": self.n_recompute_spans,
+                "rows_recomputed": self.rows_recomputed,
+                "recompute_s": self.recompute_s,
+                "resident_bytes": resident_bytes,
+                "budget_rows": (-1 if self.budget_rows is None
+                                else self.budget_rows),
+                "budget_util": resident_ev / max(budget_total, 1)}
 
 
 def store_from_inference(X: np.ndarray, level_outputs: Sequence[np.ndarray],
-                         n_shards: int = 4) -> EmbeddingStore:
+                         n_shards: int = 4, *,
+                         budget_rows: Optional[int] = None,
+                         evict_policy: str = "heat") -> EmbeddingStore:
     """Build the store from a full epoch: X plus each layer's output as
     consumed by the next layer (see DeltaReinference.full_levels)."""
     return EmbeddingStore([np.asarray(X, np.float32)]
                           + [np.asarray(h, np.float32)
-                             for h in level_outputs], n_shards=n_shards)
+                             for h in level_outputs], n_shards=n_shards,
+                          budget_rows=budget_rows,
+                          evict_policy=evict_policy)

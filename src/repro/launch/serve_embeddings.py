@@ -12,6 +12,11 @@ mutations, printing serve/freshness stats.
 ``--executor dist`` runs the epoch AND every delta refresh through the
 distributed executor (per-partition frontier split on a p x m mesh);
 needs p*m devices, e.g.  XLA_FLAGS=--xla_force_host_platform_device_count=8.
+
+``--budget-rows R --evict-policy {lru,heat}`` caps each evictable store
+level at R resident rows: cold shards are dropped and lookups that miss
+rebuild exactly the missing rows through the delta engine
+(recompute-on-miss), bitwise-equal to an unbudgeted store.
 """
 from __future__ import annotations
 
@@ -26,15 +31,16 @@ from repro.core.gnn_models import init_gat, init_gcn, init_sage
 from repro.core.graph import csr_from_edges_distributed, make_dataset
 from repro.core.sampler import sample_layer_graphs
 from repro.gnnserve import (DeltaReinference, EmbeddingServeEngine, Query,
-                            store_from_inference)
+                            attach_recompute, store_from_inference)
 
 
 def build_service(dataset: str, model: str, *, fanout: int = 8,
                   n_layers: int = 3, d_feature: int = 64, n_shards: int = 4,
                   staleness_bound: int = 64, seed: int = 0,
-                  executor: str = "ref", p: int = 4, m: int = 2
-                  ) -> EmbeddingServeEngine:
-    src, dst, n = make_dataset(dataset, seed=seed)
+                  executor: str = "ref", p: int = 4, m: int = 2,
+                  budget_rows: int = 0, evict_policy: str = "heat",
+                  scale: float = 1.0) -> EmbeddingServeEngine:
+    src, dst, n = make_dataset(dataset, seed=seed, scale=scale)
     g, _ = csr_from_edges_distributed(src, dst, n, n_workers=4)
     lgs = sample_layer_graphs(g, fanout=fanout, n_layers=n_layers, seed=seed)
     rng = np.random.default_rng(seed)
@@ -64,7 +70,13 @@ def build_service(dataset: str, model: str, *, fanout: int = 8,
                           executor=executor)
     levels = ri.full_levels(X)
     print(f"[epoch0] {n} nodes x {n_layers} layers in {time.time()-t0:.2f}s")
-    store = store_from_inference(X, levels[1:], n_shards=n_shards)
+    store = store_from_inference(X, levels[1:], n_shards=n_shards,
+                                 budget_rows=budget_rows or None,
+                                 evict_policy=evict_policy)
+    if budget_rows:
+        attach_recompute(store, ri)
+        print(f"[budget] {budget_rows}/{n} rows per level resident "
+              f"({evict_policy} eviction, recompute-on-miss)")
     return EmbeddingServeEngine(store, ri, g,
                                 staleness_bound=staleness_bound)
 
@@ -101,6 +113,17 @@ def drive(eng: EmbeddingServeEngine, *, ticks: int = 50,
               f"(full epoch = {n * eng.reinfer.n_layers})")
     print(f"[stale] pending mutations at exit: {s['pending_mutations']} "
           f"(bound {eng.staleness_bound})")
+    if eng.store.budget_rows is not None:
+        mem = eng.memory_stats()
+        per_level = " ".join(
+            f"L{i}:{v['resident_bytes']/2**20:.2f}MB"
+            for i, v in enumerate(mem.values()))
+        print(f"[mem] resident {per_level} | util "
+              f"{s['store_budget_util']:.2f} | hit-rate "
+              f"{s['store_hit_rate']:.3f} ({s['store_misses']} misses, "
+              f"{s['store_n_evictions']} evictions, "
+              f"{s['store_rows_recomputed']} rows recomputed in "
+              f"{s['store_recompute_s']*1e3:.0f}ms)")
 
 
 def main():
@@ -119,11 +142,22 @@ def main():
                     help="delta-refresh backend (dist needs p*m devices)")
     ap.add_argument("--p", type=int, default=4, help="graph partitions")
     ap.add_argument("--m", type=int, default=2, help="feature partitions")
+    ap.add_argument("--budget-rows", type=int, default=0,
+                    help="resident-row cap per evictable level (0 = "
+                         "unbudgeted); misses recompute via the delta "
+                         "engine")
+    ap.add_argument("--evict-policy", default="heat",
+                    choices=["lru", "heat"],
+                    help="victim selection for over-budget levels")
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="scale the dataset's node count (CI smoke)")
     args = ap.parse_args()
     eng = build_service(args.dataset, args.model, fanout=args.fanout,
                         n_layers=args.layers,
                         staleness_bound=args.staleness_bound,
-                        executor=args.executor, p=args.p, m=args.m)
+                        executor=args.executor, p=args.p, m=args.m,
+                        budget_rows=args.budget_rows,
+                        evict_policy=args.evict_policy, scale=args.scale)
     drive(eng, ticks=args.ticks, queries_per_tick=args.queries_per_tick,
           mutations_per_tick=args.mutations_per_tick)
 

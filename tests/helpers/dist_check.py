@@ -107,6 +107,7 @@ def main():
     check("engine/sage", eng3.infer(X), local_sage_infer(lgs, X, ps), 5e-5)
 
     check_dist_delta(mesh, g, lgs, X)
+    check_evict_equivalence(mesh, g, lgs, X)
 
     print("ALL DISTRIBUTED CHECKS PASSED")
 
@@ -163,6 +164,79 @@ def check_dist_delta(mesh, g, lgs, X):
                   f"frontier={stats['frontier_sizes']}")
             if not exact:
                 sys.exit(1)
+
+
+def check_evict_equivalence(mesh, g, lgs, X):
+    """Memory-budgeted store on the DIST executor: with residency capped
+    at 50% then tightened to 25%, lookups and a mutated refresh
+    (mid-refresh staged misses included) must serve rows bitwise-equal
+    to an unbudgeted store — recompute-on-miss routes through
+    ``DistExecutor.run_rows``.  Reads are SAMPLED (not full scans): each
+    distinct recompute frontier compiles fresh collective geometries on
+    the mesh, so full scans at every level would dominate the suite's
+    wall clock without adding coverage.
+    """
+    import copy
+
+    from repro.core.ops import DistExecutor
+    from repro.gnnserve import (DeltaReinference, MutationLog,
+                                apply_edge_mutations, attach_recompute,
+                                store_from_inference)
+
+    N, D = X.shape
+    L = len(lgs)
+    dex = DistExecutor(mesh)
+    for model in ("gcn", "sage", "gat"):
+        rng = np.random.default_rng(11)
+        key = jax.random.PRNGKey(4)
+        dims = [D] * L + [32]
+        params = {"gcn": lambda: init_gcn(key, dims),
+                  "sage": lambda: init_sage(key, dims),
+                  "gat": lambda: init_gat(key, dims, heads=1)}[model]()
+
+        ri_o = DeltaReinference([copy.deepcopy(l) for l in lgs], model,
+                                params, executor=dex)
+        oracle = store_from_inference(X, ri_o.full_levels(X)[1:],
+                                      n_shards=4)
+        ri_b = DeltaReinference([copy.deepcopy(l) for l in lgs], model,
+                                params, executor=dex)
+        store = attach_recompute(
+            store_from_inference(X, ri_b.full_levels(X)[1:], n_shards=4,
+                                 budget_rows=N // 2), ri_b)
+
+        def sampled_equal(tag):
+            ids = np.sort(rng.choice(N, 96, replace=False))
+            exact = all(bool((store.lookup(ids, lvl) ==
+                              oracle.lookup(ids, lvl)).all())
+                        for lvl in range(1, L + 1))
+            st = store.stats()
+            ok = exact and st["n_evictions"] > 0 and st["misses"] > 0
+            print(f"{'OK ' if ok else 'FAIL'} evict_dist/{model}/{tag}: "
+                  f"bitwise={exact} evictions={st['n_evictions']} "
+                  f"misses={st['misses']} "
+                  f"recomputed={st['rows_recomputed']}")
+            if not ok:
+                sys.exit(1)
+
+        sampled_equal("budget0.5")
+        log = MutationLog()
+        log.add_edges(rng.integers(0, N, 8), rng.integers(0, N, 8))
+        fid = rng.choice(N, 3, replace=False)
+        log.update_features(fid, rng.standard_normal(
+            (3, D)).astype(np.float32))
+        batch = log.drain()
+        g2 = apply_edge_mutations(g, batch)
+        # lockstep refresh: both stores move version 0 -> 1, so the
+        # deterministic resample draws the same rows; the budgeted one
+        # recomputes its staged-overlay misses through run_rows
+        ri_o.refresh(oracle, g2, batch.feat_ids, batch.feat_rows,
+                     batch.affected_dsts())
+        ri_b.refresh(store, g2, batch.feat_ids, batch.feat_rows,
+                     batch.affected_dsts())
+        sampled_equal("budget0.5+refresh")
+        store.budget_rows = N // 4          # tighten: 50% -> 25%
+        store._enforce_budget()
+        sampled_equal("budget0.25")
 
 
 if __name__ == "__main__":

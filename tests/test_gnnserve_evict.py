@@ -1,0 +1,226 @@
+"""Memory-budgeted store equivalence: with residency capped at 25% / 50%
+a store must serve rows BITWISE-equal to an unbudgeted one — across all
+three models, the ref and pallas executors (dist runs the same check in
+``tests/helpers/dist_check.py::check_evict_equivalence``), and through
+mutated refreshes whose staged-overlay reads themselves miss and
+recompute.  Plus the engine-level guarantees: snapshot pinning beats
+mid-query eviction, and the stats surface the memory model."""
+import copy
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.gnn_models import init_gat, init_gcn, init_sage
+from repro.core.graph import csr_from_edges, rmat_edges
+from repro.gnnserve import (DeltaReinference, EmbeddingServeEngine,
+                            MutationLog, Query, apply_edge_mutations,
+                            attach_recompute, store_from_inference)
+from repro.core.sampler import sample_layer_graphs
+
+N, D, L, FANOUT = 256, 16, 2, 6
+
+
+@pytest.fixture(scope="module")
+def world():
+    src, dst = rmat_edges(N, N * 8, seed=5)
+    g = csr_from_edges(src, dst, N)
+    lgs = sample_layer_graphs(g, fanout=FANOUT, n_layers=L, seed=2)
+    rng = np.random.default_rng(4)
+    X = rng.standard_normal((N, D), dtype=np.float32)
+    return g, src, dst, lgs, X
+
+
+def _params(model):
+    key = jax.random.PRNGKey(0)
+    dims = [D] * (L + 1)
+    return {"gcn": lambda: init_gcn(key, dims),
+            "sage": lambda: init_sage(key, dims),
+            "gat": lambda: init_gat(key, dims, heads=4)}[model]()
+
+
+def _build(lgs, X, model, params, executor, budget, policy="heat"):
+    ri = DeltaReinference([copy.deepcopy(l) for l in lgs], model, params,
+                          executor=executor)
+    store = store_from_inference(X, ri.full_levels(X)[1:], n_shards=4,
+                                 budget_rows=budget, evict_policy=policy)
+    if budget is not None:
+        attach_recompute(store, ri)
+    return ri, store
+
+
+def _mutation(rng, src, dst, n_edge=8, n_feat=3):
+    log = MutationLog()
+    log.add_edges(rng.integers(0, N, n_edge), rng.integers(0, N, n_edge))
+    pick = rng.choice(src.size, n_edge, replace=False)
+    log.remove_edges(src[pick], dst[pick])
+    fid = rng.choice(N, n_feat, replace=False)
+    log.update_features(fid, rng.standard_normal((n_feat, D),
+                                                 dtype=np.float32))
+    return log.drain()
+
+
+@pytest.mark.parametrize("model", ["gcn", "sage", "gat"])
+@pytest.mark.parametrize("executor", ["ref", "pallas"])
+@pytest.mark.parametrize("frac", [0.25, 0.5])
+def test_budgeted_store_bitwise_equal(world, model, executor, frac):
+    g, src, dst, lgs, X = world
+    params = _params(model)
+    ri_o, oracle = _build(lgs, X, model, params, executor, None)
+    ri_b, store = _build(lgs, X, model, params, executor, int(N * frac))
+    all_ids = np.arange(N)
+    rng = np.random.default_rng(7)
+
+    # cold scan: the budgeted store rebuilds every evicted row on demand
+    for lvl in range(L + 1):
+        np.testing.assert_array_equal(store.lookup(all_ids, lvl),
+                                      oracle.lookup(all_ids, lvl))
+    assert store.stats()["n_evictions"] > 0
+    assert store.stats()["misses"] > 0
+
+    # two mutated refreshes in lockstep; mid-refresh reads go through
+    # the staged overlay and hit evicted shards (recompute through it)
+    gm = g
+    for _ in range(2):
+        batch = _mutation(rng, src, dst)
+        gm = apply_edge_mutations(gm, batch)
+        ri_o.refresh(oracle, gm, batch.feat_ids, batch.feat_rows,
+                     batch.affected_dsts())
+        miss0 = store.misses
+        ri_b.refresh(store, gm, batch.feat_ids, batch.feat_rows,
+                     batch.affected_dsts())
+        assert store.misses > miss0          # the overlay path was used
+        ids = rng.choice(N, 64, replace=False)
+        np.testing.assert_array_equal(store.lookup(ids, -1),
+                                      oracle.lookup(ids, -1))
+    for lvl in range(L + 1):
+        np.testing.assert_array_equal(store.lookup(all_ids, lvl),
+                                      oracle.lookup(all_ids, lvl))
+
+
+@pytest.mark.parametrize("policy", ["heat", "lru"])
+def test_policies_evict_cold_not_hot(world, policy):
+    """Both policies must keep a repeatedly-hit shard resident and evict
+    the never-touched ones."""
+    g, src, dst, lgs, X = world
+    params = _params("gcn")
+    ri, store = _build(lgs, X, "gcn", params, "ref", N // 4, policy)
+    hot = np.arange(0, N // 4)               # shard 0, exactly the budget
+    for _ in range(6):
+        store.lookup(hot, 1)
+    assert store.resident_rows(1) <= N // 4
+    misses_before = store.misses
+    store.lookup(hot, 1)                     # still resident: all hits
+    assert store.misses == misses_before
+
+
+def test_mid_query_eviction_cannot_tear(world):
+    """A query pinned at epoch v must serve epoch-v bits even when a
+    refresh commits AND the budget evicts its shards mid-query."""
+    g, src, dst, lgs, X = world
+    params = _params("gcn")
+    ri, store = _build(lgs, X, "gcn", params, "ref", N // 4)
+    levels_v0 = [store.lookup(np.arange(N), lvl).copy()
+                 for lvl in range(L + 1)]
+    eng = EmbeddingServeEngine(store, ri, g, batch_slots=2,
+                               rows_per_step=16, staleness_bound=4)
+    q = Query(uid=0, node_ids=np.arange(64))
+    eng.submit(q)
+    eng.step()                               # pins epoch 0, gathers 0..15
+    rng = np.random.default_rng(9)
+    eng.mutate().add_edges(rng.integers(0, N, 6), rng.integers(0, N, 6))
+    # thrash the budget between this query's gathers with competing
+    # queries over DIFFERENT rows (forces evictions of q's shards)
+    eng.submit(Query(uid=1, node_ids=np.arange(N - 64, N)))
+    eng.run()                                # refresh + evictions inside
+    assert eng.store.version == 1
+    assert q.done and q.served_version == 0
+    np.testing.assert_array_equal(q.out, levels_v0[-1][q.node_ids])
+
+
+def test_fused_gather_across_pins_survives_eviction(world):
+    """Two queries pinned at the same version can hold DIFFERENT shard
+    arrays when the budget evicts + re-admits between their pins; after
+    a mid-flight epoch flip the fused gather must fall back to each
+    query's own snapshot instead of raising SnapshotMiss — and both
+    responses stay on their pinned epoch."""
+    g, src, dst, lgs, X = world
+    params = _params("gcn")
+    ri, store = _build(lgs, X, "gcn", params, "ref", N // 4)  # 1 shard
+    levels_v0 = store.lookup(np.arange(N), -1).copy()
+    eng = EmbeddingServeEngine(store, ri, g, batch_slots=2,
+                               rows_per_step=16, staleness_bound=4)
+    q1 = Query(uid=0, node_ids=np.arange(3 * (N // 4), N))     # shard 3
+    q2 = Query(uid=1, node_ids=np.arange(0, N // 4))           # shard 0
+    eng.submit(q1)
+    eng.submit(q2)
+    eng.step()               # both pin v0; q2's pin evicts q1's shard
+    rng = np.random.default_rng(21)
+    eng.mutate().add_edges(rng.integers(0, N, 6), rng.integers(0, N, 6))
+    eng.run()                # refresh commits mid-flight, gathers resume
+    assert eng.store.version == 1
+    assert q1.done and q2.done
+    assert q1.served_version == 0 and q2.served_version == 0
+    np.testing.assert_array_equal(q1.out, levels_v0[q1.node_ids])
+    np.testing.assert_array_equal(q2.out, levels_v0[q2.node_ids])
+
+
+def test_failed_refresh_drops_mid_refresh_subset_plans(world):
+    """A refresh that fails AFTER resampling rolls the layer graphs back
+    in place; any frontier plan cached between the resample and the
+    failure (the dist layer loop does this) describes samples that no
+    longer exist and must be invalidated with the rollback."""
+    from repro.core.partition import build_subset_plan_cached
+    g, src, dst, lgs, X = world
+    params = _params("gcn")
+    ri, store = _build(lgs, X, "gcn", params, "ref", None)
+    rng = np.random.default_rng(31)
+    batch = _mutation(rng, src, dst)
+    g2 = apply_edge_mutations(g, batch)
+    rows = np.arange(0, N, 4, dtype=np.int64)
+    leaked = {}
+
+    def cache_then_fail(l, r, read_level):
+        # what DistExecutor.run_rows does right before compute
+        leaked["plan"] = build_subset_plan_cached(ri.layer_graphs[0],
+                                                  rows, 4)
+        raise ValueError("injected layer failure")
+
+    orig = ri._layer_rows
+    ri._layer_rows = cache_then_fail
+    with pytest.raises(ValueError):
+        ri.refresh(store, g2, batch.feat_ids, batch.feat_rows,
+                   batch.affected_dsts())
+    ri._layer_rows = orig
+    assert store.version == 0                    # nothing committed
+    # the plan cached over the rolled-back samples must NOT be served
+    assert build_subset_plan_cached(ri.layer_graphs[0], rows, 4) \
+        is not leaked["plan"]
+
+
+def test_stats_surface_memory_model(world):
+    """`stats()`/`memory_stats()` expose resident bytes per level and
+    budget utilization without reaching into `_front` (the satellite)."""
+    g, src, dst, lgs, X = world
+    params = _params("gcn")
+    ri, store = _build(lgs, X, "gcn", params, "ref", N // 2)
+    mem = store.memory_stats()
+    assert set(mem) == {f"level{i}" for i in range(L + 1)}
+    for level, v in enumerate(mem.values()):
+        assert v["resident_bytes"] == v["resident_rows"] * D * 4
+        if level > 0:
+            assert v["resident_rows"] <= N // 2
+            assert 0.0 <= v["budget_util"] <= 1.0
+    # level 0 is pinned and fully resident
+    assert mem["level0"]["resident_rows"] == N
+    s = store.stats()
+    for key in ("hits", "misses", "hit_rate", "n_evictions",
+                "rows_evicted", "n_recomputes", "n_recompute_spans",
+                "rows_recomputed", "recompute_s", "resident_bytes",
+                "budget_rows", "budget_util"):
+        assert key in s, key
+    assert s["budget_rows"] == N // 2
+    eng = EmbeddingServeEngine(store, ri, g)
+    for key in ("store_hit_rate", "store_n_evictions",
+                "store_resident_bytes", "store_budget_util"):
+        assert key in eng.stats(), key

@@ -1,0 +1,267 @@
+"""Property tests on the gnnserve store/engine invariants.
+
+Random interleavings of ``begin_update`` / ``write_rows`` / ``commit`` /
+``abort`` / ``snapshot`` / ``lookup`` / ``evict`` against a shadow model
+(a plain never-evicted copy of every level) check, after EVERY op:
+
+  1. committed reads are bitwise-equal to the shadow — eviction plus
+     recompute-on-miss is invisible (no torn epochs);
+  2. snapshot reads are version-stable: a pinned snapshot keeps serving
+     its epoch bitwise across later commits AND evictions, and an
+     unpinned read after the epoch moved on either serves the OLD epoch
+     or raises ``SnapshotMiss`` — never mixes epochs;
+  3. the memory budget holds: every evictable level stays at or under
+     ``budget_rows`` resident rows at every API boundary;
+  4. the residency bitmap is truthful: every row it marks resident holds
+     exactly the shadow's bytes for the matching view;
+  5. the staging overlay gives read-your-writes (``lookup_staged``)
+     while committed reads stay on the old epoch, and ``abort`` discards
+     every staged byte including recompute-admitted ones;
+  6. ``MutationLog`` drain -> requeue (the ``engine.refresh`` failure
+     path) preserves the pending set, the op ORDER, and therefore the
+     net CSR effect.
+
+The suite runs with or without hypothesis: when the package is absent
+(some local sandboxes) each property degrades to a fixed seed sweep, so
+CI and local runs never skip-collect the invariants.
+"""
+import numpy as np
+import pytest
+
+from repro.core.graph import csr_from_edges, rmat_edges
+from repro.gnnserve import (EmbeddingStore, MutationLog, SnapshotMiss,
+                            apply_edge_mutations)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def seed_property(max_examples: int = 25, fallback: int = 10):
+    """``@given(seed)`` under hypothesis, a seed sweep without it."""
+    if HAVE_HYPOTHESIS:
+        def deco(f):
+            return settings(max_examples=max_examples, deadline=None)(
+                given(st.integers(0, 2 ** 32 - 1))(f))
+        return deco
+    return pytest.mark.parametrize("seed", range(fallback))
+
+
+N, D, LEVELS, SHARDS = 64, 4, 3, 4          # features + 2 layers
+
+
+class Shadow:
+    """Never-evicted twin: the ground truth every view must match."""
+
+    def __init__(self, rng):
+        self.committed = [rng.standard_normal((N, D)).astype(np.float32)
+                          for _ in range(LEVELS)]
+        self.staged = None
+        self.version = 0
+        self.history = {0: [a.copy() for a in self.committed]}
+
+    def view(self, staged):
+        return (self.staged if staged and self.staged is not None
+                else self.committed)
+
+    def begin(self):
+        self.staged = [a.copy() for a in self.committed]
+
+    def commit(self):
+        self.committed, self.staged = self.staged, None
+        self.version += 1
+        self.history[self.version] = [a.copy() for a in self.committed]
+
+    def abort(self):
+        self.staged = None
+
+
+def _mk_store(shadow, budget, policy):
+    store = EmbeddingStore([a.copy() for a in shadow.committed],
+                           n_shards=SHARDS, budget_rows=budget,
+                           evict_policy=policy)
+    # oracle hook: what a never-evicted store would hold for that view
+    store.recompute = lambda level, ids, staged: \
+        shadow.view(staged)[level][ids]
+    return store
+
+
+def _rand_ids(rng, unique=False):
+    k = int(rng.integers(1, N // 2))
+    ids = rng.integers(0, N, k)
+    return np.unique(ids) if unique else ids
+
+
+def _check_all(store, shadow, rng, budget):
+    # (3) budget cap at every API boundary
+    if budget is not None:
+        for level in range(1, LEVELS):
+            assert store.resident_rows(level) <= budget, level
+    # (4) residency bitmap truthfulness, random shard spot-check — and
+    # the incremental popcount counters must agree with the bitmaps
+    level = int(rng.integers(0, LEVELS))
+    s = int(rng.integers(0, SHARDS))
+    data, mask = store._view_shard(level, s, staged=False)
+    if data is not None and mask.any():
+        lo = store.bounds[s]
+        rows = np.nonzero(mask)[0]
+        np.testing.assert_array_equal(
+            data[rows], shadow.committed[level][rows + lo])
+    assert store.resident_rows(level) == \
+        sum(int(m.sum()) for m in store._mask[level])
+
+
+@seed_property()
+@pytest.mark.parametrize("policy", ["heat", "lru"])
+def test_interleaved_ops_never_tear(policy, seed):
+    rng = np.random.default_rng(seed)
+    shadow = Shadow(rng)
+    budget = int(rng.integers(N // 4, N))       # 25%..100% of a level
+    store = _mk_store(shadow, budget, policy)
+    snaps = []
+
+    for _ in range(40):
+        op = rng.choice(["lookup", "staged_lookup", "begin", "write",
+                         "commit", "abort", "evict", "snapshot",
+                         "snap_read"])
+        open_ = store._staged is not None
+        if op == "lookup":
+            ids = _rand_ids(rng)
+            level = int(rng.integers(0, LEVELS))
+            got = store.lookup(ids, level)
+            np.testing.assert_array_equal(            # (1) no torn epochs
+                got, shadow.committed[level][ids])
+        elif op == "staged_lookup" and open_:
+            ids = _rand_ids(rng)
+            level = int(rng.integers(0, LEVELS))
+            np.testing.assert_array_equal(            # (5) read-your-writes
+                store.lookup_staged(ids, level),
+                shadow.view(True)[level][ids])
+        elif op == "begin" and not open_:
+            store.begin_update()
+            shadow.begin()
+        elif op == "write" and open_:
+            ids = _rand_ids(rng, unique=True)
+            level = int(rng.integers(0, LEVELS))
+            rows = rng.standard_normal((ids.size, D)).astype(np.float32)
+            store.write_rows(level, ids, rows)
+            shadow.staged[level][ids] = rows
+            # (5) committed reads stay on the old epoch
+            np.testing.assert_array_equal(
+                store.lookup(ids, level), shadow.committed[level][ids])
+        elif op == "commit" and open_:
+            store.commit()
+            shadow.commit()
+            assert store.version == shadow.version
+        elif op == "abort" and open_:
+            store.abort()
+            shadow.abort()
+        elif op == "evict":
+            store.evict(int(rng.integers(1, LEVELS)),
+                        int(rng.integers(0, SHARDS)))
+        elif op == "snapshot":
+            ids = _rand_ids(rng, unique=True)
+            level = int(rng.integers(0, LEVELS))
+            snap = store.pinned_snapshot(ids, level)
+            snaps.append((snap, ids, level,
+                          shadow.committed[level][ids].copy()))
+        elif op == "snap_read" and snaps:
+            snap, ids, level, want = snaps[int(rng.integers(len(snaps)))]
+            # (2) pinned rows: version-stable across commits + evictions
+            np.testing.assert_array_equal(snap.lookup(ids, level), want)
+            # (2) unpinned rows: the snapshot's OWN epoch or SnapshotMiss
+            other = _rand_ids(rng)
+            lvl2 = int(rng.integers(0, LEVELS))
+            try:
+                got = snap.lookup(other, lvl2)
+            except SnapshotMiss:
+                assert snap.version != store.version
+            else:
+                np.testing.assert_array_equal(
+                    got, shadow.history[snap.version][lvl2][other])
+        _check_all(store, shadow, rng, budget)
+
+    if store._staged is not None:               # (5) abort discards all
+        store.abort()
+        shadow.abort()
+    all_ids = np.arange(N)
+    for level in range(LEVELS):
+        np.testing.assert_array_equal(store.lookup(all_ids, level),
+                                      shadow.committed[level])
+
+
+@seed_property()
+def test_eviction_without_hook_raises_instead_of_tearing(seed):
+    """A budgeted store with no recompute hook must fail loudly on a
+    miss, never serve stale or zero rows."""
+    from repro.gnnserve import EvictedRowMiss
+    rng = np.random.default_rng(seed)
+    shadow = Shadow(rng)
+    store = EmbeddingStore([a.copy() for a in shadow.committed],
+                           n_shards=SHARDS)
+    level = int(rng.integers(1, LEVELS))
+    s = int(rng.integers(0, SHARDS))
+    n_evicted = store.evict(level, s)
+    assert n_evicted == N // SHARDS
+    hit = np.arange(store.bounds[s], store.bounds[s + 1])
+    with pytest.raises(EvictedRowMiss):
+        store.lookup(hit, level)
+    # other shards still serve, and level 0 is never evictable
+    other = (s + 1) % SHARDS
+    ids = np.arange(store.bounds[other], store.bounds[other + 1])
+    np.testing.assert_array_equal(store.lookup(ids, level),
+                                  shadow.committed[level][ids])
+    with pytest.raises(AssertionError):
+        store.evict(0, s)
+
+
+def _random_log(rng, n_nodes):
+    log = MutationLog()
+    pairs = [(int(rng.integers(0, n_nodes)), int(rng.integers(0, n_nodes)))
+             for _ in range(int(rng.integers(1, 20)))]
+    for s, d in pairs:
+        # bias toward repeated ops on the same pair: the order-sensitive
+        # cases (add-then-del vs del-then-add) must round-trip exactly
+        for _ in range(int(rng.integers(1, 3))):
+            if rng.random() < 0.5:
+                log.add_edge(s, d)
+            else:
+                log.remove_edge(s, d)
+    n_feat = int(rng.integers(0, 5))
+    if n_feat:
+        ids = rng.integers(0, n_nodes, n_feat)      # dups: last-writer-wins
+        log.update_features(ids, rng.standard_normal((n_feat, D))
+                            .astype(np.float32))
+    return log
+
+
+@seed_property()
+def test_mutation_log_drain_requeue_roundtrip(seed):
+    """(6) drain -> requeue -> drain preserves the pending set AND the
+    op order, so the re-applied batch has the same net CSR effect — the
+    ``engine.refresh`` failure path loses nothing and reorders nothing."""
+    rng = np.random.default_rng(seed)
+    n_nodes = 32
+    log = _random_log(rng, n_nodes)
+    pending = log.pending
+    batch1 = log.drain()
+    assert log.pending == 0
+    log.requeue(batch1)
+    assert log.pending == pending
+    batch2 = log.drain()
+    assert batch2.edge_ops == batch1.edge_ops       # exact order
+    f1 = dict(zip(batch1.feat_ids.tolist(), map(bytes, batch1.feat_rows)))
+    f2 = dict(zip(batch2.feat_ids.tolist(), map(bytes, batch2.feat_rows)))
+    assert f1 == f2
+    assert batch1.n_new_nodes == batch2.n_new_nodes
+
+    # same net effect on a real CSR
+    src, dst = rmat_edges(n_nodes, n_nodes * 4, seed=seed % 1000)
+    g = csr_from_edges(src, dst, n_nodes)
+    g1 = apply_edge_mutations(g, batch1)
+    g2 = apply_edge_mutations(g, batch2)
+    np.testing.assert_array_equal(g1.indptr, g2.indptr)
+    for v in range(n_nodes):
+        assert sorted(g1.neighbors(v)) == sorted(g2.neighbors(v)), v

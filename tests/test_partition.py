@@ -56,3 +56,51 @@ def test_unique_rows_fewer_than_edges(layer_graphs):
 def test_bad_partition_rejected(layer_graphs):
     with pytest.raises(AssertionError):
         build_plan(layer_graphs, 7, 1)   # 256 % 7 != 0
+
+
+def test_subset_plan_cache_hits_and_invalidation(layer_graphs):
+    """Repeated recompute of the same hot frontier must reuse the cached
+    plan (signature: sorted row ids + partition geometry); an in-place
+    resample must invalidate it."""
+    import copy
+
+    from repro.core.partition import (SUBSET_PLAN_CACHE,
+                                      build_subset_plan,
+                                      build_subset_plan_cached,
+                                      invalidate_subset_plans)
+    lg = copy.deepcopy(layer_graphs[0])
+    rows = np.arange(0, lg.n_nodes, 3, dtype=np.int64)
+    before = dict(SUBSET_PLAN_CACHE)
+    p1 = build_subset_plan_cached(lg, rows, 4)
+    assert SUBSET_PLAN_CACHE["misses"] == before["misses"] + 1
+    p2 = build_subset_plan_cached(lg, rows, 4)
+    assert SUBSET_PLAN_CACHE["hits"] == before["hits"] + 1
+    assert p2 is p1
+    # cached plan is the real plan
+    fresh = build_subset_plan(lg, rows, 4)
+    np.testing.assert_array_equal(p1.row_ids, fresh.row_ids)
+    np.testing.assert_array_equal(p1.edge_pos, fresh.edge_pos)
+    np.testing.assert_array_equal(p1.send_local, fresh.send_local)
+
+    # different frontier or geometry -> different cache slot
+    assert build_subset_plan_cached(lg, rows[:-1], 4) is not p1
+    assert build_subset_plan_cached(lg, rows, 2) is not p1
+    assert build_subset_plan_cached(lg, rows, 4) is p1   # p1 still cached
+
+    # in-place mutation (what resample_rows does) must invalidate
+    invalidate_subset_plans(lg)
+    assert build_subset_plan_cached(lg, rows, 4) is not p1
+
+
+def test_resample_rows_invalidates_subset_plans(layer_graphs, small_graph):
+    """The delta engine's resample path must not serve stale plans."""
+    import copy
+
+    from repro.core.partition import build_subset_plan_cached
+    from repro.gnnserve import resample_rows
+    lgs = [copy.deepcopy(lg) for lg in layer_graphs]
+    rows = np.arange(0, lgs[0].n_nodes, 2, dtype=np.int64)
+    p1 = build_subset_plan_cached(lgs[0], rows, 4)
+    resample_rows(small_graph, lgs, rows[:5], seed=9)
+    p2 = build_subset_plan_cached(lgs[0], rows, 4)
+    assert p2 is not p1
