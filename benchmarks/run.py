@@ -31,6 +31,7 @@ MODULES = {
     "fig21": "benchmarks.bench_feature_prep",
     "fig3": "benchmarks.bench_breakdown",
     "incremental": "benchmarks.bench_incremental",
+    "qos": "benchmarks.bench_qos",
 }
 ALIASES = {"e2e": "fig14"}
 

@@ -39,9 +39,11 @@ def draw_fixed_fanout(deg: np.ndarray, starts: np.ndarray,
                       ) -> Tuple[np.ndarray, np.ndarray]:
     """One fixed-fanout draw for the rows described by (deg, starts):
     uniform with replacement where deg > fanout, each neighbor once
-    otherwise (see DESIGN.md §8).  Shared by the full sampler and the
-    online row-resampler (gnnserve.delta), whose bitwise-equivalence
-    guarantee depends on the two staying identical."""
+    otherwise (see DESIGN.md §8).  The online row-resampler
+    (``gnnserve.delta.resample_rows``) mirrors these take-all/mask
+    semantics with a content-addressed counter-based draw (its
+    batching-invariance guarantee needs per-row independent streams,
+    which a shared sequential rng cannot give)."""
     has = deg > 0
     draw = rng.integers(0, np.maximum(deg, 1)[:, None],
                         size=(deg.size, fanout))

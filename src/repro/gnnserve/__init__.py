@@ -39,6 +39,19 @@ graph mutates, without re-running full epochs:
                  sharded gather per step, and a staleness bound on
                  pending mutations that triggers delta refresh inline.
 
+  ``qos``        Multi-tenant QoS scheduling: tenants declared with
+                 priority / slot quota / token-bucket rate / per-tenant
+                 staleness SLO replace the engine's single global bound
+                 and FIFO queue.  Slots and the per-step row budget are
+                 split deficit-weighted-fair (work-conserving, with
+                 preemptive quota reclaim and a K-step starvation
+                 bound); refresh planning is deadline-driven off the
+                 tightest ACTIVE tenant SLO, with lagged per-tenant
+                 epoch views — each tenant's reads are bitwise-equal to
+                 a single-tenant engine run at that tenant's SLO
+                 (content-addressed resampling makes refresh batching
+                 invariant).
+
 Dataflow:  queries ->  engine.step -> store.lookup (front buffer)
            mutations -> MutationLog -> [staleness bound trips]
                      -> apply_edge_mutations -> resample_rows
@@ -51,17 +64,22 @@ Entry points: ``launch/serve_embeddings.py`` (CLI service loop),
 """
 from repro.gnnserve.delta import (DeltaReinference, RecomputeOnMiss,
                                   attach_recompute, build_reverse_index,
-                                  forward_frontier, resample_rows)
+                                  forward_frontier, resample_rows,
+                                  splice_reverse_index)
 from repro.gnnserve.engine import EmbeddingServeEngine, Query
 from repro.gnnserve.mutations import (MutationBatch, MutationLog,
                                       apply_edge_mutations)
+from repro.gnnserve.qos import (QoSScheduler, TenantRegistry, TenantSpec,
+                                parse_tenants)
 from repro.gnnserve.store import (EmbeddingStore, EvictedRowMiss,
                                   SnapshotMiss, StoreSnapshot,
                                   store_from_inference)
 
 __all__ = ["DeltaReinference", "RecomputeOnMiss", "attach_recompute",
            "build_reverse_index", "forward_frontier",
-           "resample_rows", "EmbeddingServeEngine", "Query",
+           "resample_rows", "splice_reverse_index",
+           "EmbeddingServeEngine", "Query",
            "MutationBatch", "MutationLog", "apply_edge_mutations",
+           "QoSScheduler", "TenantRegistry", "TenantSpec", "parse_tenants",
            "EmbeddingStore", "EvictedRowMiss", "SnapshotMiss",
            "StoreSnapshot", "store_from_inference"]

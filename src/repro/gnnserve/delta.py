@@ -33,6 +33,7 @@ jnp's gather fills OOB with NaN and NaN*0 poisons the aggregation.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -42,10 +43,32 @@ from repro.core.gnn_models import model_spec
 from repro.core.graph import Graph
 from repro.core.ops import DenseIO, DistExecutor, get_executor, run_layer
 from repro.core.partition import invalidate_subset_plans, pad_bucket
-from repro.core.sampler import LayerGraph, draw_fixed_fanout
+from repro.core.sampler import LayerGraph
 from repro.gnnserve.store import EmbeddingStore
 
 import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------------
+# content-addressed row hashing (splitmix64, vectorized)
+# ----------------------------------------------------------------------
+
+_GOLDEN = np.uint64(0x9E3779B97F4A7C15)
+_MIX_B = np.uint64(0xBF58476D1CE4E5B9)
+_MIX_C = np.uint64(0x94D049BB133111EB)
+
+
+def _mix64(x: np.ndarray) -> np.ndarray:
+    """splitmix64 finalizer over uint64 arrays (wrapping arithmetic) —
+    the counter-based generator behind ``resample_rows``'s per-row
+    independent streams.  A hash, not a crypto primitive."""
+    x = x + _GOLDEN
+    x ^= x >> np.uint64(30)
+    x *= _MIX_B
+    x ^= x >> np.uint64(27)
+    x *= _MIX_C
+    x ^= x >> np.uint64(31)
+    return x
 
 
 # ----------------------------------------------------------------------
@@ -82,22 +105,110 @@ def build_reverse_index(lg: LayerGraph) -> ReverseIndex:
     return ReverseIndex(indptr=indptr, rows=dst_rows[order].astype(np.int64))
 
 
+def splice_reverse_index(rev: ReverseIndex, rows: np.ndarray,
+                         old_nbr: np.ndarray, old_mask: np.ndarray,
+                         new_nbr: np.ndarray, new_mask: np.ndarray
+                         ) -> ReverseIndex:
+    """Splice the resampled ``rows``' old/new entries into an existing
+    reverse index, EXACTLY equal to ``build_reverse_index`` on the
+    mutated layer graph — sorting work is O(changed log changed) plus a
+    few flat C array passes for the bulk moves, instead of the rebuild's
+    full N*F nonzero + E log E argsort.
+
+    The trick: a resampled row's old entries are precisely every
+    occurrence of its id in ``rev.rows`` (one global delete mask), and
+    because spans are source-ascending with row-sorted contents, the
+    composite key ``src * (N+1) + row`` is GLOBALLY sorted — so the new
+    entries' merge positions come from one ``searchsorted`` and one
+    ``insert``, value-level merge included.
+
+    ``old_nbr/old_mask`` are the rows' pre-resample fanout slices (the
+    same copies ``DeltaReinference.refresh`` snapshots for rollback);
+    ``new_nbr/new_mask`` their post-resample state.
+    """
+    rows = np.asarray(rows, np.int64)
+    if rows.size == 0:
+        return rev
+    n_nodes = rev.indptr.size - 1
+    old_src = old_nbr[old_mask].astype(np.int64)
+    new_src = new_nbr[new_mask].astype(np.int64)
+
+    # delete: every occurrence of a resampled consumer row
+    keep = ~np.isin(rev.rows, rows)
+    kept = rev.rows[keep]
+    assert int((~keep).sum()) == int(old_mask.sum()), \
+        "reverse index inconsistent with the rows' pre-resample state"
+    src_kept = np.repeat(np.arange(n_nodes, dtype=np.int64),
+                         np.diff(rev.indptr))[keep]
+
+    # insert: new (src, row) pairs, value-level merged via composite key
+    new_rows_rep = np.repeat(rows, new_mask.sum(axis=1))
+    order = np.lexsort((new_rows_rep, new_src))
+    ns, nr = new_src[order], new_rows_rep[order]
+    stride = np.int64(n_nodes + 1)
+    pos = np.searchsorted(src_kept * stride + kept, ns * stride + nr)
+    out = np.insert(kept, pos, nr)
+
+    counts = (np.diff(rev.indptr)
+              - np.bincount(old_src, minlength=n_nodes)
+              + np.bincount(new_src, minlength=n_nodes))
+    indptr = np.zeros(n_nodes + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    assert out.size == indptr[-1], "reverse-index splice drifted"
+    return ReverseIndex(indptr=indptr, rows=out)
+
+
 def resample_rows(g: Graph, layer_graphs: Sequence[LayerGraph],
                   rows: np.ndarray, seed: int) -> None:
     """Deterministically re-draw the given rows of every layer graph from
     the (mutated) CSR, in place — mirrors ``sampler.sample_layer_graphs``
-    restricted to a row subset."""
+    restricted to a row subset.
+
+    Seeding is CONTENT-ADDRESSED per row: row r's draw is a pure
+    function of (seed, r, layer index, r's CSR neighborhood bytes) — NOT
+    of which refresh batch r happened to ride in.  That makes refresh
+    *batching-invariant*: folding one mutation stream in one big batch
+    or many small ones lands on bitwise-identical layer graphs (and,
+    via the per-refresh full-epoch equivalence, identical store bytes)
+    whenever the final CSR matches.  The QoS engine's per-tenant
+    freshness views rely on this — a loose-SLO tenant coalescing at its
+    own deadlines must read the same bits a single-tenant engine at
+    that SLO would produce, even while a strict tenant forces extra
+    intermediate refreshes on the shared store.
+    """
     rows = np.asarray(rows, np.int64)
     if rows.size == 0:
         return
-    rng = np.random.default_rng(seed)
     deg = np.diff(g.indptr)[rows]
     starts = g.indptr[:-1][rows]
-    for lg in layer_graphs:
-        nbr, mask = draw_fixed_fanout(deg, starts, g.indices, g.n_edges,
-                                      lg.fanout, rng)
-        lg.nbr[rows] = nbr
-        lg.mask[rows] = mask
+    crc = np.fromiter(
+        (zlib.crc32(g.indices[g.indptr[r]:g.indptr[r + 1]].tobytes())
+         for r in rows.tolist()), np.uint64, rows.size)
+    key = _mix64(_mix64(_mix64(np.full(rows.size,
+                                       int(seed) & 0xFFFFFFFFFFFFFFFF,
+                                       np.uint64))
+                        ^ rows.astype(np.uint64)) ^ crc)
+    has = deg > 0
+    maxdeg = np.maximum(deg, 1).astype(np.uint64)[:, None]
+    for l, lg in enumerate(layer_graphs):
+        F = lg.fanout
+        lane = _mix64(_mix64(np.full(F, l + 1, np.uint64) * _GOLDEN)
+                      + np.arange(F, dtype=np.uint64))
+        # counter-based uniform draw: the vectorized stand-in for
+        # draw_fixed_fanout's rng.integers (same take-all / mask
+        # semantics below; modulo bias is ~deg/2^64, nil)
+        draw = (_mix64(key[:, None] ^ lane[None, :])
+                % maxdeg).astype(np.int64)
+        take_all = deg[:, None] <= F        # small rows: each nbr once
+        seqidx = np.arange(F)[None, :]
+        draw = np.where(take_all,
+                        np.minimum(seqidx, np.maximum(deg - 1, 0)[:, None]),
+                        draw)
+        idx = starts[:, None] + draw
+        lg.nbr[rows] = g.indices[np.minimum(idx, max(g.n_edges - 1, 0))] \
+            .astype(np.int32)
+        lg.mask[rows] = has[:, None] & ((seqidx < deg[:, None])
+                                        | (deg[:, None] > F))
         invalidate_subset_plans(lg)     # cached frontier plans are stale
 
 
@@ -152,6 +263,8 @@ class DeltaReinference:
         self.executor = get_executor(executor)
         self.sample_seed = sample_seed
         self.rows_gemm = 0
+        self.rev_rebuilds = 0
+        self.rev_splices = 0
         self._rev: List[Optional[ReverseIndex]] = \
             [None] * len(self.layer_graphs)
 
@@ -162,6 +275,7 @@ class DeltaReinference:
     def _reverse(self, l: int) -> ReverseIndex:
         if self._rev[l] is None:
             self._rev[l] = build_reverse_index(self.layer_graphs[l])
+            self.rev_rebuilds += 1
         return self._rev[l]
 
     # -- full epoch -----------------------------------------------------
@@ -277,13 +391,22 @@ class DeltaReinference:
                      for lg in self.layer_graphs]
                     if resampled.size else None)
         try:
+            # content-addressed seeding (no version term): the draw for a
+            # row depends only on its final CSR state, so refresh
+            # batching never changes the bits (see resample_rows)
             resample_rows(g_new, self.layer_graphs, resampled,
-                          seed=self.sample_seed + store.version + 1)
+                          seed=self.sample_seed)
             if resampled.size:
-                # NOTE: full O(N*F) rebuild per mutated refresh;
-                # incremental splice of the resampled rows' old/new
-                # entries would make this O(changed) — ROADMAP open item
-                self._rev = [None] * len(self.layer_graphs)
+                # incremental maintenance: splice only the resampled
+                # rows' old/new entries into each cached reverse index —
+                # O(changed spans), not the O(N*F) rebuild
+                for l, lg in enumerate(self.layer_graphs):
+                    if self._rev[l] is not None:
+                        old_nbr_l, old_mask_l = old_rows[l]
+                        self._rev[l] = splice_reverse_index(
+                            self._rev[l], resampled, old_nbr_l, old_mask_l,
+                            lg.nbr[resampled], lg.mask[resampled])
+                        self.rev_splices += 1
             frontier = forward_frontier(
                 [self._reverse(l) for l in range(self.n_layers)],
                 feat_ids, resampled, self.n_layers)
@@ -314,7 +437,9 @@ class DeltaReinference:
         return {"version": version, "rows_gemm": self.rows_gemm,
                 "frontier_sizes": [int(f.size) for f in frontier],
                 "n_resampled": int(resampled.size),
-                "n_feat_updates": int(feat_ids.size)}
+                "n_feat_updates": int(feat_ids.size),
+                "rev_splices": self.rev_splices,
+                "rev_rebuilds": self.rev_rebuilds}
 
 
 # ----------------------------------------------------------------------

@@ -15,6 +15,14 @@ double-buffered commit makes the epoch flip invisible to readers.
 Node additions cannot be expressed as a row delta (they re-partition
 the store); the engine refuses them and defers to an offline
 re-partition epoch (ROADMAP open item: incremental node onboarding).
+
+Multi-tenant QoS (``tenants=TenantRegistry(...)``): the global bound
+and FIFO queue are replaced by ``gnnserve.qos`` — per-tenant freshness
+SLOs with deadline-driven refresh planning (lagged per-tenant epoch
+views), weighted-fair slot quotas with preemptive reclaim, and a
+deficit-round-robin row budget with token buckets.  Queries carry a
+``tenant`` tag; with ``tenants=None`` the engine behaves exactly as
+before (single implicit tenant at ``staleness_bound``).
 """
 from __future__ import annotations
 
@@ -26,6 +34,7 @@ import numpy as np
 from repro.core.graph import Graph
 from repro.gnnserve.delta import DeltaReinference
 from repro.gnnserve.mutations import MutationLog, apply_edge_mutations
+from repro.gnnserve.qos import QoSScheduler, TenantRegistry
 from repro.gnnserve.store import EmbeddingStore, SnapshotMiss
 
 
@@ -35,18 +44,27 @@ class Query:
     node_ids: np.ndarray            # (n,) int64
     level: int = -1                 # which store level to read
     fresh: bool = False             # force a refresh before serving
+    tenant: str = "default"         # QoS tenant tag (ignored w/o QoS)
     out: Optional[np.ndarray] = None
     served_version: int = -1
     done: bool = False
     # epoch snapshot pinned at first gather: a refresh committing while
     # this query is mid-gather must not tear the response across epochs
     snap: Optional[object] = dataclasses.field(default=None, repr=False)
+    # QoS bookkeeping: per-query cursor (survives preemption), queue-wait
+    # and observed-staleness samples
+    cursor: int = 0
+    submit_step: int = -1
+    first_gather_step: int = -1
+    observed_staleness: int = -1
 
 
 class EmbeddingServeEngine:
     def __init__(self, store: EmbeddingStore, reinfer: DeltaReinference,
                  graph: Graph, *, batch_slots: int = 4,
-                 rows_per_step: int = 256, staleness_bound: int = 64):
+                 rows_per_step: int = 256, staleness_bound: int = 64,
+                 tenants: Optional[TenantRegistry] = None,
+                 refresh_charge: float = 1.0):
         self.store = store
         self.reinfer = reinfer
         self.graph = graph
@@ -61,11 +79,26 @@ class EmbeddingServeEngine:
         self.n_refreshes = 0
         self.n_full_epochs = 0
         self.n_served = 0
+        self.ops_drained = 0        # mutation ops folded into the store
         self.last_refresh_stats: Dict = {}
+        self.qos: Optional[QoSScheduler] = None
+        if tenants is not None:
+            self.qos = QoSScheduler(tenants, batch_slots=batch_slots,
+                                    rows_per_step=rows_per_step,
+                                    refresh_charge=refresh_charge)
+            for name in tenants.names:      # views start at the current
+                st = self.qos.state(name)   # epoch, nothing unobserved
+                st.view_version = store.version
+                st.ops_at_view = 0
+            self.qos.record_epoch(store.version, 0, store.snapshot())
 
     # -- ingress --------------------------------------------------------
     def submit(self, q: Query) -> None:
-        self.queue.append(q)
+        if self.qos is not None:
+            q.node_ids = np.asarray(q.node_ids, np.int64)
+            self.qos.route(q)
+        else:
+            self.queue.append(q)
 
     def mutate(self) -> MutationLog:
         """The writable mutation log (add_edges / remove_edges /
@@ -98,8 +131,15 @@ class EmbeddingServeEngine:
             self.log.requeue(batch)
             raise
         self.graph = graph
+        self.ops_drained += batch.n_ops
         self.n_refreshes += 1
         self.last_refresh_stats = stats
+        if self.qos is not None:
+            # the new epoch becomes pinnable for per-tenant views, and
+            # its compute cost lands on batch-tenant row budgets first
+            self.qos.record_epoch(self.store.version, self.ops_drained,
+                                  self.store.snapshot())
+            self.qos.charge_refresh(stats["rows_gemm"])
         return stats
 
     # -- serve loop -----------------------------------------------------
@@ -117,7 +157,10 @@ class EmbeddingServeEngine:
 
     def step(self) -> bool:
         """Admit, maybe refresh, then one batched gather. Returns False
-        when idle."""
+        when idle.  With QoS, admission/refresh/row-split are delegated
+        to the per-tenant scheduler (``_step_qos``)."""
+        if self.qos is not None:
+            return self._step_qos()
         self._admit()
         active = [i for i in range(self.B) if self.slot_q[i] is not None]
         if not active:
@@ -183,21 +226,148 @@ class EmbeddingServeEngine:
                 self.slot_q[i] = None
         return True
 
+    # -- QoS serve loop -------------------------------------------------
+    def _pin_qos(self, q: Query) -> None:
+        """Pin a query to its TENANT's freshness view: the current epoch
+        (admit-then-pin, eviction-safe) when the view is current, or the
+        tenant's lagged epoch snapshot — a loose-SLO tenant keeps
+        reading older bits while a strict tenant refreshes next to it."""
+        st = self.qos.state(q.tenant)
+        stale = self.qos.unobserved_of(q.tenant, self.log.pending,
+                                       self.ops_drained)
+        if st.view_version == self.store.version:
+            q.snap = self.store.pinned_snapshot(q.node_ids, q.level)
+        else:
+            q.snap = self.qos.epoch_snapshot(st.view_version)
+        q.served_version = st.view_version
+        self.qos.on_pin(q, stale)
+
+    def _restart_on_current(self, q: Query) -> None:
+        """A lagged view hit rows the old epoch can't serve any more
+        (evicted on a budgeted store): restart the query on the CURRENT
+        epoch — fresher than its SLO requires, never staler, never
+        torn.  Rows regathered after the restart are charged to the
+        tenant again (rows_served / tokens / DRR credit): they are real
+        gather work, and the fair-share accounting follows the work."""
+        q.snap = self.store.pinned_snapshot(q.node_ids, q.level)
+        q.served_version = self.store.version
+        q.cursor = 0
+        self.qos.on_view_restart(q.tenant)
+
+    def _step_qos(self) -> bool:
+        qos = self.qos
+        qos.step_no += 1
+        # admission: guaranteed quotas reclaim borrowed slots
+        # (preempted queries pause with cursor+snapshot intact), idle
+        # quota is lent out work-conserving
+        preempt, admit = qos.plan_admission(self.slot_q)
+        for i in preempt:
+            qos.requeue_front(self.slot_q[i])
+            self.slot_q[i] = None
+        for i, q in admit:
+            if q.out is None:
+                q.out = np.empty(
+                    (q.node_ids.size,
+                     self.store.level_dim(q.level % self.store.n_levels)),
+                    np.float32)
+                q.cursor = 0
+            self.slot_q[i] = q
+        active = [i for i in range(self.B) if self.slot_q[i] is not None]
+        if not active:
+            return False
+
+        # deadline-driven refresh planning: coalesce the mutation log up
+        # to the tightest ACTIVE tenant SLO; only due tenants' views
+        # advance (the rest keep their older epoch)
+        due = qos.due_tenants(self.slot_q, self.log.pending,
+                              self.ops_drained)
+        if due:
+            refreshed = bool(self.log.pending)
+            if refreshed:
+                self.refresh()
+            qos.advance_views(due, self.store.version, self.ops_drained,
+                              refreshed=refreshed)
+
+        # weighted-fair row budget (DRR + token buckets), then one fused
+        # sharded gather per (epoch, level)
+        need = {i: self.slot_q[i].node_ids.size - self.slot_q[i].cursor
+                for i in active}
+        grants = qos.allocate([(i, self.slot_q[i].tenant, need[i])
+                               for i in active], self.rows_per_step)
+        per_key: Dict[tuple, List] = {}
+        for i in active:
+            q = self.slot_q[i]
+            take = min(grants.get(i, 0), need[i])
+            if take <= 0:
+                continue
+            if q.snap is None:
+                self._pin_qos(q)
+            lo = q.cursor
+            per_key.setdefault(
+                (q.served_version, q.level % self.store.n_levels),
+                []).append((i, lo, lo + take))
+            q.cursor += take
+            qos.on_rows(q.tenant, take)
+        for (_, level), chunks in per_key.items():
+            snap = self.slot_q[chunks[0][0]].snap
+            ids = np.concatenate([self.slot_q[i].node_ids[lo:hi]
+                                  for i, lo, hi in chunks])
+            try:
+                rows = snap.lookup(ids, level)
+            except SnapshotMiss:
+                rows = None
+            if rows is not None:
+                off = 0
+                for i, lo, hi in chunks:
+                    self.slot_q[i].out[lo:hi] = rows[off:off + (hi - lo)]
+                    off += hi - lo
+            else:
+                # same-version queries can pin different shard arrays
+                # (see the non-QoS path) — fall back per query; a query
+                # whose LAGGED view can't serve its rows restarts on the
+                # current epoch
+                for i, lo, hi in chunks:
+                    q = self.slot_q[i]
+                    try:
+                        q.out[lo:hi] = q.snap.lookup(
+                            q.node_ids[lo:hi], level)
+                    except SnapshotMiss:
+                        self._restart_on_current(q)
+        self.n_gather_steps += 1
+        qos.account_slots(self.slot_q)
+
+        for i in active:
+            q = self.slot_q[i]
+            if q.cursor >= q.node_ids.size:
+                q.done = True
+                q.snap = None       # release the pinned epoch's shards
+                qos.on_done(q)
+                self.n_served += 1
+                self.slot_q[i] = None
+        return True
+
     def run(self, max_steps: int = 100_000) -> None:
         for _ in range(max_steps):
-            if not self.step() and not self.queue:
+            queued = (self.qos.queued() if self.qos is not None
+                      else len(self.queue))
+            if not self.step() and not queued:
                 return
 
     def stats(self) -> Dict[str, float]:
         """Serve counters plus the store's (``store_`` prefix) — which now
         carry the memory model: hits/misses, evictions, recompute counts,
-        resident bytes and budget utilization."""
-        return {"n_served": self.n_served,
-                "n_gather_steps": self.n_gather_steps,
-                "n_refreshes": self.n_refreshes,
-                "store_version": self.store.version,
-                "pending_mutations": self.log.pending,
-                **{f"store_{k}": v for k, v in self.store.stats().items()}}
+        resident bytes and budget utilization.  With QoS, ``tenants``
+        nests per-tenant p50/p95 queue wait, rows served, observed
+        staleness vs SLO, refresh charges, and quota utilization."""
+        out = {"n_served": self.n_served,
+               "n_gather_steps": self.n_gather_steps,
+               "n_refreshes": self.n_refreshes,
+               "store_version": self.store.version,
+               "pending_mutations": self.log.pending,
+               **{f"store_{k}": v for k, v in self.store.stats().items()}}
+        if self.qos is not None:
+            out["tenants"] = self.qos.stats()
+        return out
 
     def memory_stats(self) -> Dict:
         """Per-level residency/budget breakdown (see

@@ -43,6 +43,15 @@ class MutationBatch:
     def n_edge_ops(self) -> int:
         return int(self.add_src.size + self.del_src.size)
 
+    @property
+    def n_ops(self) -> int:
+        """Pending-count contribution of this batch (edge ops + distinct
+        feature rows + node adds) — what the engine's staleness/SLO
+        accounting folds into ``ops_drained`` on a successful refresh.
+        NOTE: repeated feature updates of the SAME id inside one undrained
+        window collapse (last-writer-wins), matching ``MutationLog.pending``."""
+        return self.n_edge_ops + int(self.feat_ids.size) + self.n_new_nodes
+
     def affected_dsts(self) -> np.ndarray:
         """Destinations whose CSR row (in-neighborhood) changes."""
         return np.unique(np.concatenate([self.add_dst, self.del_dst]

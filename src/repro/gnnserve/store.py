@@ -31,7 +31,11 @@ the shard, and charges the budget.  Victims are chosen by ``evict_policy``:
 ``"heat"`` (exponentially-decayed access mass) or ``"lru"`` (last-touch
 tick).  Budget enforcement runs only at the END of a top-level gather /
 commit, never mid-recursion, so a recompute can't evict rows it is about
-to read.
+to read.  Admission is scan-resistant by default (``admission=
+"probation"``): rows admitted via recompute-on-miss contribute NO heat
+until they are touched a second time, so a one-shot full scan cannot
+displace the hot working set (``admission="full"`` restores the old
+count-every-touch behavior).
 
 Snapshot-vs-eviction ordering: ``pinned_snapshot(ids, level)`` admits any
 missing rows FIRST (with enforcement suppressed), captures the shard
@@ -122,10 +126,12 @@ def _check_ids(ids: np.ndarray, bounds: np.ndarray) -> None:
 class EmbeddingStore:
     def __init__(self, levels: Sequence[np.ndarray], n_shards: int = 4,
                  *, budget_rows: Optional[int] = None,
-                 evict_policy: str = "heat", heat_decay: float = 0.98):
+                 evict_policy: str = "heat", heat_decay: float = 0.98,
+                 admission: str = "probation"):
         n = levels[0].shape[0]
         assert all(h.shape[0] == n for h in levels), "levels must cover all nodes"
         assert evict_policy in ("heat", "lru"), evict_policy
+        assert admission in ("probation", "full"), admission
         assert budget_rows is None or budget_rows >= 0
         self.n_nodes = n
         self.n_shards = n_shards
@@ -156,6 +162,7 @@ class EmbeddingStore:
         self.budget_rows = budget_rows
         self.evict_policy = evict_policy
         self.heat_decay = heat_decay
+        self.admission = admission
         self._heat = np.zeros((len(levels), n_shards))
         self._last = np.zeros((len(levels), n_shards), np.int64)
         self._tick = 0
@@ -211,14 +218,15 @@ class EmbeddingStore:
 
     def _ensure(self, level: int, s: int, local: np.ndarray, staged: bool):
         """Make ``local`` rows of (level, shard) resident in the given
-        view, recomputing misses through the hook.  Returns (data, mask)."""
+        view, recomputing misses through the hook.  Returns
+        (data, mask, admitted-local-ids-or-None)."""
         data, mask = self._view_shard(level, s, staged)
         have = mask[local] if data is not None else np.zeros(local.size, bool)
         n_hit = int(have.sum())
         self.hits += n_hit
         self.misses += local.size - n_hit
         if n_hit == local.size:
-            return data, mask
+            return data, mask, None
         need = np.unique(local[~have])
         if self.recompute is None:
             raise EvictedRowMiss(
@@ -255,7 +263,7 @@ class EmbeddingStore:
             self._res[level, s] += need.size        # front admission
         data[need] = rows
         mask[need] = True
-        return data, mask
+        return data, mask, need
 
     def _gather(self, ids: np.ndarray, level: int,
                 staged: bool) -> np.ndarray:
@@ -269,10 +277,20 @@ class EmbeddingStore:
             for s in np.unique(owner):
                 sel = owner == s
                 local = ids[sel] - self.bounds[s]
-                data, mask = self._ensure(level, int(s), local, staged)
+                data, mask, admitted = self._ensure(level, int(s), local,
+                                                    staged)
                 out[sel] = data[local]
-                self._heat[level, s] = self._heat_now(level, int(s)) \
-                    + local.size
+                w = local.size
+                if (self.admission == "probation" and level > 0
+                        and not staged and admitted is not None
+                        and admitted.size):
+                    # scan resistance: recompute-admitted rows are on
+                    # probation — the admitting touch adds NO heat (any
+                    # later touch is a hit and counts in full), so a
+                    # one-shot scan leaves its shards stone-cold and
+                    # the hot working set survives the eviction round
+                    w = int((~np.isin(local, admitted)).sum())
+                self._heat[level, s] = self._heat_now(level, int(s)) + w
                 self._last[level, s] = self._tick
         finally:
             self._gather_depth -= 1
@@ -443,11 +461,12 @@ class EmbeddingStore:
 def store_from_inference(X: np.ndarray, level_outputs: Sequence[np.ndarray],
                          n_shards: int = 4, *,
                          budget_rows: Optional[int] = None,
-                         evict_policy: str = "heat") -> EmbeddingStore:
+                         evict_policy: str = "heat",
+                         admission: str = "probation") -> EmbeddingStore:
     """Build the store from a full epoch: X plus each layer's output as
     consumed by the next layer (see DeltaReinference.full_levels)."""
     return EmbeddingStore([np.asarray(X, np.float32)]
                           + [np.asarray(h, np.float32)
                              for h in level_outputs], n_shards=n_shards,
                           budget_rows=budget_rows,
-                          evict_policy=evict_policy)
+                          evict_policy=evict_policy, admission=admission)

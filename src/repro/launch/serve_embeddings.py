@@ -17,6 +17,14 @@ needs p*m devices, e.g.  XLA_FLAGS=--xla_force_host_platform_device_count=8.
 level at R resident rows: cold shards are dropped and lookups that miss
 rebuild exactly the missing rows through the delta engine
 (recompute-on-miss), bitwise-equal to an unbudgeted store.
+
+``--tenants "name:priority:slot_quota:rate:slo,..."`` turns on
+multi-tenant QoS scheduling (``gnnserve.qos``): per-tenant freshness
+SLOs with deadline-driven refresh planning, weighted-fair slot quotas
+(preemptive reclaim) and a DRR row budget with token buckets.  The
+driver then splits traffic across the declared tenants — small
+interactive queries on the first tenant, large scans on the rest — and
+prints the per-tenant QoS table.
 """
 from __future__ import annotations
 
@@ -31,7 +39,8 @@ from repro.core.gnn_models import init_gat, init_gcn, init_sage
 from repro.core.graph import csr_from_edges_distributed, make_dataset
 from repro.core.sampler import sample_layer_graphs
 from repro.gnnserve import (DeltaReinference, EmbeddingServeEngine, Query,
-                            attach_recompute, store_from_inference)
+                            TenantRegistry, attach_recompute, parse_tenants,
+                            store_from_inference)
 
 
 def build_service(dataset: str, model: str, *, fanout: int = 8,
@@ -39,7 +48,8 @@ def build_service(dataset: str, model: str, *, fanout: int = 8,
                   staleness_bound: int = 64, seed: int = 0,
                   executor: str = "ref", p: int = 4, m: int = 2,
                   budget_rows: int = 0, evict_policy: str = "heat",
-                  scale: float = 1.0) -> EmbeddingServeEngine:
+                  scale: float = 1.0,
+                  tenants: TenantRegistry = None) -> EmbeddingServeEngine:
     src, dst, n = make_dataset(dataset, seed=seed, scale=scale)
     g, _ = csr_from_edges_distributed(src, dst, n, n_workers=4)
     lgs = sample_layer_graphs(g, fanout=fanout, n_layers=n_layers, seed=seed)
@@ -77,8 +87,13 @@ def build_service(dataset: str, model: str, *, fanout: int = 8,
         attach_recompute(store, ri)
         print(f"[budget] {budget_rows}/{n} rows per level resident "
               f"({evict_policy} eviction, recompute-on-miss)")
+    if tenants is not None:
+        print("[qos] tenants: " + ", ".join(
+            f"{t.name}(prio={t.priority:g} quota={t.slot_quota} "
+            f"rate={t.rate:g} slo={t.staleness_slo})" for t in tenants))
     return EmbeddingServeEngine(store, ri, g,
-                                staleness_bound=staleness_bound)
+                                staleness_bound=staleness_bound,
+                                tenants=tenants)
 
 
 def drive(eng: EmbeddingServeEngine, *, ticks: int = 50,
@@ -86,12 +101,20 @@ def drive(eng: EmbeddingServeEngine, *, ticks: int = 50,
           mutations_per_tick: int = 8, seed: int = 0) -> None:
     n = eng.store.n_nodes
     rng = np.random.default_rng(seed)
+    names = eng.qos.registry.names if eng.qos is not None else [None]
     uid = 0
     t0 = time.time()
     for tick in range(ticks):
-        for _ in range(queries_per_tick):
-            eng.submit(Query(uid=uid, node_ids=rng.integers(
-                0, n, rows_per_query)))
+        for j in range(queries_per_tick):
+            # with QoS: first tenant gets interactive-sized queries,
+            # the rest get 8x scans (the batch/analytics side)
+            name = names[j % len(names)]
+            rows = (rows_per_query if name in (None, names[0])
+                    else 8 * rows_per_query)
+            q = Query(uid=uid, node_ids=rng.integers(0, n, rows))
+            if name is not None:
+                q.tenant = name
+            eng.submit(q)
             uid += 1
         if mutations_per_tick:
             k = mutations_per_tick
@@ -111,8 +134,22 @@ def drive(eng: EmbeddingServeEngine, *, ticks: int = 50,
         print(f"[fresh] last refresh frontier {refresh['frontier_sizes']} "
               f"of {n} rows, {refresh['rows_gemm']} gemm rows "
               f"(full epoch = {n * eng.reinfer.n_layers})")
+    bound = ("per-tenant SLOs, tightest "
+             + str(min(t.staleness_slo for t in eng.qos.registry))
+             if eng.qos is not None else f"bound {eng.staleness_bound}")
     print(f"[stale] pending mutations at exit: {s['pending_mutations']} "
-          f"(bound {eng.staleness_bound})")
+          f"({bound})")
+    if eng.qos is not None:
+        for name, t in s["tenants"].items():
+            print(f"[qos] {name}: served {t['n_served']} "
+                  f"({t['rows_served']} rows), wait p50/p95 "
+                  f"{t['wait_p50_steps']:.0f}/{t['wait_p95_steps']:.1f} "
+                  f"steps, staleness max {t['staleness_max']:.0f} "
+                  f"(slo {t['staleness_slo']:.0f}, "
+                  f"{t['slo_violations']} violations), "
+                  f"refresh charge {t['refresh_rows_charged']:.0f} rows, "
+                  f"quota util {t['quota_util']:.2f}, "
+                  f"{t['n_preemptions']} preemptions")
     if eng.store.budget_rows is not None:
         mem = eng.memory_stats()
         per_level = " ".join(
@@ -151,13 +188,19 @@ def main():
                     help="victim selection for over-budget levels")
     ap.add_argument("--scale", type=float, default=1.0,
                     help="scale the dataset's node count (CI smoke)")
+    ap.add_argument("--tenants", default=None,
+                    help="multi-tenant QoS: 'name:priority:slot_quota:"
+                         "rate:slo,...' (rate 0 = unlimited rows/step); "
+                         "replaces the global --staleness-bound")
     args = ap.parse_args()
     eng = build_service(args.dataset, args.model, fanout=args.fanout,
                         n_layers=args.layers,
                         staleness_bound=args.staleness_bound,
                         executor=args.executor, p=args.p, m=args.m,
                         budget_rows=args.budget_rows,
-                        evict_policy=args.evict_policy, scale=args.scale)
+                        evict_policy=args.evict_policy, scale=args.scale,
+                        tenants=(parse_tenants(args.tenants)
+                                 if args.tenants else None))
     drive(eng, ticks=args.ticks, queries_per_tick=args.queries_per_tick,
           mutations_per_tick=args.mutations_per_tick)
 

@@ -169,6 +169,89 @@ def test_delta_refresh_bitwise_matches_full(world, model):
         np.testing.assert_array_equal(got, oracle[lvl])  # bitwise, ALL rows
 
 
+def test_refresh_batching_is_invariant(world):
+    """Folding one mutation stream in one batch or two lands on
+    bitwise-identical store bytes (content-addressed resample seeding) —
+    the property the QoS engine's per-tenant freshness views rely on."""
+    g, src, dst, lgs, X = world
+    params = _params("gcn")
+    rng = np.random.default_rng(41)
+    logs = [_mutate(np.random.default_rng(s), src, dst) for s in (1, 2)]
+    batches = [lg_.drain() for lg_ in logs]
+
+    def fold(batch_seq):
+        ri = DeltaReinference([copy.deepcopy(l) for l in lgs], "gcn",
+                              params)
+        store = store_from_inference(X, ri.full_levels(X)[1:], n_shards=4)
+        gm = g
+        for b in batch_seq:
+            gm = apply_edge_mutations(gm, b)
+            ri.refresh(store, gm, b.feat_ids, b.feat_rows,
+                       b.affected_dsts())
+        return store
+
+    # one big batch: replay both logs into a single drain
+    big = MutationLog()
+    for b in batches:
+        big.requeue(b)
+    split, whole = fold(batches), fold([big.drain()])
+    all_ids = np.arange(N)
+    for lvl in range(L + 1):
+        np.testing.assert_array_equal(split.lookup(all_ids, lvl),
+                                      whole.lookup(all_ids, lvl))
+
+
+def test_reverse_index_splice_equals_rebuild(world):
+    """`splice_reverse_index` over the resampled rows' old/new entries
+    must equal a from-scratch `build_reverse_index`, indptr and rows
+    bitwise, across chained mutations."""
+    from repro.gnnserve import (build_reverse_index, resample_rows,
+                                splice_reverse_index)
+    g, src, dst, lgs, X = world
+    lgs2 = [copy.deepcopy(l) for l in lgs]
+    rev = [build_reverse_index(lg) for lg in lgs2]
+    rng = np.random.default_rng(3)
+    gm = g
+    for _ in range(3):
+        batch = _mutate(rng, src, dst, n_edge=12, n_feat=0).drain()
+        gm = apply_edge_mutations(gm, batch)
+        rows = batch.affected_dsts()
+        old = [(lg.nbr[rows].copy(), lg.mask[rows].copy()) for lg in lgs2]
+        resample_rows(gm, lgs2, rows, seed=0)
+        for l, lg in enumerate(lgs2):
+            rev[l] = splice_reverse_index(rev[l], rows, old[l][0],
+                                          old[l][1], lg.nbr[rows],
+                                          lg.mask[rows])
+            fresh = build_reverse_index(lg)
+            np.testing.assert_array_equal(rev[l].indptr, fresh.indptr)
+            np.testing.assert_array_equal(rev[l].rows, fresh.rows)
+
+
+def test_refresh_maintains_reverse_index_incrementally(world):
+    """After the first refresh builds the reverse indexes, later mutated
+    refreshes SPLICE them (O(changed)) instead of rebuilding (O(N*F))."""
+    g, src, dst, lgs, X = world
+    params = _params("gcn")
+    ri = DeltaReinference([copy.deepcopy(l) for l in lgs], "gcn", params)
+    store = store_from_inference(X, ri.full_levels(X)[1:], n_shards=4)
+    rng = np.random.default_rng(13)
+    gm = g
+    for it in range(3):
+        batch = _mutate(rng, src, dst).drain()
+        gm = apply_edge_mutations(gm, batch)
+        ri.refresh(store, gm, batch.feat_ids, batch.feat_rows,
+                   batch.affected_dsts())
+    # first refresh lazily rebuilt each layer's index; the next two
+    # spliced it in place of the old full-rebuild-every-refresh path
+    assert ri.rev_rebuilds == ri.n_layers
+    assert ri.rev_splices == 2 * ri.n_layers
+    from repro.gnnserve import build_reverse_index
+    for l, lg in enumerate(ri.layer_graphs):
+        fresh = build_reverse_index(lg)
+        np.testing.assert_array_equal(ri._rev[l].indptr, fresh.indptr)
+        np.testing.assert_array_equal(ri._rev[l].rows, fresh.rows)
+
+
 def test_frontier_is_complete(world):
     """Every row the mutation actually changed is inside the frontier —
     rows outside it were provably safe to skip."""

@@ -114,6 +114,64 @@ def test_policies_evict_cold_not_hot(world, policy):
     assert store.misses == misses_before
 
 
+def test_scan_resistant_admission_keeps_hot_set(world):
+    """Rows recomputed on a miss and touched exactly once are admitted
+    on PROBATION (zero heat): a one-shot full scan leaves its shards
+    stone-cold and the hot working set survives the next eviction
+    round.  ``admission="full"`` (the pre-satellite behavior) shows the
+    failure mode: the scan's fresh heat outbids the decayed hot shard."""
+    from repro.gnnserve import EmbeddingStore
+    g, src, dst, lgs, X = world
+    params = _params("gcn")
+    extra_misses = {}
+    for admission in ("probation", "full"):
+        ri = DeltaReinference([copy.deepcopy(l) for l in lgs], "gcn",
+                              params)
+        levels = ri.full_levels(X)
+        store = EmbeddingStore(levels, n_shards=4, budget_rows=N // 4,
+                               evict_policy="heat", heat_decay=0.5,
+                               admission=admission)
+        attach_recompute(store, ri)
+        hot = np.arange(N // 4)              # exactly shard 0
+        store.lookup(hot, 1)                 # admit (probationary)
+        store.lookup(hot, 1)                 # second touch: earns heat
+        store.lookup(np.arange(N // 4, N), 1)   # one-shot cold scan
+        m0 = store.misses
+        store.lookup(hot, 1)
+        extra_misses[admission] = store.misses - m0
+    assert extra_misses["probation"] == 0, \
+        "one-shot scan evicted the hot working set despite probation"
+    assert extra_misses["full"] > 0          # the mode probation fixes
+
+
+def test_probationary_rows_serve_identical_bytes(world):
+    """Probation only shapes the heat map — admitted bytes are the same
+    either way, including across a mutated refresh."""
+    g, src, dst, lgs, X = world
+    params = _params("gcn")
+    stores = {}
+    rng_m = np.random.default_rng(2)
+    batch = _mutation(rng_m, src, dst)
+    g2 = apply_edge_mutations(g, batch)
+    for admission in ("probation", "full"):
+        ri = DeltaReinference([copy.deepcopy(l) for l in lgs], "gcn",
+                              params)
+        store = store_from_inference(X, ri.full_levels(X)[1:], n_shards=4,
+                                     budget_rows=N // 4,
+                                     admission=admission)
+        attach_recompute(store, ri)
+        ri.refresh(store, g2, batch.feat_ids, batch.feat_rows,
+                   batch.affected_dsts())
+        stores[admission] = store
+    rng = np.random.default_rng(6)
+    for _ in range(4):
+        ids = rng.choice(N, 48, replace=False)
+        lvl = int(rng.integers(1, L + 1))
+        np.testing.assert_array_equal(
+            stores["probation"].lookup(ids, lvl),
+            stores["full"].lookup(ids, lvl))
+
+
 def test_mid_query_eviction_cannot_tear(world):
     """A query pinned at epoch v must serve epoch-v bits even when a
     refresh commits AND the budget evicts its shards mid-query."""

@@ -19,7 +19,9 @@ Random interleavings of ``begin_update`` / ``write_rows`` / ``commit`` /
      every staged byte including recompute-admitted ones;
   6. ``MutationLog`` drain -> requeue (the ``engine.refresh`` failure
      path) preserves the pending set, the op ORDER, and therefore the
-     net CSR effect.
+     net CSR effect;
+  7. ``splice_reverse_index`` over random mutation chains equals a
+     from-scratch ``build_reverse_index``, indptr and rows bitwise.
 
 The suite runs with or without hypothesis: when the package is absent
 (some local sandboxes) each property degrades to a fixed seed sweep, so
@@ -265,3 +267,40 @@ def test_mutation_log_drain_requeue_roundtrip(seed):
     np.testing.assert_array_equal(g1.indptr, g2.indptr)
     for v in range(n_nodes):
         assert sorted(g1.neighbors(v)) == sorted(g2.neighbors(v)), v
+
+
+@seed_property()
+def test_reverse_index_splice_equals_rebuild(seed):
+    """(7) incremental reverse-index maintenance: splicing only the
+    resampled rows' old/new entries equals the O(N*F) rebuild, bitwise,
+    across a chain of random edge mutations."""
+    from repro.core.sampler import sample_layer_graphs
+    from repro.gnnserve import (build_reverse_index, resample_rows,
+                                splice_reverse_index)
+    rng = np.random.default_rng(seed)
+    n = 48
+    src, dst = rmat_edges(n, n * 6, seed=seed % 997)
+    g = csr_from_edges(src, dst, n)
+    lgs = sample_layer_graphs(g, fanout=3, n_layers=2, seed=seed % 13)
+    rev = [build_reverse_index(lg) for lg in lgs]
+    gm = g
+    for _ in range(3):
+        log = MutationLog()
+        k = int(rng.integers(1, 8))
+        log.add_edges(rng.integers(0, n, k), rng.integers(0, n, k))
+        if rng.random() < 0.7:
+            pick = rng.choice(src.size, int(rng.integers(1, 5)),
+                              replace=False)
+            log.remove_edges(src[pick], dst[pick])   # may be absent: noop
+        batch = log.drain()
+        gm = apply_edge_mutations(gm, batch)
+        rows = batch.affected_dsts()
+        old = [(lg.nbr[rows].copy(), lg.mask[rows].copy()) for lg in lgs]
+        resample_rows(gm, lgs, rows, seed=1)
+        for l, lg in enumerate(lgs):
+            rev[l] = splice_reverse_index(rev[l], rows, old[l][0],
+                                          old[l][1], lg.nbr[rows],
+                                          lg.mask[rows])
+            fresh = build_reverse_index(lg)
+            np.testing.assert_array_equal(rev[l].indptr, fresh.indptr)
+            np.testing.assert_array_equal(rev[l].rows, fresh.rows)

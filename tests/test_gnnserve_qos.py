@@ -1,0 +1,378 @@
+"""Multi-tenant QoS scheduler invariants (gnnserve.qos).
+
+Property-style suite (reusing the ``seed_property`` harness of
+``test_gnnserve_properties``) over the scheduler and the QoS engine:
+
+  1. quota conservation: every allocation grants sum(slots) <= B and
+     sum(rows) <= rows_per_step, never more than a slot's need, and
+     never exceeds a tenant's token bucket;
+  2. no starvation: every admitted query with work left makes progress
+     within K steps (K = 1 for unlimited-rate tenants, ceil(slots/rate)
+     for rate-limited ones) — even while refresh charges depress the
+     DRR credit;
+  3. SLO safety + monotonicity: observed staleness stays strictly under
+     each tenant's SLO, and TIGHTENING one tenant's SLO never changes
+     another tenant's bits (it can only refresh the shared store more
+     often, which the lagged per-tenant views hide);
+  4. per-tenant bitwise equality: each tenant's outputs equal a
+     single-tenant engine run at that tenant's SLO, bit for bit, for
+     ref AND pallas executors (content-addressed resampling makes
+     refresh batching invariant);
+  5. preemptive quota reclaim: a saturating batch tenant cannot delay a
+     quota-holding tenant's admission, and a preempted query resumes
+     without tearing (its pinned epoch is preserved).
+"""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core.gnn_models import init_gcn
+from repro.core.graph import csr_from_edges, rmat_edges
+from repro.core.sampler import sample_layer_graphs
+from repro.gnnserve import (DeltaReinference, EmbeddingServeEngine, Query,
+                            QoSScheduler, TenantRegistry, TenantSpec,
+                            parse_tenants, store_from_inference)
+from test_gnnserve_properties import seed_property
+
+N, D, L, FANOUT = 256, 16, 2, 4
+
+
+@pytest.fixture(scope="module")
+def world():
+    src, dst = rmat_edges(N, N * 6, seed=5)
+    g = csr_from_edges(src, dst, N)
+    lgs = sample_layer_graphs(g, fanout=FANOUT, n_layers=L, seed=2)
+    X = np.random.default_rng(3).standard_normal((N, D), dtype=np.float32)
+    import jax
+    params = init_gcn(jax.random.PRNGKey(0), [D] * (L + 1))
+    return g, src, dst, lgs, X, params
+
+
+def _engine(world, *, tenants=None, bound=64, executor="ref",
+            batch_slots=4, rows_per_step=64):
+    g, src, dst, lgs, X, params = world
+    ri = DeltaReinference([copy.deepcopy(l) for l in lgs], "gcn", params,
+                          executor=executor)
+    store = store_from_inference(X, ri.full_levels(X)[1:], n_shards=4)
+    return EmbeddingServeEngine(store, ri, g, batch_slots=batch_slots,
+                                rows_per_step=rows_per_step,
+                                staleness_bound=bound, tenants=tenants)
+
+
+# ----------------------------------------------------------------------
+# registry / parsing
+# ----------------------------------------------------------------------
+
+def test_parse_tenants_roundtrip():
+    reg = parse_tenants("ui:4:2:0:8,batch:1.5:1:96:512")
+    assert reg.names == ["ui", "batch"]
+    assert reg["ui"] == TenantSpec("ui", priority=4, slot_quota=2,
+                                   rate=0, staleness_slo=8)
+    assert reg["batch"].rate == 96 and reg["batch"].priority == 1.5
+    assert reg.total_quota == 3
+    with pytest.raises(ValueError):
+        parse_tenants("ui:4:2:0")                   # missing field
+    with pytest.raises(AssertionError):
+        TenantRegistry([TenantSpec("a"), TenantSpec("a")])   # dup name
+    with pytest.raises(AssertionError):
+        TenantSpec("x", priority=0)                 # weight must be > 0
+
+
+def test_quota_exceeding_slots_rejected():
+    reg = parse_tenants("a:1:3:0:8,b:1:2:0:8")
+    with pytest.raises(AssertionError):
+        QoSScheduler(reg, batch_slots=4, rows_per_step=64)
+
+
+# ----------------------------------------------------------------------
+# (1) quota conservation — pure scheduler, random demands
+# ----------------------------------------------------------------------
+
+@seed_property()
+def test_allocation_conserves_budget_and_tokens(seed):
+    rng = np.random.default_rng(seed)
+    n_tenants = int(rng.integers(1, 4))
+    B = int(rng.integers(n_tenants, 7))
+    budget = int(rng.integers(4, 200))
+    specs = [TenantSpec(f"t{i}", priority=float(rng.integers(1, 8)),
+                        slot_quota=1,
+                        rate=float(rng.choice([0, 0, 4, 16])),
+                        staleness_slo=8) for i in range(n_tenants)]
+    sched = QoSScheduler(TenantRegistry(specs), batch_slots=B,
+                         rows_per_step=budget)
+    for _ in range(20):
+        if rng.random() < 0.3:      # refresh charges mid-stream
+            sched.charge_refresh(float(rng.integers(0, 4 * budget)))
+        active, used = [], set()
+        tokens_before = {s.name: (sched.state(s.name).tokens
+                                  + s.rate)    # post-refill balance
+                         for s in specs}
+        for _ in range(int(rng.integers(1, B + 1))):
+            slot = int(rng.integers(0, B))
+            if slot in used:
+                continue
+            used.add(slot)
+            active.append((slot, f"t{int(rng.integers(0, n_tenants))}",
+                           int(rng.integers(0, 3 * budget))))
+        grants = sched.allocate(active, budget)
+        assert sum(grants.values()) <= budget           # row conservation
+        by_name = {}
+        for slot, name, need in active:
+            assert grants.get(slot, 0) <= need          # never overfill
+            by_name.setdefault(name, 0)
+            by_name[name] += grants.get(slot, 0)
+        for s in specs:                                 # token bucket cap
+            if s.rate > 0 and s.name in by_name:
+                cap = min(tokens_before[s.name], s.rate * sched.burst_steps)
+                assert by_name[s.name] <= cap + 1e-9, s.name
+
+
+# ----------------------------------------------------------------------
+# (2) starvation bound
+# ----------------------------------------------------------------------
+
+@seed_property(max_examples=10, fallback=5)
+def test_no_starvation_within_k_steps(seed):
+    """Unlimited-rate tenants progress EVERY step; rate-limited tenants
+    within K = ceil(active_slots / rate) steps — under adversarial
+    priorities and steady refresh charges."""
+    rng = np.random.default_rng(seed)
+    specs = [TenantSpec("hog", priority=100.0, slot_quota=1, rate=0.0,
+                        staleness_slo=10 ** 6),
+             TenantSpec("meek", priority=1.0, slot_quota=1, rate=0.0,
+                        staleness_slo=10 ** 6),
+             TenantSpec("drip", priority=1.0, slot_quota=1,
+                        rate=0.5, staleness_slo=10 ** 6)]
+    B, budget = 3, 16
+    sched = QoSScheduler(TenantRegistry(specs), batch_slots=B,
+                         rows_per_step=budget)
+    need = {0: 10 ** 6, 1: 10 ** 6, 2: 10 ** 6}
+    names = {0: "hog", 1: "meek", 2: "drip"}
+    since = {0: 0, 1: 0, 2: 0}
+    K = {0: 1, 1: 1, 2: int(np.ceil(1 / 0.5))}
+    for _ in range(60):
+        if rng.random() < 0.5:
+            sched.charge_refresh(float(rng.integers(0, 10 * budget)))
+        grants = sched.allocate([(i, names[i], need[i]) for i in range(3)],
+                                budget)
+        for i in range(3):
+            got = grants.get(i, 0)
+            need[i] -= got
+            since[i] = 0 if got > 0 else since[i] + 1
+            assert since[i] < K[i] + 1, \
+                f"slot {i} ({names[i]}) starved {since[i]} steps (K={K[i]})"
+
+
+# ----------------------------------------------------------------------
+# (3) SLO safety + monotonicity
+# ----------------------------------------------------------------------
+
+def _drive_pairs(eng, n, ticks, rng, sizes=(24, 96)):
+    """Tick-drained mixed traffic; returns per-tenant query lists."""
+    out = {"ui": [], "batch": []}
+    for tick in range(ticks):
+        for name, size in zip(("ui", "batch"), sizes):
+            q = Query(uid=tick, node_ids=rng.integers(0, n, size),
+                      tenant=name)
+            eng.submit(q)
+            out[name].append(q)
+        k = 3
+        eng.mutate().add_edges(rng.integers(0, n, k), rng.integers(0, n, k))
+        eng.run()
+    return out
+
+
+@seed_property(max_examples=5, fallback=3)
+def test_slo_safety_and_tightening_monotonicity(world, seed):
+    """Observed staleness < SLO for every tenant; and tightening ui's
+    SLO leaves batch's bits untouched."""
+    outs = {}
+    for ui_slo in (12, 3):
+        eng = _engine(world, tenants=parse_tenants(
+            f"ui:4:2:0:{ui_slo},batch:1:1:0:500"))
+        qs = _drive_pairs(eng, N, 10, np.random.default_rng(seed))
+        ts = eng.stats()["tenants"]
+        assert ts["ui"]["staleness_max"] < ui_slo
+        assert ts["batch"]["staleness_max"] < 500
+        assert ts["ui"]["slo_violations"] == 0
+        assert ts["batch"]["slo_violations"] == 0
+        outs[ui_slo] = qs
+    for q_loose, q_tight in zip(outs[12]["batch"], outs[3]["batch"]):
+        np.testing.assert_array_equal(q_loose.out, q_tight.out)
+
+
+# ----------------------------------------------------------------------
+# (4) per-tenant bitwise equality vs a solo engine at the same SLO
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("executor", ["ref", "pallas"])
+def test_tenant_bitwise_equals_solo_run(world, executor):
+    slos = {"ui": 4, "batch": 64}
+    multi = _engine(world, executor=executor, tenants=parse_tenants(
+        f"ui:4:2:0:{slos['ui']},batch:1:1:0:{slos['batch']}"))
+    solos = {name: _engine(world, bound=slo, executor=executor)
+             for name, slo in slos.items()}
+    rng = np.random.default_rng(17)
+    pairs = []
+    for tick in range(12):
+        ids = {"ui": rng.integers(0, N, 24),
+               "batch": rng.integers(0, N, 96)}
+        for name in ("ui", "batch"):
+            qm = Query(uid=tick, node_ids=ids[name], tenant=name)
+            qs = Query(uid=tick, node_ids=ids[name])
+            multi.submit(qm)
+            solos[name].submit(qs)
+            pairs.append((name, qm, qs))
+        s_e, d_e = rng.integers(0, N, 2), rng.integers(0, N, 2)
+        for e in (multi, *solos.values()):
+            e.mutate().add_edges(s_e, d_e)
+            e.run()
+    assert multi.n_refreshes > 0
+    # the loose tenant really lagged behind the shared store's epochs
+    ts = multi.stats()["tenants"]
+    assert ts["batch"]["view_version"] < multi.store.version \
+        or multi.n_refreshes == 0
+    for name, qm, qs in pairs:
+        assert qm.done and qs.done
+        assert qm.served_version == qs.served_version, (name, qm.uid)
+        np.testing.assert_array_equal(qm.out, qs.out, err_msg=str((name,
+                                                                   qm.uid)))
+
+
+# ----------------------------------------------------------------------
+# (5) preemptive quota reclaim
+# ----------------------------------------------------------------------
+
+def test_preemption_reclaims_quota_without_tearing(world):
+    """Batch scans saturate all slots (work-conserving lending); when ui
+    arrives, a borrowed slot is preempted the SAME step, ui is admitted,
+    and the paused scan later resumes and still serves one epoch."""
+    g, src, dst, lgs, X, params = world
+    eng = _engine(world, rows_per_step=32, tenants=parse_tenants(
+        "ui:4:2:0:1000,batch:1:1:0:1000"))
+    rng = np.random.default_rng(9)
+    scans = [Query(uid=i, node_ids=rng.integers(0, N, 128), tenant="batch")
+             for i in range(4)]
+    for q in scans:
+        eng.submit(q)
+    eng.step()                          # all 4 slots lent to batch
+    assert all(q is not None and q.tenant == "batch" for q in eng.slot_q)
+    pinned_version = scans[0].served_version
+    assert pinned_version == 0
+
+    # mutate past nothing (slo huge) but refresh manually mid-flight to
+    # move the store's epoch under the paused scans
+    ui = [Query(uid=100 + i, node_ids=rng.integers(0, N, 16), tenant="ui")
+          for i in range(2)]
+    for q in ui:
+        eng.submit(q)
+    eng.step()
+    # ui's quota (2) reclaimed two borrowed slots immediately
+    in_slots = {q.tenant for q in eng.slot_q if q is not None}
+    assert "ui" in in_slots
+    n_ui = sum(1 for q in eng.slot_q if q is not None and q.tenant == "ui")
+    assert n_ui == 2
+    assert eng.stats()["tenants"]["batch"]["n_preemptions"] == 2
+
+    eng.mutate().add_edges(rng.integers(0, N, 4), rng.integers(0, N, 4))
+    eng.refresh()                       # epoch flips while scans paused
+    eng.run()
+    assert all(q.done for q in scans + ui)
+    # paused scans resumed on their ORIGINAL pinned epoch: no torn reads
+    levels_v0 = DeltaReinference([copy.deepcopy(l) for l in lgs], "gcn",
+                                 params).full_levels(X)
+    for q in scans:
+        assert q.served_version == 0
+        np.testing.assert_array_equal(q.out, levels_v0[-1][q.node_ids])
+
+
+def test_budgeted_store_lagged_views_restart_without_tearing(world):
+    """QoS on a memory-budgeted store: an old epoch is NOT
+    reconstructible (recompute replays current graphs), so a lagged
+    view that hits evicted rows must RESTART its query on the current
+    epoch — fresher than the SLO requires, never staler, and never a
+    byte from two epochs.  Oracle: an unbudgeted twin driven in
+    lockstep (same refresh planning — eviction never changes it), whose
+    per-version levels every served query must match at its
+    served_version."""
+    from repro.gnnserve import attach_recompute
+    g, src, dst, lgs, X = world[:5]
+    params = world[5]
+
+    def build(budget):
+        ri = DeltaReinference([copy.deepcopy(l) for l in lgs], "gcn",
+                              params)
+        store = store_from_inference(X, ri.full_levels(X)[1:], n_shards=4,
+                                     budget_rows=budget)
+        if budget is not None:
+            attach_recompute(store, ri)
+        reg = parse_tenants("ui:4:2:0:4,batch:1:1:0:1000")
+        return EmbeddingServeEngine(store, ri, g, batch_slots=4,
+                                    rows_per_step=64, tenants=reg)
+
+    eng, twin = build(N // 4), build(None)
+    oracle = {0: twin.store.lookup(np.arange(N), -1).copy()}
+    rng = np.random.default_rng(29)
+    queries = []
+    for tick in range(10):
+        ids = {"ui": rng.integers(0, N, 24),
+               "batch": rng.integers(0, N, 96)}
+        for name in ("ui", "batch"):
+            qb = Query(uid=tick, node_ids=ids[name], tenant=name)
+            qt = Query(uid=tick, node_ids=ids[name], tenant=name)
+            eng.submit(qb)
+            twin.submit(qt)
+            queries.append((name, qb, qt))
+        s_e, d_e = rng.integers(0, N, 3), rng.integers(0, N, 3)
+        for e in (eng, twin):
+            e.mutate().add_edges(s_e, d_e)
+            e.run()
+        oracle[twin.store.version] = twin.store.lookup(np.arange(N),
+                                                       -1).copy()
+    assert eng.n_refreshes == twin.n_refreshes > 0
+    ts = eng.stats()["tenants"]
+    # the lagged batch view really hit evicted rows and restarted
+    assert ts["batch"]["n_view_restarts"] > 0
+    assert ts["ui"]["slo_violations"] == 0
+    for name, qb, qt in queries:
+        assert qb.done and qt.done
+        # the budgeted run may serve FRESHER (restart), never staler
+        assert qb.served_version >= qt.served_version, (name, qb.uid)
+        np.testing.assert_array_equal(          # one epoch, no torn bytes
+            qb.out, oracle[qb.served_version][qb.node_ids],
+            err_msg=str((name, qb.uid, qb.served_version)))
+
+
+def test_idle_capacity_borrowing_is_free(world):
+    """Work-conserving leftovers are use-it-or-lose-it: a tenant that
+    soaked up idle capacity for many steps is NOT pinned to the minimum
+    grant once contention returns — its DRR credit only ever pays for
+    its weighted share."""
+    reg = parse_tenants("ui:4:1:0:1000,batch:1:1:0:1000")
+    sched = QoSScheduler(reg, batch_slots=4, rows_per_step=64)
+    for _ in range(500):                  # ui idle, batch soaks all 64
+        got = sched.allocate([(0, "batch", 10 ** 6)], 64)
+        assert got[0] == 64
+    grants = sched.allocate([(0, "batch", 10 ** 6), (1, "ui", 4)], 64)
+    assert grants[1] == 4                 # ui takes its small need
+    # batch gets its weighted share of the rest at once, not min-grant
+    assert grants[0] >= 64 * (1 / 5) - 1
+    assert grants[0] + grants[1] <= 64
+
+
+def test_unknown_tenant_rejected(world):
+    eng = _engine(world, tenants=parse_tenants("ui:1:1:0:8"))
+    with pytest.raises(KeyError):
+        eng.submit(Query(uid=0, node_ids=np.arange(4), tenant="nope"))
+
+
+def test_plain_engine_unchanged_without_tenants(world):
+    """No registry -> the engine is the PR-1 engine: global bound, FIFO,
+    no qos state."""
+    eng = _engine(world, bound=4)
+    assert eng.qos is None
+    q = Query(uid=0, node_ids=np.arange(32))
+    eng.submit(q)
+    eng.run()
+    assert q.done and "tenants" not in eng.stats()
