@@ -1,5 +1,11 @@
 """Incremental delta re-inference vs full recompute (gnnserve study).
 
+A THIN CLIENT of the public API: the world (graph -> layer graphs ->
+epoch -> store/engine) is declared as a ``DealConfig`` and built by
+``api.Session`` — including the memory-budgeted variants — so the bench
+wires nothing by hand and ``run.py --config`` can retarget it from a
+JSON artifact.
+
 For mutation batches of growing size (fraction of nodes), apply edge
 churn + feature updates and refresh the embedding store two ways:
 
@@ -21,6 +27,7 @@ The ``incremental/evict_*`` rows sweep the memory-budgeted store
 lookup/mutation workload: hit-rate, evictions, and recompute-on-miss
 latency — the serve-side cost of trading resident memory for compute.
 """
+import dataclasses
 import time
 
 import numpy as np
@@ -36,32 +43,26 @@ FRACTIONS = (0.001, 0.005, 0.01, 0.05)
 BUDGET_FRACS = (0.25, 0.5)     # eviction sweep: resident-row cap / level
 
 _DIST_SCRIPT = r"""
-import copy
-import numpy as np, jax, time
-from repro.core.gnn_models import init_gcn
-from repro.core.graph import csr_from_edges, rmat_edges
-from repro.core.ops import DistExecutor
-from repro.core.sampler import sample_layer_graphs
+import numpy as np, time
+from repro.api import (DealConfig, ExecutorSpec, GraphSpec, ModelSpec,
+                       PartitionSpec, Session)
 from repro.gnnserve import (DeltaReinference, MutationLog,
                             apply_edge_mutations, store_from_inference)
-from repro.launch.mesh import make_host_mesh
 
 SMOKE = @SMOKE@
 N = 1024 if SMOKE else 4096
 FANOUT, LAYERS, D = 4, 3, 64
 FRACTIONS = (0.01,) if SMOKE else (0.001, 0.005, 0.01, 0.05)
-seed = 0
-src, dst = rmat_edges(N, N * 14, seed=seed)
-g = csr_from_edges(src, dst, N)
-lgs = sample_layer_graphs(g, fanout=FANOUT, n_layers=LAYERS, seed=seed)
-rng = np.random.default_rng(seed)
-X = rng.standard_normal((N, D), dtype=np.float32)
-params = init_gcn(jax.random.PRNGKey(seed), [D] * LAYERS + [D])
-dex = DistExecutor(make_host_mesh(4, 2))
-ri = DeltaReinference([copy.deepcopy(l) for l in lgs], "gcn", params,
-                      executor=dex)
-levels = ri.full_levels(X)
-store = store_from_inference(X, levels[1:], n_shards=4)
+sess = Session.build(DealConfig(
+    graph=GraphSpec(dataset="rmat", n_nodes=N, avg_degree=14,
+                    fanout=FANOUT, seed=0),
+    model=ModelSpec(name="gcn", n_layers=LAYERS, d_feature=D),
+    partition=PartitionSpec(p=4, m=2),
+    executor=ExecutorSpec(name="dist", fallback_to_ref=False)))
+sess.serve()
+g, src, dst = sess.graph, sess.src, sess.dst
+ri, store, params = sess.reinfer, sess.store, sess.params
+rng = np.random.default_rng(0)
 
 def mutation(frac):
     k = max(1, int(N * frac))
@@ -95,7 +96,7 @@ for frac in FRACTIONS:
     for _ in range(1 if SMOKE else 3):
         t0 = time.perf_counter()
         oracle = DeltaReinference(ri.layer_graphs, "gcn", params,
-                                  executor=dex).full_levels(X2)
+                                  executor=ri.executor).full_levels(X2)
         store_from_inference(X2, oracle[1:], n_shards=4)
         tf.append(time.perf_counter() - t0)
     t_full = sorted(tf)[len(tf) // 2]
@@ -110,29 +111,29 @@ for frac in FRACTIONS:
 """
 
 
-def _setup(seed=0, n=N, executor="ref"):
-    import copy
-
-    import jax
-
-    from repro.core.gnn_models import init_gcn
-    from repro.core.graph import csr_from_edges, rmat_edges
-    from repro.core.sampler import sample_layer_graphs
-    from repro.gnnserve import DeltaReinference, store_from_inference
-    src, dst = rmat_edges(n, n * DEG, seed=seed)
-    g = csr_from_edges(src, dst, n)
-    lgs = sample_layer_graphs(g, fanout=FANOUT, n_layers=LAYERS, seed=seed)
-    rng = np.random.default_rng(seed)
-    X = rng.standard_normal((n, D), dtype=np.float32)
-    params = init_gcn(jax.random.PRNGKey(seed), [D] * LAYERS + [D])
-    ri = DeltaReinference([copy.deepcopy(l) for l in lgs], "gcn", params,
-                          executor=executor)
-    levels = ri.full_levels(X)
-    store = store_from_inference(X, levels[1:], n_shards=4)
-    return g, src, dst, X, params, ri, store, rng
+def _base_cfg(n=N, executor="ref"):
+    from repro.api import DealConfig, ExecutorSpec, GraphSpec, ModelSpec
+    return DealConfig(
+        graph=GraphSpec(dataset="rmat", n_nodes=n, avg_degree=DEG,
+                        fanout=FANOUT, seed=0),
+        model=ModelSpec(name="gcn", n_layers=LAYERS, d_feature=D),
+        executor=ExecutorSpec(name=executor))
 
 
-def _mutation(rng, src, dst, frac, n=N):
+def _setup(cfg=None, *, n=N, executor="ref", budget_rows=0, seed=0):
+    """Session-built world; returns (session, mutation rng)."""
+    from repro.api import Session, StoreSpec
+    cfg = cfg or _base_cfg(n, executor)
+    if budget_rows:
+        cfg = dataclasses.replace(
+            cfg, store=StoreSpec(budget_rows=budget_rows,
+                                 evict_policy="heat"))
+    s = Session.build(cfg)
+    s.serve()                   # epoch + store + delta engine
+    return s, np.random.default_rng(seed)
+
+
+def _mutation(rng, src, dst, frac, n=N, d=D):
     k = max(1, int(n * frac))
     from repro.gnnserve import MutationLog
     log = MutationLog()
@@ -140,13 +141,13 @@ def _mutation(rng, src, dst, frac, n=N):
     pick = rng.choice(src.size, k, replace=False)
     log.remove_edges(src[pick], dst[pick])
     fid = rng.choice(n, max(1, k // 4), replace=False)
-    log.update_features(fid, rng.standard_normal((fid.size, D),
+    log.update_features(fid, rng.standard_normal((fid.size, d),
                                                  dtype=np.float32))
     return log.drain()
 
 
-def run(smoke: bool = False, executor: str = "ref"):
-    if executor == "dist":
+def run(smoke: bool = False, executor: str = "ref", cfg=None):
+    if executor == "dist" and cfg is None:
         # smaller N than the single-host rows (mesh subprocess cost);
         # the _dist speedup row carries its own n= so rows aren't
         # cross-compared blindly
@@ -158,17 +159,25 @@ def run(smoke: bool = False, executor: str = "ref"):
     n = 1024 if smoke else N
     fractions = (0.01,) if smoke else FRACTIONS
     iters = 1 if smoke else 3
+    sess, rng = _setup(cfg, n=n, executor=executor)
+    n = sess.n_nodes
+    d = sess.cfg.model.d_feature
+    g, src, dst = sess.graph, sess.src, sess.dst
+    ri, store, params = sess.reinfer, sess.store, sess.params
+    model = sess.cfg.model.name
+    # a --config artifact may override the CLI executor: label rows (and
+    # run the full-epoch oracle) by what the session actually built
+    executor = sess.cfg.executor.name
     suffix = "" if executor == "ref" else f"_{executor}"
-    g, src, dst, X, params, ri, store, rng = _setup(n=n, executor=executor)
     for frac in fractions:
         # warmup round: populates the pow2-bucket compile caches this
         # batch size hits (steady-state serving reuses them)
-        warm = _mutation(rng, src, dst, frac, n=n)
+        warm = _mutation(rng, src, dst, frac, n=n, d=d)
         g = apply_edge_mutations(g, warm)
         ri.refresh(store, g, warm.feat_ids, warm.feat_rows,
                    warm.affected_dsts())
 
-        batch = _mutation(rng, src, dst, frac, n=n)
+        batch = _mutation(rng, src, dst, frac, n=n, d=d)
         g = apply_edge_mutations(g, batch)
         t_delta, stats = common.time_host(
             lambda: ri.refresh(store, g, batch.feat_ids, batch.feat_rows,
@@ -180,8 +189,10 @@ def run(smoke: bool = False, executor: str = "ref"):
         X2 = store.lookup(np.arange(n), 0)
 
         def full_epoch():
-            oracle = DeltaReinference(ri.layer_graphs, "gcn", params,
-                                      executor=executor).full_levels(X2)
+            # ri.executor is the session-built INSTANCE — same backend
+            # as the delta path even when a --config artifact chose it
+            oracle = DeltaReinference(ri.layer_graphs, model, params,
+                                      executor=ri.executor).full_levels(X2)
             return store_from_inference(X2, oracle[1:], n_shards=4)
 
         t_full, _ = common.time_host(full_epoch, iters=iters)
@@ -196,40 +207,41 @@ def run(smoke: bool = False, executor: str = "ref"):
                     "delta_wins" if t_delta < t_full else "full_wins")
 
     if executor == "ref":
-        _evict_sweep(smoke)
+        _evict_sweep(smoke, cfg)
 
 
-def _evict_sweep(smoke: bool):
+def _evict_sweep(smoke: bool, cfg=None):
     """Memory-budgeted store under a mixed lookup/mutation workload: for
     each budget fraction, cap residency per level, serve a skewed query
     stream (80% of lookups over a 10% hot set, so heat eviction has
     something to keep) interleaved with delta refreshes, and report
     hit-rate, evictions, and recompute-on-miss latency.  Ends with a
-    bitwise check against an unbudgeted twin driven in lockstep."""
-    import copy
-
-    from repro.gnnserve import (DeltaReinference, apply_edge_mutations,
-                                attach_recompute, store_from_inference)
+    bitwise check against an unbudgeted twin — a SEPARATE Session from
+    the same config (equal configs => bitwise-identical worlds), driven
+    in lockstep."""
+    from repro.gnnserve import apply_edge_mutations
     n = 1024 if smoke else N
     ticks = 4 if smoke else 16
     rows_per_lookup = 256
-    g0, src, dst, X, params, ri_o, oracle, _ = _setup(n=n)
-    all_ids = np.arange(n)
 
+    from repro.api import StoreSpec
     for bf in BUDGET_FRACS:
         rng = np.random.default_rng(17)
-        ri = DeltaReinference([copy.deepcopy(l) for l in ri_o.layer_graphs],
-                              "gcn", params)
-        store = attach_recompute(
-            store_from_inference(X, ri.full_levels(X)[1:], n_shards=4,
-                                 budget_rows=int(n * bf),
-                                 evict_policy="heat"), ri)
-        # lockstep unbudgeted twin (for the bitwise acceptance check)
-        ri_t = DeltaReinference([copy.deepcopy(l) for l in ri_o.layer_graphs],
-                                "gcn", params)
-        twin = store_from_inference(X, ri_t.full_levels(X)[1:], n_shards=4)
+        # twin first: a --config world's node count is only known after
+        # the session builds, and the budget is a fraction of it.  The
+        # twin must be UNBUDGETED even if the config carries a budget —
+        # it is the bitwise reference
+        twin_cfg = (dataclasses.replace(cfg, store=StoreSpec())
+                    if cfg is not None else None)
+        stw, _ = _setup(twin_cfg, n=n)
+        n = stw.n_nodes
+        all_ids = np.arange(n)
+        sb, _ = _setup(cfg, n=n, budget_rows=int(n * bf))
+        ri, store = sb.reinfer, sb.store
+        ri_t, twin = stw.reinfer, stw.store
+        g, src, dst = sb.graph, sb.src, sb.dst
+        d = sb.cfg.model.d_feature
 
-        g = g0
         hot = int(n * 0.1)
         lookup_ts = []
         t0 = time.perf_counter()
@@ -242,7 +254,7 @@ def _evict_sweep(smoke: bool):
                 store.lookup(ids, -1)
                 lookup_ts.append(time.perf_counter() - t1)
             if tick % 4 == 3:
-                batch = _mutation(rng, src, dst, 0.002, n=n)
+                batch = _mutation(rng, src, dst, 0.002, n=n, d=d)
                 g = apply_edge_mutations(g, batch)
                 for r, s in ((ri, store), (ri_t, twin)):
                     r.refresh(s, g, batch.feat_ids, batch.feat_rows,

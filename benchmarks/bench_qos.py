@@ -1,6 +1,10 @@
 """Multi-tenant QoS study: a strict-SLO interactive tenant co-resident
 with a saturating batch tenant, versus the global-bound baseline.
 
+A THIN CLIENT of the public API: every engine is a ``DealConfig`` ->
+``api.Session`` build (equal configs are bitwise-identical worlds, so
+the solo/baseline/qos engines need no hand-shared state).
+
 Three runs over the same graph/model and the same deterministic traffic
 schedule (one interactive query per tick, the batch tenant kept
 saturated with large scans, a steady mutation stream):
@@ -27,8 +31,6 @@ run: wait = engine steps from submit to first gather (the pin), and
 observed staleness = mutation ops that arrived before the pin minus ops
 folded into the pinned epoch.
 """
-import copy
-
 import numpy as np
 
 from benchmarks import common
@@ -48,30 +50,27 @@ UI_SLO = 8
 BATCH_SLO = 100_000         # analytics can read arbitrarily stale rows
 
 
-def _world(n, seed=0):
-    import jax
+def _cfg(n, *, seed=0, bound=UI_SLO, tenants="", executor="ref"):
+    """The declarative world: equal configs build bitwise-identical
+    Sessions, so every engine below gets its own Session instead of a
+    hand-shared world."""
+    from repro.api import (DealConfig, ExecutorSpec, GraphSpec, ModelSpec,
+                           QoSSpec, tenants_from_string)
+    return DealConfig(
+        graph=GraphSpec(dataset="rmat", n_nodes=n, avg_degree=DEG,
+                        fanout=FANOUT, seed=seed),
+        model=ModelSpec(name="gcn", n_layers=LAYERS, d_feature=D),
+        executor=ExecutorSpec(name=executor),
+        qos=QoSSpec(staleness_bound=bound, batch_slots=SLOTS,
+                    rows_per_step=ROWS_PER_STEP,
+                    tenants=(tenants_from_string(tenants)
+                             if tenants else ())))
 
-    from repro.core.gnn_models import init_gcn
-    from repro.core.graph import csr_from_edges, rmat_edges
-    from repro.core.sampler import sample_layer_graphs
-    src, dst = rmat_edges(n, n * DEG, seed=seed)
-    g = csr_from_edges(src, dst, n)
-    lgs = sample_layer_graphs(g, fanout=FANOUT, n_layers=LAYERS, seed=seed)
-    X = np.random.default_rng(seed).standard_normal((n, D), dtype=np.float32)
-    params = init_gcn(jax.random.PRNGKey(seed), [D] * (LAYERS + 1))
-    return g, lgs, X, params
 
-
-def _engine(world, *, tenants=None, bound=UI_SLO, executor="ref"):
-    from repro.gnnserve import (DeltaReinference, EmbeddingServeEngine,
-                                store_from_inference)
-    g, lgs, X, params = world
-    ri = DeltaReinference([copy.deepcopy(l) for l in lgs], "gcn", params,
-                          executor=executor)
-    store = store_from_inference(X, ri.full_levels(X)[1:], n_shards=4)
-    return EmbeddingServeEngine(store, ri, g, batch_slots=SLOTS,
-                                rows_per_step=ROWS_PER_STEP,
-                                staleness_bound=bound, tenants=tenants)
+def _engine(n, *, seed=0, bound=UI_SLO, tenants="", executor="ref"):
+    from repro.api import Session
+    return Session.build(_cfg(n, seed=seed, bound=bound, tenants=tenants,
+                              executor=executor)).serve()
 
 
 class _Meter:
@@ -150,12 +149,11 @@ def _drive(eng, n, ticks, steps_per_tick, *, with_batch, seed=11):
 def _bitwise_phase(n, ticks, executor="ref", seed=23):
     """Tick-drained multi-tenant run vs per-tenant solo engines at the
     same SLO: outputs must match bit for bit."""
-    from repro.gnnserve import Query, parse_tenants
-    world = _world(n, seed=1)
-    reg = parse_tenants(f"ui:4:2:0:{UI_SLO},batch:1:1:0:64")
-    multi = _engine(world, tenants=reg, executor=executor)
-    solos = {"ui": _engine(world, bound=UI_SLO, executor=executor),
-             "batch": _engine(world, bound=64, executor=executor)}
+    from repro.gnnserve import Query
+    multi = _engine(n, seed=1, tenants=f"ui:4:2:0:{UI_SLO},batch:1:1:0:64",
+                    executor=executor)
+    solos = {"ui": _engine(n, seed=1, bound=UI_SLO, executor=executor),
+             "batch": _engine(n, seed=1, bound=64, executor=executor)}
     rng = np.random.default_rng(seed)
     pairs = []
     for tick in range(ticks):
@@ -183,28 +181,26 @@ def run(smoke: bool = False, executor: str = "ref"):
         print("# qos: dist executor exercised via the incremental bench; "
               "scheduling is backend-agnostic — skipping")
         return
-    from repro.gnnserve import parse_tenants
     n = 512 if smoke else N
     ticks = 8 if smoke else 48
     steps_per_tick = 2
     suffix = "" if executor == "ref" else f"_{executor}"
-    world = _world(n)
 
     # -- solo: the wait reference ---------------------------------------
-    reg_solo = parse_tenants(f"ui:4:2:0:{UI_SLO}")
-    solo = _drive(_engine(world, tenants=reg_solo, executor=executor),
+    solo = _drive(_engine(n, tenants=f"ui:4:2:0:{UI_SLO}",
+                          executor=executor),
                   n, ticks, steps_per_tick, with_batch=False)
 
     # -- baseline: one global bound + FIFO, batch saturates -------------
     # the global bound is forced loose (the batch tenant's choice): the
     # strict tenant's freshness is sacrificed — and FIFO admission also
     # queues it behind the scans
-    base = _drive(_engine(world, bound=BATCH_SLO, executor=executor),
+    base = _drive(_engine(n, bound=BATCH_SLO, executor=executor),
                   n, ticks, steps_per_tick, with_batch=True)
 
     # -- qos: per-tenant SLOs, quotas, DRR rows -------------------------
-    reg = parse_tenants(f"ui:4:2:0:{UI_SLO},batch:1:1:0:{BATCH_SLO}")
-    qeng = _engine(world, tenants=reg, executor=executor)
+    qeng = _engine(n, tenants=f"ui:4:2:0:{UI_SLO},batch:1:1:0:{BATCH_SLO}",
+                   executor=executor)
     qos = _drive(qeng, n, ticks, steps_per_tick, with_batch=True)
     ts = qeng.stats()["tenants"]
 

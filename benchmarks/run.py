@@ -69,10 +69,18 @@ def main() -> None:
     ap.add_argument("--executor", default="ref",
                     choices=["ref", "pallas", "dist"],
                     help="backend for benches that support retargeting")
+    ap.add_argument("--config", default=None, metavar="CFG.json",
+                    help="DealConfig JSON artifact passed to benches "
+                         "that accept cfg= (e.g. incremental): retarget "
+                         "a bench's world from one reproducible file")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes, all benches, no bench.csv write "
                          "(CI liveness check)")
     args = ap.parse_args()
+    cfg = None
+    if args.config:
+        from repro.api import DealConfig
+        cfg = DealConfig.load(args.config).validate()
     wanted = list(args.keys) + (args.only.split(",") if args.only else [])
     keys = [ALIASES.get(k, k) for k in wanted] if wanted else list(MODULES)
     keys = list(dict.fromkeys(keys))         # dedupe, keep order
@@ -92,6 +100,8 @@ def main() -> None:
                 kw["smoke"] = args.smoke
             if "executor" in sig:
                 kw["executor"] = args.executor
+            if "cfg" in sig and cfg is not None:
+                kw["cfg"] = cfg
             mod.run(**kw)
         except Exception as e:
             failures.append((k, e))

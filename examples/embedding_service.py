@@ -1,16 +1,20 @@
-"""Minimal gnnserve walkthrough: serve embeddings, mutate the graph,
-watch the staleness bound trigger an incremental refresh — then rerun
-the same traffic on a memory-budgeted store (50% resident rows, heat
-eviction) and check it serves bitwise-identical rows via
-recompute-on-miss.  Ends with a multi-tenant QoS replay: a strict-SLO
-interactive tenant and a loose-SLO batch tenant share one engine — the
-batch tenant keeps reading an older epoch while the interactive tenant
-triggers refreshes, and each tenant's rows are bitwise what a
-single-tenant engine at its own SLO would have served.
+"""Minimal gnnserve walkthrough, as a THIN CLIENT of the public API:
+one declarative ``DealConfig`` drives everything — serve embeddings,
+mutate the graph, watch the staleness bound trigger an incremental
+refresh; rerun the same traffic on a memory-budgeted store (50%
+resident rows, heat eviction) and check it serves bitwise-identical
+rows via recompute-on-miss; onboard brand-new nodes through a tail
+partition and fold them in with a full epoch; end with a multi-tenant
+QoS replay where each tenant's rows are bitwise what a single-tenant
+engine at its own SLO would have served.
+
+Because every Session draws all randomness from the config's seeds, the
+budgeted / solo / multi-tenant engines are built as SEPARATE Sessions
+from (near-)equal configs and still live in bitwise-identical worlds.
 
   PYTHONPATH=src python examples/embedding_service.py
 """
-import copy
+import dataclasses
 import pathlib
 import sys
 
@@ -18,29 +22,20 @@ import numpy as np
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
-import jax  # noqa: E402
-
-from repro.core.gnn_models import init_gcn  # noqa: E402
-from repro.core.graph import csr_from_edges, rmat_edges  # noqa: E402
-from repro.core.sampler import sample_layer_graphs  # noqa: E402
-from repro.gnnserve import (DeltaReinference, EmbeddingServeEngine,  # noqa: E402
-                            Query, attach_recompute, parse_tenants,
-                            store_from_inference)
+from repro.api import (DealConfig, GraphSpec, ModelSpec, QoSSpec,  # noqa: E402
+                       Session, StoreSpec, tenants_from_string)
+from repro.gnnserve import Query  # noqa: E402
 
 N, D, LAYERS = 1024, 32, 3
 
-# offline: build graph, sample layer graphs, run one full epoch
-src, dst = rmat_edges(N, N * 16, seed=0)
-g = csr_from_edges(src, dst, N)
-lgs = sample_layer_graphs(g, fanout=8, n_layers=LAYERS, seed=0)
-X = np.random.default_rng(0).standard_normal((N, D), dtype=np.float32)
-params = init_gcn(jax.random.PRNGKey(0), [D] * (LAYERS + 1))
-ri = DeltaReinference([copy.deepcopy(l) for l in lgs], "gcn", params)
-levels = ri.full_levels(X)
+BASE = DealConfig(
+    graph=GraphSpec(dataset="rmat", n_nodes=N, avg_degree=16, fanout=8),
+    model=ModelSpec(name="gcn", n_layers=LAYERS, d_feature=D),
+    qos=QoSSpec(staleness_bound=8))
 
-# online: store + engine with a tight staleness bound
-store = store_from_inference(X, levels[1:], n_shards=4)
-eng = EmbeddingServeEngine(store, ri, g, staleness_bound=8)
+# offline pipeline + online engine, from one config
+sess = Session.build(BASE)
+eng = sess.serve()
 
 q = Query(uid=0, node_ids=np.arange(16))
 eng.submit(q)
@@ -49,8 +44,8 @@ print(f"served v{q.served_version}: first row head "
       f"{np.round(q.out[0, :4], 3)}")
 
 # mutate past the bound: 10 new edges into node 0's neighborhood
-eng.mutate().add_edges(np.random.default_rng(1).integers(0, N, 10),
-                       np.zeros(10, np.int64))
+sess.apply_mutations().add_edges(
+    np.random.default_rng(1).integers(0, N, 10), np.zeros(10, np.int64))
 print(f"pending mutations: {eng.staleness} (bound {eng.staleness_bound})")
 
 q2 = Query(uid=1, node_ids=np.arange(16))
@@ -64,13 +59,11 @@ print(f"node 0 embedding moved: "
       f"{not np.array_equal(q.out[0], q2.out[0])}")
 assert eng.store.version == 1 and eng.n_refreshes == 1
 
-# memory-budgeted replay: cap each level at 50% resident rows; evicted
-# shards rebuild exactly the missing rows through the delta engine
-ri_b = DeltaReinference([copy.deepcopy(l) for l in lgs], "gcn", params)
-store_b = attach_recompute(
-    store_from_inference(X, ri_b.full_levels(X)[1:], n_shards=4,
-                         budget_rows=N // 2, evict_policy="heat"), ri_b)
-eng_b = EmbeddingServeEngine(store_b, ri_b, g, staleness_bound=8)
+# memory-budgeted replay: same config + a 50% budget; a SEPARATE
+# Session is the same world, so rows must match bit for bit
+cfg_b = dataclasses.replace(
+    BASE, store=StoreSpec(budget_rows=N // 2, evict_policy="heat"))
+eng_b = Session.build(cfg_b).serve()
 eng_b.mutate().add_edges(np.random.default_rng(1).integers(0, N, 10),
                          np.zeros(10, np.int64))
 q3 = Query(uid=2, node_ids=np.arange(16))
@@ -87,22 +80,43 @@ print(f"budgeted(50%): identical rows; hit-rate {s['store_hit_rate']:.2f}, "
                  for i, v in enumerate(mem.values())))
 
 # ---------------------------------------------------------------------
+# incremental node onboarding: add 4 nodes with features + edges, serve
+# them via a tail partition, then fold with a full (re-partition) epoch
+# ---------------------------------------------------------------------
+cfg_o = dataclasses.replace(BASE, store=StoreSpec(onboarding="tail"))
+sess_o = Session.build(cfg_o)
+eng_o = sess_o.serve()
+rng = np.random.default_rng(5)
+eng_o.mutate().add_nodes(4, rng.standard_normal((4, D), dtype=np.float32))
+eng_o.mutate().add_edges(rng.integers(0, N, 8),
+                         np.repeat(np.arange(N, N + 4), 2))
+q4 = Query(uid=3, node_ids=np.arange(N - 2, N + 4), fresh=True)
+eng_o.submit(q4)
+eng_o.run()
+assert eng_o.store.n_nodes == N + 4 and eng_o.store.n_tail_shards == 1
+print(f"onboarded 4 nodes via tail partition (store v"
+      f"{eng_o.store.version}, {eng_o.store.n_shards} shards); new-node "
+      f"row head {np.round(q4.out[-1, :3], 3)}")
+fold = eng_o.full_epoch()
+assert eng_o.store.n_tail_shards == 0
+assert np.array_equal(eng_o.store.lookup(q4.node_ids, -1), q4.out), \
+    "folding the tail must not change any served bits"
+print(f"folded into {fold['n_shards']} main partitions at v"
+      f"{fold['version']}: bitwise-unchanged")
+
+# ---------------------------------------------------------------------
 # multi-tenant QoS replay: a strict interactive tenant and a loose batch
 # tenant share one engine; solo engines at each tenant's SLO are driven
 # with the same schedule as the bitwise oracle
 # ---------------------------------------------------------------------
-tenants = parse_tenants("ui:4:2:0:4,batch:1:1:64:1000")
-ri_q = DeltaReinference([copy.deepcopy(l) for l in lgs], "gcn", params)
-eng_q = EmbeddingServeEngine(
-    store_from_inference(X, ri_q.full_levels(X)[1:], n_shards=4),
-    ri_q, g, batch_slots=4, rows_per_step=128, tenants=tenants)
-
-solo = {}
-for name, slo in (("ui", 4), ("batch", 1000)):
-    ri_s = DeltaReinference([copy.deepcopy(l) for l in lgs], "gcn", params)
-    solo[name] = EmbeddingServeEngine(
-        store_from_inference(X, ri_s.full_levels(X)[1:], n_shards=4),
-        ri_s, g, batch_slots=4, rows_per_step=128, staleness_bound=slo)
+eng_q = Session.build(dataclasses.replace(
+    BASE, qos=QoSSpec(batch_slots=4, rows_per_step=128,
+                      tenants=tenants_from_string(
+                          "ui:4:2:0:4,batch:1:1:64:1000")))).serve()
+solo = {name: Session.build(dataclasses.replace(
+            BASE, qos=QoSSpec(staleness_bound=slo, batch_slots=4,
+                              rows_per_step=128))).serve()
+        for name, slo in (("ui", 4), ("batch", 1000))}
 
 rng = np.random.default_rng(7)
 pairs = []

@@ -1,0 +1,38 @@
+"""repro.api — the public, declarative API over the whole Deal pipeline.
+
+One config tree, one lifecycle object, four plugin registries:
+
+  ``DealConfig``   typed + serializable (exact JSON round-trip) +
+                   eagerly validated (every bad field named);
+                   sub-specs: GraphSpec, ModelSpec, PartitionSpec,
+                   ExecutorSpec, StoreSpec, QoSSpec, RefreshSpec.
+  ``Session``      ``Session.build(cfg)`` -> ``infer_all()`` /
+                   ``serve()`` / ``apply_mutations()`` / ``refresh()``
+                   / ``full_epoch()`` / ``stats()`` / ``close()``.
+  registries       ``register_executor`` / ``register_model`` /
+                   ``register_evict_policy`` / ``register_admission``
+                   make ref/pallas/dist, gcn/sage/gat, heat/lru and
+                   probation/full registered DEFAULTS — third-party
+                   scenarios plug in without touching core.
+
+Launchers, examples, and benchmarks are thin clients of this module:
+argparse -> ``DealConfig`` -> ``Session`` (see ``launch/infer_gnn.py``,
+``launch/serve_embeddings.py``), with ``--config``/``--dump-config``
+making every run reproducible from one JSON artifact.
+"""
+from repro.api.config import (ConfigError, DealConfig, ExecutorSpec,
+                              GraphSpec, ModelSpec, PartitionSpec, QoSSpec,
+                              RefreshSpec, StoreSpec, tenants_from_string)
+from repro.api.registry import (ADMISSIONS, EVICT_POLICIES, EXECUTORS,
+                                MODELS, Registry, register_admission,
+                                register_evict_policy, register_executor,
+                                register_model)
+from repro.api.session import Session
+
+__all__ = ["ConfigError", "DealConfig", "ExecutorSpec", "GraphSpec",
+           "ModelSpec", "PartitionSpec", "QoSSpec", "RefreshSpec",
+           "StoreSpec", "tenants_from_string",
+           "ADMISSIONS", "EVICT_POLICIES", "EXECUTORS", "MODELS",
+           "Registry", "register_admission", "register_evict_policy",
+           "register_executor", "register_model",
+           "Session"]

@@ -1,0 +1,422 @@
+"""``DealConfig`` — one declarative, serializable config tree for the
+whole Deal pipeline (construction -> sampling -> partition -> executor ->
+store/engine/QoS), with exact JSON round-trip and eager validation.
+
+Every entry point (launchers, examples, benchmarks) is a thin client
+that builds one of these and hands it to ``api.session.Session``; a
+full run is reproducible from the JSON artifact alone because every
+random draw in the pipeline is seeded from the config.
+
+Design rules:
+
+  * ``from_dict(to_dict(cfg)) == cfg`` and ``from_json(to_json(cfg)) ==
+    cfg`` are EXACT (dataclass equality) — dump a config, check it in,
+    and the rerun is the same run.
+  * ``validate()`` checks every field eagerly and reports ALL problems
+    in one error, each prefixed with its dotted field path
+    (``store.evict_policy: ...``) — never just the first one.
+  * names that select plugins (executor, model, evict_policy,
+    admission) validate against the live registries
+    (``api.registry``), so a third-party registration is immediately a
+    legal config value.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.api import registry as _reg
+
+
+class ConfigError(ValueError):
+    """Raised by ``DealConfig.validate`` with every bad field listed."""
+
+
+def _load_builtin_plugins() -> None:
+    """Importing the defining modules registers the built-in plugins
+    (executors in ``core.ops``, models in ``core.gnn_models``, eviction/
+    admission in ``gnnserve.store``).  Local imports: config stays
+    importable without pulling jax until validation time."""
+    import repro.core.gnn_models   # noqa: F401
+    import repro.core.ops          # noqa: F401
+    import repro.gnnserve.store    # noqa: F401
+
+
+# ----------------------------------------------------------------------
+# the spec tree
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GraphSpec:
+    """Stage 1+2: dataset -> distributed CSR -> layer-wise sampling."""
+    dataset: str = "ogbn-products"  # named dataset, or "rmat" (explicit)
+    scale: float = 1.0              # node-count multiplier (CI smoke)
+    n_nodes: int = 0                # dataset == "rmat" only
+    avg_degree: int = 0             # dataset == "rmat": E = n * avg_degree
+    fanout: int = 8                 # fixed fanout of the layer graphs
+    seed: int = 0                   # dataset + sampling + features seed
+    n_construct_workers: int = 4    # distributed CSR construction width
+
+
+@dataclasses.dataclass
+class ModelSpec:
+    """Which registered GNN model, its depth and widths."""
+    name: str = "gcn"
+    n_layers: int = 3
+    d_feature: int = 64
+    heads: int = 1                  # attention heads (gat)
+
+
+@dataclasses.dataclass
+class PartitionSpec:
+    """The 1-D collaborative partition geometry: ``p`` graph partitions
+    x ``m`` feature partitions (the ("data", "model") mesh)."""
+    p: int = 2
+    m: int = 1
+
+
+@dataclasses.dataclass
+class ExecutorSpec:
+    """Backend selection + the construction/validation logic that used
+    to be copy-pasted across every launcher."""
+    name: str = "ref"               # a registered executor
+    fallback_to_ref: bool = True    # dist on a trivial (p*m <= 1) mesh
+    options: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def build(self, partition: Optional[PartitionSpec] = None, *,
+              n_nodes: Optional[int] = None):
+        """Resolve this spec into an executor INSTANCE — the one place
+        that owns the device-count check, the dist -> ref fallback on a
+        trivial mesh, the dist geometry checks, and mesh creation.
+        Raises ``ConfigError`` naming the offending field; unknown
+        executor names list every registered one."""
+        _load_builtin_plugins()
+        if self.name not in _reg.EXECUTORS:
+            raise ConfigError(
+                f"executor.name: unknown executor {self.name!r}; "
+                f"registered: {', '.join(_reg.EXECUTORS.names())}")
+        from repro.core.ops import get_executor
+        if self.name != "dist":
+            return get_executor(self.name, **self.options)
+
+        part = partition or PartitionSpec()
+        p, m = part.p, part.m
+        if p * m <= 1 and self.fallback_to_ref:
+            return get_executor("ref")      # no mesh to run on
+        import jax
+        if len(jax.devices()) < p * m:
+            raise ConfigError(
+                f"executor.name: \"dist\" needs p*m = {p * m} devices "
+                f"(found {len(jax.devices())}); run under XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={p * m}")
+        if n_nodes is not None and n_nodes % p != 0:
+            raise ConfigError(
+                f"partition.p: {p} must divide the node count {n_nodes}")
+        if m & (m - 1) != 0:
+            raise ConfigError(
+                f"partition.m: {m} must be a power of two "
+                "(row-subset pad buckets)")
+        from repro.launch.mesh import make_host_mesh
+        return get_executor("dist", mesh=make_host_mesh(p, m),
+                            **self.options)
+
+
+@dataclasses.dataclass
+class StoreSpec:
+    """The versioned embedding store: sharding, memory budget, and
+    incremental node onboarding."""
+    n_shards: int = 4
+    budget_rows: int = 0            # 0 = unbudgeted; else rows per level
+    evict_policy: str = "heat"      # a registered eviction policy
+    admission: str = "probation"    # a registered admission policy
+    onboarding: str = "none"        # "tail": node adds append a tail
+    #                                 partition served via delta refresh
+
+
+@dataclasses.dataclass
+class QoSSpec:
+    """Serving and freshness: the engine's batching geometry plus the
+    optional multi-tenant schedule (empty ``tenants`` = single implicit
+    tenant at ``staleness_bound``)."""
+    staleness_bound: int = 64
+    batch_slots: int = 4
+    rows_per_step: int = 256
+    refresh_charge: float = 1.0
+    tenants: Tuple[Dict[str, Any], ...] = ()
+
+    def tenant_registry(self):
+        """The runtime ``gnnserve.qos.TenantRegistry`` (None when no
+        tenants are declared)."""
+        if not self.tenants:
+            return None
+        from repro.gnnserve.qos import TenantRegistry, TenantSpec
+        return TenantRegistry([TenantSpec(**dict(t)) for t in self.tenants])
+
+
+@dataclasses.dataclass
+class RefreshSpec:
+    """Delta re-inference knobs (the content-addressed resample seed)."""
+    sample_seed: int = 0
+
+
+_TENANT_FIELDS = ("name", "priority", "slot_quota", "rate", "staleness_slo")
+
+
+def tenants_from_string(text: str) -> Tuple[Dict[str, Any], ...]:
+    """The CLI ``--tenants`` format ("name:priority:quota:rate:slo,...")
+    as config-tree tenant dicts — delegates to the canonical parser
+    (``gnnserve.qos.parse_tenants``, including its TenantSpec value
+    checks) and re-raises every problem as ``ConfigError``."""
+    from repro.gnnserve.qos import parse_tenants
+    try:
+        reg = parse_tenants(text)
+    except (ValueError, AssertionError) as exc:
+        raise ConfigError(f"qos.tenants: {exc}") from None
+    return tuple({"name": t.name, "priority": t.priority,
+                  "slot_quota": t.slot_quota, "rate": t.rate,
+                  "staleness_slo": t.staleness_slo} for t in reg)
+
+
+# ----------------------------------------------------------------------
+# the root
+# ----------------------------------------------------------------------
+
+_SECTIONS = {"graph": GraphSpec, "model": ModelSpec,
+             "partition": PartitionSpec, "executor": ExecutorSpec,
+             "store": StoreSpec, "qos": QoSSpec, "refresh": RefreshSpec}
+
+
+@dataclasses.dataclass
+class DealConfig:
+    graph: GraphSpec = dataclasses.field(default_factory=GraphSpec)
+    model: ModelSpec = dataclasses.field(default_factory=ModelSpec)
+    partition: PartitionSpec = dataclasses.field(
+        default_factory=PartitionSpec)
+    executor: ExecutorSpec = dataclasses.field(
+        default_factory=ExecutorSpec)
+    store: StoreSpec = dataclasses.field(default_factory=StoreSpec)
+    qos: QoSSpec = dataclasses.field(default_factory=QoSSpec)
+    refresh: RefreshSpec = dataclasses.field(default_factory=RefreshSpec)
+
+    # -- serialization --------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        # JSON has no tuples; normalize here so to_dict output and a
+        # json.loads round-trip are the same object shapes
+        d["qos"]["tenants"] = [dict(t) for t in d["qos"]["tenants"]]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "DealConfig":
+        """Strict: an unknown section or field is an error that names
+        it — a typo must not silently fall back to a default."""
+        if not isinstance(d, dict):
+            raise ConfigError(f"config root must be a dict, got {type(d)}")
+        errors: List[str] = []
+        kw = {}
+        for key, sub in d.items():
+            if key not in _SECTIONS:
+                errors.append(f"{key}: unknown config section; valid: "
+                              + ", ".join(_SECTIONS))
+                continue
+            if not isinstance(sub, dict):
+                errors.append(f"{key}: must be a dict of fields, got "
+                              f"{type(sub).__name__}")
+                continue
+            spec_cls = _SECTIONS[key]
+            known = {f.name for f in dataclasses.fields(spec_cls)}
+            bad = [f"{key}.{k}: unknown field; valid: " + ", ".join(known)
+                   for k in sub if k not in known]
+            if bad:
+                errors.extend(bad)
+                continue
+            kw[key] = spec_cls(**sub)
+        if errors:
+            raise ConfigError("invalid DealConfig:\n  - "
+                              + "\n  - ".join(errors))
+        cfg = cls(**kw)
+        if isinstance(cfg.qos.tenants, (list, tuple)):
+            # normalize JSON lists to tuples for exact dataclass
+            # equality; non-dict entries pass through for validate()
+            # to name
+            cfg.qos.tenants = tuple(dict(t) if isinstance(t, dict) else t
+                                    for t in cfg.qos.tenants)
+        return cfg
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "DealConfig":
+        return cls.from_dict(json.loads(text))
+
+    @classmethod
+    def load(cls, path) -> "DealConfig":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    def dump(self, path) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+
+    # -- validation -----------------------------------------------------
+    def _type_errors(self) -> List[str]:
+        """Per-field type check against each spec's defaults — runs (and
+        raises) BEFORE the value checks, which assume sane types.  bool
+        is not an int here; int is an acceptable float."""
+        errs = []
+        for sec in _SECTIONS:
+            spec = getattr(self, sec)
+            if not isinstance(spec, _SECTIONS[sec]):
+                errs.append(f"{sec}: must be a {_SECTIONS[sec].__name__}")
+                continue
+            defaults = _SECTIONS[sec]()
+            for f in dataclasses.fields(spec):
+                v = getattr(spec, f.name)
+                d = getattr(defaults, f.name)
+                if isinstance(d, bool):
+                    ok = isinstance(v, bool)
+                elif isinstance(d, int):
+                    ok = isinstance(v, int) and not isinstance(v, bool)
+                elif isinstance(d, float):
+                    ok = (isinstance(v, (int, float))
+                          and not isinstance(v, bool))
+                elif isinstance(d, str):
+                    ok = isinstance(v, str)
+                elif isinstance(d, dict):
+                    ok = isinstance(v, dict)
+                elif isinstance(d, tuple):
+                    ok = isinstance(v, (list, tuple))
+                else:
+                    ok = True
+                if not ok:
+                    errs.append(f"{sec}.{f.name}: expected "
+                                f"{type(d).__name__}, got "
+                                f"{type(v).__name__} ({v!r})")
+        return errs
+
+    def validate(self) -> "DealConfig":
+        """Eagerly check every field; raise one ``ConfigError`` listing
+        EVERY bad field by dotted path.  Returns self (chainable)."""
+        _load_builtin_plugins()
+        from repro.core.graph import dataset_names
+        type_errors = self._type_errors()
+        if type_errors:
+            raise ConfigError("invalid DealConfig:\n  - "
+                              + "\n  - ".join(type_errors))
+        e: List[str] = []
+        g, m, pt, ex = self.graph, self.model, self.partition, self.executor
+        st, q, r = self.store, self.qos, self.refresh
+
+        known = dataset_names() + ["rmat"]
+        if g.dataset not in known:
+            e.append(f"graph.dataset: unknown dataset {g.dataset!r}; "
+                     f"valid: {', '.join(known)}")
+        if g.dataset == "rmat":
+            if g.n_nodes <= 0:
+                e.append("graph.n_nodes: must be > 0 for dataset \"rmat\"")
+            if g.avg_degree <= 0:
+                e.append("graph.avg_degree: must be > 0 for dataset "
+                         "\"rmat\"")
+        if g.scale <= 0:
+            e.append(f"graph.scale: must be > 0, got {g.scale}")
+        if g.fanout < 1:
+            e.append(f"graph.fanout: must be >= 1, got {g.fanout}")
+        if g.n_construct_workers < 1:
+            e.append("graph.n_construct_workers: must be >= 1, got "
+                     f"{g.n_construct_workers}")
+
+        if m.name not in _reg.MODELS:
+            e.append(f"model.name: unknown model {m.name!r}; registered: "
+                     + ", ".join(_reg.MODELS.names()))
+        if m.n_layers < 1:
+            e.append(f"model.n_layers: must be >= 1, got {m.n_layers}")
+        if m.d_feature < 1:
+            e.append(f"model.d_feature: must be >= 1, got {m.d_feature}")
+        if m.heads < 1:
+            e.append(f"model.heads: must be >= 1, got {m.heads}")
+        elif m.d_feature % m.heads != 0:
+            e.append(f"model.heads: {m.heads} must divide d_feature "
+                     f"{m.d_feature}")
+
+        if pt.p < 1:
+            e.append(f"partition.p: must be >= 1, got {pt.p}")
+        if pt.m < 1:
+            e.append(f"partition.m: must be >= 1, got {pt.m}")
+
+        if ex.name not in _reg.EXECUTORS:
+            e.append(f"executor.name: unknown executor {ex.name!r}; "
+                     f"registered: {', '.join(_reg.EXECUTORS.names())}")
+        if not isinstance(ex.options, dict):
+            e.append("executor.options: must be a dict, got "
+                     f"{type(ex.options).__name__}")
+
+        if st.n_shards < 1:
+            e.append(f"store.n_shards: must be >= 1, got {st.n_shards}")
+        if st.budget_rows < 0:
+            e.append(f"store.budget_rows: must be >= 0 (0 = unbudgeted), "
+                     f"got {st.budget_rows}")
+        if st.evict_policy not in _reg.EVICT_POLICIES:
+            e.append(f"store.evict_policy: unknown policy "
+                     f"{st.evict_policy!r}; registered: "
+                     + ", ".join(_reg.EVICT_POLICIES.names()))
+        if st.admission not in _reg.ADMISSIONS:
+            e.append(f"store.admission: unknown policy {st.admission!r}; "
+                     f"registered: {', '.join(_reg.ADMISSIONS.names())}")
+        if st.onboarding not in ("none", "tail"):
+            e.append(f"store.onboarding: must be \"none\" or \"tail\", "
+                     f"got {st.onboarding!r}")
+
+        if q.staleness_bound < 1:
+            e.append(f"qos.staleness_bound: must be >= 1, got "
+                     f"{q.staleness_bound}")
+        if q.batch_slots < 1:
+            e.append(f"qos.batch_slots: must be >= 1, got {q.batch_slots}")
+        if q.rows_per_step < 1:
+            e.append(f"qos.rows_per_step: must be >= 1, got "
+                     f"{q.rows_per_step}")
+        seen = set()
+        _num = (int, float)
+        tenant_types = {"name": (str, "str"), "priority": (_num, "number"),
+                        "slot_quota": (int, "int"), "rate": (_num, "number"),
+                        "staleness_slo": (int, "int")}
+        for i, t in enumerate(q.tenants):
+            path = f"qos.tenants[{i}]"
+            if not isinstance(t, dict):
+                e.append(f"{path}: must be a dict with fields "
+                         + ", ".join(_TENANT_FIELDS))
+                continue
+            bad_types = False
+            for k, v in t.items():
+                if k not in _TENANT_FIELDS:
+                    e.append(f"{path}.{k}: unknown tenant field; valid: "
+                             + ", ".join(_TENANT_FIELDS))
+                elif (not isinstance(v, tenant_types[k][0])
+                      or isinstance(v, bool)):
+                    e.append(f"{path}.{k}: expected {tenant_types[k][1]},"
+                             f" got {type(v).__name__} ({v!r})")
+                    bad_types = True
+            if bad_types:
+                continue            # value checks assume sane types
+            name = t.get("name", "")
+            if not name:
+                e.append(f"{path}.name: required and non-empty")
+            elif name in seen:
+                e.append(f"{path}.name: duplicate tenant {name!r}")
+            seen.add(name)
+            if t.get("priority", 1.0) <= 0:
+                e.append(f"{path}.priority: must be > 0, got "
+                         f"{t.get('priority')}")
+            if t.get("slot_quota", 1) < 0:
+                e.append(f"{path}.slot_quota: must be >= 0, got "
+                         f"{t.get('slot_quota')}")
+            if t.get("staleness_slo", 64) < 1:
+                e.append(f"{path}.staleness_slo: must be >= 1, got "
+                         f"{t.get('staleness_slo')}")
+        # (refresh.sample_seed's type is covered by the type pass above)
+
+        if e:
+            raise ConfigError("invalid DealConfig:\n  - "
+                              + "\n  - ".join(e))
+        return self

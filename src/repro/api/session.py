@@ -1,0 +1,212 @@
+"""``Session`` — the one lifecycle object over the whole Deal pipeline.
+
+    cfg = DealConfig(...)                       # or DealConfig.load(path)
+    with Session.build(cfg) as s:
+        H = s.infer_all()                       # offline: all-node epoch
+        eng = s.serve()                         # online: store + engine
+        s.apply_mutations().add_edges(src, dst)
+        s.refresh()
+        print(s.stats())
+
+``build`` owns every stage the launchers used to hand-wire: dataset ->
+distributed CSR construction -> layer-wise sampling -> feature/param
+init -> executor selection (``ExecutorSpec.build``: device checks,
+dist->ref fallback, mesh creation) — and ``serve`` adds the online
+half: full epoch -> versioned store (budget / eviction / onboarding)
+-> recompute-on-miss wiring -> continuous-batching engine with optional
+multi-tenant QoS.  Every stage draws randomness only from the config's
+seeds, so two Sessions built from equal configs are bitwise-identical
+worlds — which is what makes the deprecation shims in the launchers
+exactly equivalent to the code they replaced.
+
+``infer_all`` runs the canonical full-graph path (``run_model`` over
+the bound executor — op-for-op the pre-API launcher computation);
+``serve`` builds its store from ``DeltaReinference.full_levels`` (the
+delta engine's level layout), exactly as the serving launcher always
+did.
+"""
+from __future__ import annotations
+
+import copy
+import time
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.api.config import ConfigError, DealConfig
+from repro.api.registry import MODELS
+
+
+class Session:
+    """Build once from a validated ``DealConfig``; drive offline
+    inference and/or online serving; tear down with ``close``."""
+
+    def __init__(self, cfg: DealConfig):
+        # construct via build() for eager validation; __init__ assumes a
+        # valid config
+        self.cfg = cfg
+        self._closed = False
+        self.timings: Dict[str, float] = {}
+        self._build_pipeline()
+        self._H: Optional[np.ndarray] = None
+        self._engine = None
+
+    @classmethod
+    def build(cls, cfg: DealConfig) -> "Session":
+        """Validate eagerly (every bad field named) and assemble the
+        offline pipeline.  The online half (store/engine) is built
+        lazily by the first ``serve()``."""
+        cfg.validate()
+        return cls(cfg)
+
+    # -- pipeline assembly ----------------------------------------------
+    def _build_pipeline(self) -> None:
+        import jax
+
+        from repro.core.graph import (csr_from_edges_distributed,
+                                      make_dataset, rmat_edges)
+        from repro.core.sampler import sample_layer_graphs
+        cfg = self.cfg
+        g, m = cfg.graph, cfg.model
+
+        t0 = time.perf_counter()
+        if g.dataset == "rmat":
+            n = int(g.n_nodes * g.scale)
+            src, dst = rmat_edges(n, int(n * g.avg_degree), seed=g.seed)
+        else:
+            src, dst, n = make_dataset(g.dataset, seed=g.seed,
+                                       scale=g.scale)
+        self.src, self.dst, self.n_nodes = src, dst, n
+        self.graph, self.construct_stats = csr_from_edges_distributed(
+            src, dst, n, n_workers=g.n_construct_workers)
+        self.timings["construct_s"] = time.perf_counter() - t0
+
+        t1 = time.perf_counter()
+        self.layer_graphs = sample_layer_graphs(
+            self.graph, fanout=g.fanout, n_layers=m.n_layers, seed=g.seed)
+        self.timings["sample_s"] = time.perf_counter() - t1
+
+        rng = np.random.default_rng(g.seed)
+        self.X = rng.standard_normal((n, m.d_feature), dtype=np.float32)
+        dims = [m.d_feature] * (m.n_layers + 1)
+        plugin = MODELS.get(m.name)
+        self.params = plugin.init(jax.random.PRNGKey(g.seed), dims,
+                                  heads=m.heads)
+        self.executor = cfg.executor.build(cfg.partition, n_nodes=n)
+
+    # -- offline: all-node inference ------------------------------------
+    def infer_all(self) -> np.ndarray:
+        """One full layer-by-layer epoch for ALL nodes through the bound
+        executor.  Cached; bitwise-identical to the pre-API launcher
+        path (same spec interpreter, same graph bindings)."""
+        self._check_open()
+        if self._H is not None:
+            return self._H
+        from repro.core.gnn_models import model_spec
+        from repro.core.ops import DenseIO, DistExecutor, run_model
+        spec = model_spec(self.cfg.model.name, self.params)
+        lgs = self.layer_graphs[:len(spec.layers)]
+        ex = self.executor
+        t0 = time.perf_counter()
+        if isinstance(ex, DistExecutor):
+            need_sddmm = any(op.kind == "attn_scores"
+                             for layer in spec.layers for op in layer.ops)
+            ios = ex.bind(lgs, need_sddmm=need_sddmm)
+        else:
+            ios = [DenseIO.from_layer_graph(lg) for lg in lgs]
+        self._H = np.asarray(run_model(ex, spec, ios, self.X))
+        self.timings["infer_s"] = time.perf_counter() - t0
+        assert not np.isnan(self._H).any()
+        return self._H
+
+    # -- online: store + serving engine ---------------------------------
+    def serve(self):
+        """Stand up (once) and return the online serving engine: full
+        epoch -> versioned store (budget / eviction / tail onboarding)
+        -> ``EmbeddingServeEngine`` with the config's QoS schedule."""
+        self._check_open()
+        if self._engine is not None:
+            return self._engine
+        from repro.gnnserve import (DeltaReinference, EmbeddingServeEngine,
+                                    attach_recompute, store_from_inference)
+        cfg = self.cfg
+        st, q = cfg.store, cfg.qos
+        self.reinfer = DeltaReinference(
+            [copy.deepcopy(lg) for lg in self.layer_graphs],
+            cfg.model.name, self.params,
+            sample_seed=cfg.refresh.sample_seed, executor=self.executor)
+        t0 = time.perf_counter()
+        levels = self.reinfer.full_levels(self.X)
+        self.timings["epoch_s"] = time.perf_counter() - t0
+        store = store_from_inference(
+            self.X, levels[1:], n_shards=st.n_shards,
+            budget_rows=st.budget_rows or None,
+            evict_policy=st.evict_policy, admission=st.admission,
+            onboarding=st.onboarding)
+        if st.budget_rows:
+            attach_recompute(store, self.reinfer)
+        self._engine = EmbeddingServeEngine(
+            store, self.reinfer, self.graph,
+            batch_slots=q.batch_slots, rows_per_step=q.rows_per_step,
+            staleness_bound=q.staleness_bound,
+            tenants=q.tenant_registry(), refresh_charge=q.refresh_charge)
+        return self._engine
+
+    @property
+    def engine(self):
+        """The serving engine (built on first access)."""
+        return self.serve()
+
+    @property
+    def store(self):
+        """The engine's CURRENT embedding store (a ``full_epoch`` fold
+        swaps in a rebuilt one, so never cache this reference)."""
+        return self.serve().store
+
+    def apply_mutations(self):
+        """The engine's writable mutation log (``add_edges`` /
+        ``remove_edges`` / ``update_features`` / ``add_nodes``)."""
+        return self.serve().mutate()
+
+    def refresh(self) -> Dict[str, Any]:
+        """Drain pending mutations into the store via delta
+        re-inference (incremental node onboarding included when
+        ``store.onboarding == "tail"``)."""
+        return self.serve().refresh()
+
+    def full_epoch(self, n_shards: Optional[int] = None) -> Dict[str, Any]:
+        """Re-partition epoch: fold any onboarded tail partitions back
+        into the main 1-D partitioning."""
+        return self.serve().full_epoch(n_shards)
+
+    # -- observability / lifecycle --------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        """Pipeline timings + construction stats, plus the full serve/
+        store/QoS counter tree once the engine exists."""
+        self._check_open()
+        out: Dict[str, Any] = {"n_nodes": self.n_nodes,
+                               "n_edges": self.graph.n_edges,
+                               **{f"t_{k}": v
+                                  for k, v in self.timings.items()}}
+        if self._engine is not None:
+            out.update(self._engine.stats())
+        return out
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise ConfigError("session is closed")
+
+    def close(self) -> None:
+        """Release the big arrays (graph, features, store, engine)."""
+        self._closed = True
+        self._engine = None
+        for name in ("X", "graph", "layer_graphs", "reinfer", "_H",
+                     "src", "dst", "params", "executor"):
+            if hasattr(self, name):
+                setattr(self, name, None)
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

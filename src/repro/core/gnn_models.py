@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.registry import MODELS, register_model
+
 
 def init_gcn(rng, dims: List[int]) -> Dict[str, Any]:
     ks = jax.random.split(rng, len(dims) - 1)
@@ -121,31 +123,64 @@ class ModelSpec:
     activation: Callable
 
 
+@dataclasses.dataclass(frozen=True)
+class ModelPlugin:
+    """A registered GNN model: ``init(key, dims, heads) -> params`` and
+    ``spec(params) -> ModelSpec`` (the declarative layer program every
+    executor interprets).  Third-party models register one of these
+    under a new name (``api.registry.register_model``) and become legal
+    ``DealConfig.model.name`` values everywhere — engines, delta
+    refresh, serving — with zero core edits."""
+    init: Callable
+    spec: Callable
+
+
+def _gcn_spec(params: Dict[str, Any]) -> ModelSpec:
+    layers = [LayerSpec(ops=(
+        LayerOp("gemm", "hw", ("h_src",), w),
+        LayerOp("spmm", "h", ("hw",)),
+    )) for w in params["w"]]
+    return ModelSpec("gcn", layers, heads=1, activation=jax.nn.relu)
+
+
+def _sage_spec(params: Dict[str, Any]) -> ModelSpec:
+    layers = [LayerSpec(ops=(
+        LayerOp("spmm", "agg", ("h_src",)),
+        LayerOp("gemm", "own", ("h_tgt",), p["w_self"]),
+        LayerOp("gemm", "nb", ("agg",), p["w_nbr"]),
+        LayerOp("add", "h", ("own", "nb")),
+    )) for p in params["layers"]]
+    return ModelSpec("sage", layers, heads=1, activation=jax.nn.relu)
+
+
+def _gat_spec(params: Dict[str, Any]) -> ModelSpec:
+    layers = [LayerSpec(ops=(
+        LayerOp("gemm", "q", ("h_tgt",), p["wq"]),
+        LayerOp("gemm", "k", ("h_src",), p["wk"]),
+        LayerOp("gemm", "v", ("h_src",), p["wv"]),
+        LayerOp("attn_scores", "s", ("q", "k")),
+        LayerOp("edge_softmax", "alpha", ("s",)),
+        LayerOp("attend", "h", ("alpha", "v")),
+    )) for p in params["layers"]]
+    return ModelSpec("gat", layers, heads=int(params.get("heads", 1)),
+                     activation=jax.nn.elu)
+
+
+register_model("gcn", ModelPlugin(
+    init=lambda key, dims, heads=1: init_gcn(key, dims), spec=_gcn_spec))
+register_model("sage", ModelPlugin(
+    init=lambda key, dims, heads=1: init_sage(key, dims), spec=_sage_spec))
+register_model("gat", ModelPlugin(
+    init=lambda key, dims, heads=1: init_gat(key, dims, heads=heads),
+    spec=_gat_spec))
+
+
 def model_spec(model: str, params: Dict[str, Any]) -> ModelSpec:
-    """The single definition of gcn/sage/gat layer math, as data."""
-    if model == "gcn":
-        layers = [LayerSpec(ops=(
-            LayerOp("gemm", "hw", ("h_src",), w),
-            LayerOp("spmm", "h", ("hw",)),
-        )) for w in params["w"]]
-        return ModelSpec("gcn", layers, heads=1, activation=jax.nn.relu)
-    if model == "sage":
-        layers = [LayerSpec(ops=(
-            LayerOp("spmm", "agg", ("h_src",)),
-            LayerOp("gemm", "own", ("h_tgt",), p["w_self"]),
-            LayerOp("gemm", "nb", ("agg",), p["w_nbr"]),
-            LayerOp("add", "h", ("own", "nb")),
-        )) for p in params["layers"]]
-        return ModelSpec("sage", layers, heads=1, activation=jax.nn.relu)
-    if model == "gat":
-        layers = [LayerSpec(ops=(
-            LayerOp("gemm", "q", ("h_tgt",), p["wq"]),
-            LayerOp("gemm", "k", ("h_src",), p["wk"]),
-            LayerOp("gemm", "v", ("h_src",), p["wv"]),
-            LayerOp("attn_scores", "s", ("q", "k")),
-            LayerOp("edge_softmax", "alpha", ("s",)),
-            LayerOp("attend", "h", ("alpha", "v")),
-        )) for p in params["layers"]]
-        return ModelSpec("gat", layers, heads=int(params.get("heads", 1)),
-                         activation=jax.nn.elu)
-    raise ValueError(f"unknown model {model!r}")
+    """The single definition of each model's layer math, as data —
+    resolved through the model registry so registered third-party
+    models work everywhere the built-ins do."""
+    try:
+        plugin = MODELS.get(model)
+    except KeyError as exc:
+        raise ValueError(str(exc)) from None
+    return plugin.spec(params)

@@ -38,6 +38,7 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.api.registry import EXECUTORS, register_executor
 from repro.core import primitives as prim
 from repro.core.gnn_models import (LayerSpec, ModelSpec, gat_head_scores,
                                    masked_softmax, mean_weights)
@@ -384,20 +385,37 @@ class DistExecutor:
 
 
 # ----------------------------------------------------------------------
-# factory
+# factory — backends resolve through the executor registry
 # ----------------------------------------------------------------------
 
+def _make_ref(mesh=None, **kw):
+    return RefExecutor()
+
+
+def _make_pallas(mesh=None, **kw):
+    return PallasExecutor(**kw)
+
+
+def _make_dist(mesh=None, **kw):
+    if mesh is None:
+        raise ValueError("dist executor needs a mesh= argument")
+    return DistExecutor(mesh, **kw)
+
+
+register_executor("ref", _make_ref)
+register_executor("pallas", _make_pallas)
+register_executor("dist", _make_dist)
+
+
 def get_executor(executor="ref", *, mesh=None, **kw):
-    """Resolve an executor name ("ref" | "pallas" | "dist") or pass an
-    instance through.  "dist" needs a mesh."""
+    """Resolve a REGISTERED executor name ("ref" | "pallas" | "dist" |
+    anything added via ``api.registry.register_executor``) or pass an
+    instance through.  "dist" needs a mesh.  Unknown names raise with
+    every registered name listed."""
     if not isinstance(executor, str):
         return executor
-    if executor == "ref":
-        return RefExecutor()
-    if executor == "pallas":
-        return PallasExecutor(**kw)
-    if executor == "dist":
-        if mesh is None:
-            raise ValueError("dist executor needs a mesh= argument")
-        return DistExecutor(mesh, **kw)
-    raise ValueError(f"unknown executor {executor!r}")
+    try:
+        factory = EXECUTORS.get(executor)
+    except KeyError as exc:
+        raise ValueError(str(exc)) from None
+    return factory(mesh=mesh, **kw)

@@ -58,7 +58,13 @@ Dataflow:  queries ->  engine.step -> store.lookup (front buffer)
                      -> forward_frontier -> row-subset re-inference
                      -> store.commit (buffer swap, version += 1)
 
-Entry points: ``launch/serve_embeddings.py`` (CLI service loop),
+Node additions onboard INCREMENTALLY on stores built with
+``onboarding="tail"``: a tail partition appends past the main 1-D
+partitioning, the new ids ride the next refresh's resampled set, and
+``engine.full_epoch()`` folds tails back in (bitwise-unchanged).
+
+Entry points (all thin clients of ``repro.api`` — DealConfig +
+Session): ``launch/serve_embeddings.py`` (CLI service loop),
 ``examples/embedding_service.py`` (demo), and
 ``benchmarks/bench_incremental.py`` (delta vs full-recompute study).
 """
@@ -68,7 +74,7 @@ from repro.gnnserve.delta import (DeltaReinference, RecomputeOnMiss,
                                   splice_reverse_index)
 from repro.gnnserve.engine import EmbeddingServeEngine, Query
 from repro.gnnserve.mutations import (MutationBatch, MutationLog,
-                                      apply_edge_mutations)
+                                      apply_edge_mutations, grow_graph)
 from repro.gnnserve.qos import (QoSScheduler, TenantRegistry, TenantSpec,
                                 parse_tenants)
 from repro.gnnserve.store import (EmbeddingStore, EvictedRowMiss,
@@ -80,6 +86,7 @@ __all__ = ["DeltaReinference", "RecomputeOnMiss", "attach_recompute",
            "resample_rows", "splice_reverse_index",
            "EmbeddingServeEngine", "Query",
            "MutationBatch", "MutationLog", "apply_edge_mutations",
+           "grow_graph",
            "QoSScheduler", "TenantRegistry", "TenantSpec", "parse_tenants",
            "EmbeddingStore", "EvictedRowMiss", "SnapshotMiss",
            "StoreSnapshot", "store_from_inference"]

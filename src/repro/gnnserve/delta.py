@@ -255,7 +255,8 @@ class DeltaReinference:
 
     def __init__(self, layer_graphs: Sequence[LayerGraph], model: str,
                  params, *, sample_seed: int = 0, executor="ref"):
-        assert model in ("gcn", "gat", "sage"), model
+        # model resolves through the registry below (model_spec raises
+        # with every registered name on a typo)
         self.layer_graphs = list(layer_graphs)
         self.model = model
         self.params = params
@@ -277,6 +278,38 @@ class DeltaReinference:
             self._rev[l] = build_reverse_index(self.layer_graphs[l])
             self.rev_rebuilds += 1
         return self._rev[l]
+
+    # -- incremental node onboarding ------------------------------------
+    def extend_nodes(self, n_new: int) -> None:
+        """Grow every layer graph (and any cached reverse index) by
+        ``n_new`` brand-new rows with empty neighborhoods.  The new rows
+        MUST ride the next refresh's ``resampled`` set — that refresh
+        draws their fanout from the grown CSR and writes their levels
+        through the staging overlay before anything reads them."""
+        for l, lg in enumerate(self.layer_graphs):
+            lg.nbr = np.concatenate(
+                [lg.nbr, np.zeros((n_new, lg.fanout), np.int32)])
+            lg.mask = np.concatenate(
+                [lg.mask, np.zeros((n_new, lg.fanout), bool)])
+            invalidate_subset_plans(lg)
+            rev = self._rev[l]
+            if rev is not None:
+                # fresh rows have no consumers yet; extending indptr in
+                # place keeps the splice path O(changed) at the refresh
+                rev.indptr = np.concatenate(
+                    [rev.indptr,
+                     np.full(n_new, rev.indptr[-1], np.int64)])
+
+    def shrink_nodes(self, n_new: int) -> None:
+        """Inverse of ``extend_nodes`` — the engine's rollback when an
+        onboarding refresh fails before commit."""
+        for lg in self.layer_graphs:
+            lg.nbr = lg.nbr[:-n_new]
+            lg.mask = lg.mask[:-n_new]
+            invalidate_subset_plans(lg)
+        # a failed refresh already dropped the cached reverse indexes;
+        # dropping again is cheap insurance against size drift
+        self._rev = [None] * len(self.layer_graphs)
 
     # -- full epoch -----------------------------------------------------
     def full_levels(self, X: np.ndarray) -> List[np.ndarray]:

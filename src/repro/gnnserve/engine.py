@@ -32,10 +32,12 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.graph import Graph
-from repro.gnnserve.delta import DeltaReinference
-from repro.gnnserve.mutations import MutationLog, apply_edge_mutations
+from repro.gnnserve.delta import DeltaReinference, attach_recompute
+from repro.gnnserve.mutations import (MutationLog, apply_edge_mutations,
+                                      grow_graph)
 from repro.gnnserve.qos import QoSScheduler, TenantRegistry
-from repro.gnnserve.store import EmbeddingStore, SnapshotMiss
+from repro.gnnserve.store import (EmbeddingStore, SnapshotMiss,
+                                  store_from_inference)
 
 
 @dataclasses.dataclass
@@ -78,6 +80,7 @@ class EmbeddingServeEngine:
         self.n_gather_steps = 0
         self.n_refreshes = 0
         self.n_full_epochs = 0
+        self.n_onboarded = 0        # nodes added via tail onboarding
         self.n_served = 0
         self.ops_drained = 0        # mutation ops folded into the store
         self.last_refresh_stats: Dict = {}
@@ -112,27 +115,76 @@ class EmbeddingServeEngine:
 
     def refresh(self) -> Dict:
         """Drain the log and fold it into the store via delta
-        re-inference (full epoch when nodes were added)."""
-        if self.log.has_node_adds:      # check BEFORE draining: rejecting
-            raise NotImplementedError(  # must not discard pending edits
-                "node additions re-partition the store; run a full epoch "
-                "(see ROADMAP open items: incremental node onboarding)")
+        re-inference.  Node additions onboard incrementally when the
+        store was built with ``onboarding="tail"`` (a tail partition is
+        appended and the new ids ride this refresh's resampled set);
+        otherwise they refuse here and fold via ``full_epoch()``."""
+        # check BEFORE draining: rejecting must not discard pending edits
+        if self.log.has_node_adds:
+            if self.qos is not None:
+                # lagged tenant views pinned before the append cannot
+                # address the new ids
+                raise NotImplementedError(
+                    "node additions under multi-tenant QoS are not "
+                    "supported yet; drain the tenants and rebuild, or "
+                    "onboard on a non-QoS engine")
+            if self.store.onboarding != "tail":
+                raise NotImplementedError(
+                    "node additions re-partition the store; build it "
+                    "with onboarding=\"tail\" (StoreSpec.onboarding) "
+                    "for incremental onboarding, or call full_epoch() "
+                    "(the re-partition event, which folds them)")
+        return self._refresh()
+
+    def _refresh(self) -> Dict:
+        """The gate-free refresh body: ``full_epoch`` calls it directly
+        so pending node adds fold there even on ``onboarding="none"``
+        stores (a full epoch IS the re-partition event)."""
         batch = self.log.drain()
+        n_new = batch.n_new_nodes
+        new_ids = np.empty(0, np.int64)
+        graph0 = self.graph
+        extended = tailed = False
         try:
-            graph = apply_edge_mutations(self.graph, batch)
+            if n_new:
+                # onboard: empty CSR rows + grown layer graphs + tail
+                # shard, all BEFORE the edge splice so ops touching new
+                # ids are legal
+                new_ids = np.arange(graph0.n_nodes,
+                                    graph0.n_nodes + n_new,
+                                    dtype=np.int64)
+                graph0 = grow_graph(graph0, n_new)
+                self.reinfer.extend_nodes(n_new)
+                extended = True
+                self.store.append_tail(n_new, batch.new_node_rows)
+                tailed = True
+            graph = apply_edge_mutations(graph0, batch)
+            resampled = batch.affected_dsts()
+            if n_new:
+                # the new ids ALWAYS resample: that is what draws their
+                # fanout rows and pushes them through every frontier
+                # level, so their tail shard commits fully written
+                resampled = np.union1d(resampled, new_ids)
             stats = self.reinfer.refresh(
                 self.store, graph, batch.feat_ids, batch.feat_rows,
-                batch.affected_dsts())
+                resampled)
         except Exception:
             # a bad batch must not silently discard the good mutations
-            # drained alongside it — put everything back (in original op
-            # order) and re-raise (the engine is single-threaded, so no
-            # interleaved writes)
+            # drained alongside it — roll back exactly the onboarding
+            # structures that were built and put everything back (in
+            # original op order), then re-raise (the engine is
+            # single-threaded, so no interleaved writes)
+            if tailed:
+                self.store.pop_tail(n_new)
+            if extended:
+                self.reinfer.shrink_nodes(n_new)
             self.log.requeue(batch)
             raise
         self.graph = graph
         self.ops_drained += batch.n_ops
         self.n_refreshes += 1
+        self.n_onboarded += n_new
+        stats["n_onboarded"] = n_new
         self.last_refresh_stats = stats
         if self.qos is not None:
             # the new epoch becomes pinnable for per-tenant views, and
@@ -141,6 +193,50 @@ class EmbeddingServeEngine:
                                   self.store.snapshot())
             self.qos.charge_refresh(stats["rows_gemm"])
         return stats
+
+    def full_epoch(self, n_shards: Optional[int] = None) -> Dict:
+        """Re-partition epoch: refresh any pending mutations, then
+        rebuild the store from a full pass over the CURRENT features —
+        folding every onboarded tail partition back into the main 1-D
+        partitioning (``n_shards`` defaults to the pre-tail count).
+        Contents are bitwise-unchanged (the delta-refresh invariant:
+        store rows == a full epoch on the same layer graphs through the
+        same executor); the version advances so pinned snapshots of the
+        old store keep serving their epoch untouched.  Pending node
+        additions fold here REGARDLESS of ``store.onboarding`` — this is
+        the re-partition event ``refresh`` defers them to."""
+        if self.log.pending:
+            if self.log.has_node_adds and self.qos is not None:
+                raise NotImplementedError(
+                    "node additions under multi-tenant QoS are not "
+                    "supported yet; drain the tenants and rebuild, or "
+                    "onboard on a non-QoS engine")
+            self._refresh()
+        st = self.store
+        X = st.lookup(np.arange(st.n_nodes, dtype=np.int64), 0)
+        levels = self.reinfer.full_levels(X)
+        new = store_from_inference(
+            X, levels[1:],
+            n_shards=n_shards or (st.n_shards - st.n_tail_shards),
+            budget_rows=st.budget_rows, evict_policy=st.evict_policy,
+            admission=st.admission, onboarding=st.onboarding)
+        new.version = st.version + 1
+        if st.recompute is not None:
+            attach_recompute(new, self.reinfer)
+        # poison the swapped-out store: its version would otherwise stay
+        # frozen, so an old snapshot's same-version fallback could
+        # recompute "its" epoch through layer graphs that LATER
+        # refreshes mutate — advance it so such reads SnapshotMiss
+        # loudly instead of silently serving cross-epoch bits
+        st.version = new.version
+        st.recompute = None
+        self.store = new
+        self.n_full_epochs += 1
+        if self.qos is not None:
+            self.qos.record_epoch(new.version, self.ops_drained,
+                                  new.snapshot())
+        return {"version": new.version, "n_shards": new.n_shards,
+                "rows_gemm": st.n_nodes * self.reinfer.n_layers}
 
     # -- serve loop -----------------------------------------------------
     def _admit(self) -> None:
@@ -362,6 +458,8 @@ class EmbeddingServeEngine:
         out = {"n_served": self.n_served,
                "n_gather_steps": self.n_gather_steps,
                "n_refreshes": self.n_refreshes,
+               "n_full_epochs": self.n_full_epochs,
+               "n_onboarded": self.n_onboarded,
                "store_version": self.store.version,
                "pending_mutations": self.log.pending,
                **{f"store_{k}": v for k, v in self.store.stats().items()}}

@@ -8,9 +8,13 @@ O(sum of affected row lengths) plus two bulk copies — the same
 "touch only what changed" principle the delta re-inference applies to
 compute.
 
-Node additions are recorded (``add_nodes``) but route to a full epoch in
-the engine: growing N invalidates the static partition bounds, which is
-a re-partition event, not a delta (see ROADMAP "Open items").
+Node additions are recorded (``add_nodes``, optionally with the new
+rows' features).  With ``store.onboarding == "tail"`` the engine
+onboards them incrementally: ``grow_graph`` appends empty CSR rows, the
+store appends a tail partition, and the new ids ride the next delta
+refresh's resampled set — no re-partition until the next full epoch
+folds the tail in.  Without tail onboarding the engine still refuses
+them (growing N invalidates the static partition bounds).
 """
 from __future__ import annotations
 
@@ -38,6 +42,8 @@ class MutationBatch:
     feat_rows: np.ndarray          # (len(feat_ids), D)
     edge_ops: List[tuple] = dataclasses.field(default_factory=list)
     n_new_nodes: int = 0
+    # (n_new_nodes, D) features for the onboarded nodes, or None (zeros)
+    new_node_rows: np.ndarray = None
 
     @property
     def n_edge_ops(self) -> int:
@@ -67,6 +73,7 @@ class MutationLog:
         self._edges: List[tuple] = []
         self._feat: Dict[int, np.ndarray] = {}   # last-writer-wins
         self._new_nodes = 0
+        self._node_adds: List[tuple] = []        # (k, rows-or-None)
 
     def add_edge(self, src: int, dst: int) -> None:
         self._edges.append(("add", int(src), int(dst)))
@@ -86,12 +93,26 @@ class MutationLog:
         for i, r in zip(np.asarray(ids).tolist(), np.asarray(rows)):
             self._feat[int(i)] = np.asarray(r, np.float32)
 
-    def add_nodes(self, k: int) -> None:
-        self._new_nodes += int(k)
+    def add_nodes(self, k: int, rows: np.ndarray = None) -> None:
+        """Record ``k`` brand-new nodes, optionally with their (k, D)
+        feature rows (zeros otherwise).  Ids are assigned contiguously
+        past the current node count at refresh time."""
+        k = int(k)
+        if rows is not None:
+            rows = np.asarray(rows, np.float32)
+            assert rows.shape[0] == k, "need one feature row per new node"
+        self._node_adds.append((k, rows))
+        self._new_nodes += k
 
     @property
     def pending(self) -> int:
         return len(self._edges) + len(self._feat) + self._new_nodes
+
+    @property
+    def pending_node_adds(self) -> int:
+        """Node additions not yet folded — the NEXT new node gets id
+        ``graph.n_nodes + pending_node_adds`` at refresh time."""
+        return self._new_nodes
 
     @property
     def has_node_adds(self) -> bool:
@@ -108,7 +129,7 @@ class MutationLog:
         if batch.feat_ids.size:
             self.update_features(batch.feat_ids, batch.feat_rows)
         if batch.n_new_nodes:
-            self.add_nodes(batch.n_new_nodes)
+            self.add_nodes(batch.n_new_nodes, batch.new_node_rows)
 
     def drain(self) -> MutationBatch:
         def _cols(kind):
@@ -123,14 +144,36 @@ class MutationLog:
         ids = np.fromiter(self._feat.keys(), np.int64, len(self._feat))
         rows = (np.stack([self._feat[int(i)] for i in ids])
                 if ids.size else np.empty((0, 0), np.float32))
+        new_rows = None
+        if any(r is not None for _, r in self._node_adds):
+            d = next(r.shape[1] for _, r in self._node_adds
+                     if r is not None)
+            new_rows = np.concatenate(
+                [r if r is not None else np.zeros((k, d), np.float32)
+                 for k, r in self._node_adds])
         batch = MutationBatch(add_src=add_src, add_dst=add_dst,
                               del_src=del_src, del_dst=del_dst,
                               feat_ids=ids, feat_rows=rows,
                               edge_ops=list(self._edges),
-                              n_new_nodes=self._new_nodes)
+                              n_new_nodes=self._new_nodes,
+                              new_node_rows=new_rows)
         self._edges, self._feat = [], {}
         self._new_nodes = 0
+        self._node_adds = []
         return batch
+
+
+def grow_graph(g: Graph, n_new: int) -> Graph:
+    """A NEW graph with ``n_new`` appended nodes and empty CSR rows —
+    the structural half of incremental node onboarding (edges touching
+    the new ids then splice in via ``apply_edge_mutations``)."""
+    assert n_new > 0
+    indptr = np.concatenate(
+        [g.indptr, np.full(n_new, g.indptr[-1], np.int64)])
+    # indices are shared, not copied: the grown rows are empty, and
+    # apply_edge_mutations never writes into its input's indices
+    return Graph(indptr=indptr, indices=g.indices,
+                 n_nodes=g.n_nodes + int(n_new))
 
 
 def apply_edge_mutations(g: Graph, batch: MutationBatch) -> Graph:

@@ -27,9 +27,10 @@ that touches non-resident rows no longer asserts: it routes the exact
 missing row ids through the ``recompute`` hook (``delta.RecomputeOnMiss``
 — level-l rows rebuilt from the lowest resident level through the bound
 executor, bitwise-equal to a never-evicted store), re-admits them into
-the shard, and charges the budget.  Victims are chosen by ``evict_policy``:
-``"heat"`` (exponentially-decayed access mass) or ``"lru"`` (last-touch
-tick).  Budget enforcement runs only at the END of a top-level gather /
+the shard, and charges the budget.  Victims are chosen by ``evict_policy``
+— a REGISTERED policy name (``api.registry.EVICT_POLICIES``; built-ins
+``"heat"``, exponentially-decayed access mass, and ``"lru"``, last-touch
+tick, register themselves below), as is ``admission``.  Budget enforcement runs only at the END of a top-level gather /
 commit, never mid-recursion, so a recompute can't evict rows it is about
 to read.  Admission is scan-resistant by default (``admission=
 "probation"``): rows admitted via recompute-on-miss contribute NO heat
@@ -45,6 +46,12 @@ response.  A plain ``snapshot()`` pins whatever is resident; reading rows
 it never pinned falls back to the store while the epoch still matches and
 raises ``SnapshotMiss`` after the epoch has moved on (recompute against a
 mutated graph could not reproduce the old epoch).
+
+Incremental node onboarding (``onboarding="tail"``): ``append_tail``
+adds brand-new nodes as ONE extra shard past the main 1-D partitioning
+(features resident, upper levels written by the onboarding delta
+refresh); the tail rides budgets/eviction like any shard until
+``EmbeddingServeEngine.full_epoch`` folds it back in.
 """
 from __future__ import annotations
 
@@ -52,6 +59,49 @@ import time
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
+
+from repro.api.registry import (ADMISSIONS, EVICT_POLICIES,
+                                register_admission, register_evict_policy)
+
+
+# ----------------------------------------------------------------------
+# registered eviction / admission policies ("heat"/"lru" and
+# "probation"/"full" are defaults, not special cases — third parties add
+# names via api.registry and select them from StoreSpec)
+# ----------------------------------------------------------------------
+
+@register_evict_policy("heat")
+def _heat_policy(store: "EmbeddingStore", level: int):
+    """Evict the shard with the least exponentially-decayed access mass
+    (ties: least-recent, then lowest id)."""
+    return lambda s: (store._heat_now(level, s),
+                      int(store._last[level, s]), s)
+
+
+@register_evict_policy("lru")
+def _lru_policy(store: "EmbeddingStore", level: int):
+    """Evict the least-recently-touched shard."""
+    return lambda s: (int(store._last[level, s]), s)
+
+
+@register_admission("probation")
+def _probation_admission(local: np.ndarray,
+                         admitted: Optional[np.ndarray]) -> int:
+    """Scan resistance: recompute-admitted rows are on probation — the
+    admitting touch adds NO heat (any later touch is a hit and counts in
+    full), so a one-shot scan leaves its shards stone-cold and the hot
+    working set survives the eviction round."""
+    if admitted is None or admitted.size == 0:
+        return local.size
+    return int((~np.isin(local, admitted)).sum())
+
+
+@register_admission("full")
+def _full_admission(local: np.ndarray,
+                    admitted: Optional[np.ndarray]) -> int:
+    """Count every touch, including the admitting one (the pre-probation
+    behavior; scannable)."""
+    return local.size
 
 
 class EvictedRowMiss(RuntimeError):
@@ -127,11 +177,14 @@ class EmbeddingStore:
     def __init__(self, levels: Sequence[np.ndarray], n_shards: int = 4,
                  *, budget_rows: Optional[int] = None,
                  evict_policy: str = "heat", heat_decay: float = 0.98,
-                 admission: str = "probation"):
+                 admission: str = "probation", onboarding: str = "none"):
         n = levels[0].shape[0]
         assert all(h.shape[0] == n for h in levels), "levels must cover all nodes"
-        assert evict_policy in ("heat", "lru"), evict_policy
-        assert admission in ("probation", "full"), admission
+        # eager registry resolution: a typo'd policy name fails at build
+        # time with every registered name in the error
+        self._victim_policy = EVICT_POLICIES.get(evict_policy)
+        self._admit_policy = ADMISSIONS.get(admission)
+        assert onboarding in ("none", "tail"), onboarding
         assert budget_rows is None or budget_rows >= 0
         self.n_nodes = n
         self.n_shards = n_shards
@@ -163,6 +216,8 @@ class EmbeddingStore:
         self.evict_policy = evict_policy
         self.heat_decay = heat_decay
         self.admission = admission
+        self.onboarding = onboarding
+        self.n_tail_shards = 0      # appended-but-not-yet-folded shards
         self._heat = np.zeros((len(levels), n_shards))
         self._last = np.zeros((len(levels), n_shards), np.int64)
         self._tick = 0
@@ -280,16 +335,10 @@ class EmbeddingStore:
                 data, mask, admitted = self._ensure(level, int(s), local,
                                                     staged)
                 out[sel] = data[local]
-                w = local.size
-                if (self.admission == "probation" and level > 0
-                        and not staged and admitted is not None
-                        and admitted.size):
-                    # scan resistance: recompute-admitted rows are on
-                    # probation — the admitting touch adds NO heat (any
-                    # later touch is a hit and counts in full), so a
-                    # one-shot scan leaves its shards stone-cold and
-                    # the hot working set survives the eviction round
-                    w = int((~np.isin(local, admitted)).sum())
+                # the registered admission policy decides how much heat
+                # this touch contributes (see _probation_admission)
+                w = (self._admit_policy(local, admitted)
+                     if level > 0 and not staged else local.size)
                 self._heat[level, s] = self._heat_now(level, int(s)) + w
                 self._last[level, s] = self._tick
         finally:
@@ -337,6 +386,75 @@ class EmbeddingStore:
         self._enforce_budget()
         return snap
 
+    # -- incremental node onboarding (tail partition) -------------------
+    def append_tail(self, n_new: int,
+                    feat_rows: Optional[np.ndarray] = None) -> np.ndarray:
+        """Append a TAIL PARTITION of ``n_new`` brand-new nodes: one
+        extra shard covering [n, n + n_new), so node additions serve via
+        delta refresh instead of forcing an offline re-partition.
+
+        Level 0 (features) becomes resident immediately — ``feat_rows``
+        or zeros.  Levels 1..L start NON-resident: the onboarding delta
+        refresh (which always carries the new ids in its resampled set)
+        writes them through the staging overlay before any read, layer
+        by layer.  The tail then behaves like any other shard — budget
+        enforcement, eviction, recompute-on-miss — until a full epoch
+        folds it into the main 1-D partitioning
+        (``EmbeddingServeEngine.full_epoch``).  Returns the new ids."""
+        assert self._staged is None, \
+            "no update may be open across a tail append"
+        assert n_new > 0
+        # validate the features BEFORE touching any store state: a bad
+        # shape must fail with the store untouched (the engine's
+        # rollback assumes append_tail is all-or-nothing)
+        feat = np.zeros((n_new, self._dims[0]), np.float32)
+        if feat_rows is not None:
+            feat_rows = np.asarray(feat_rows, np.float32)
+            assert feat_rows.shape == (n_new, self._dims[0]), \
+                (f"tail features must be ({n_new}, {self._dims[0]}), "
+                 f"got {feat_rows.shape}")
+            feat[:] = feat_rows
+        n0 = self.n_nodes
+        self.n_nodes = n0 + int(n_new)
+        self.bounds = np.concatenate(
+            [self.bounds, [self.n_nodes]]).astype(np.int64)
+        self._shard_rows = np.diff(self.bounds)
+        self._front[0].append(feat)
+        self._mask[0].append(np.ones(n_new, bool))
+        for level in range(1, self.n_levels):
+            self._front[level].append(None)
+            self._mask[level].append(np.zeros(n_new, bool))
+        res_col = np.zeros((self.n_levels, 1), self._res.dtype)
+        res_col[0, 0] = n_new
+        self._res = np.concatenate([self._res, res_col], axis=1)
+        self._heat = np.concatenate(
+            [self._heat, np.zeros((self.n_levels, 1))], axis=1)
+        self._last = np.concatenate(
+            [self._last, np.full((self.n_levels, 1), self._tick,
+                                 np.int64)], axis=1)
+        self.n_shards += 1
+        self.n_tail_shards += 1
+        return np.arange(n0, self.n_nodes, dtype=np.int64)
+
+    def pop_tail(self, n_new: int) -> None:
+        """Inverse of ``append_tail`` — the engine's rollback when the
+        onboarding refresh fails.  Only valid while the appended tail is
+        still the LAST shard and no update is open."""
+        assert self._staged is None, "abort the open update first"
+        assert self.n_tail_shards > 0 and self._shard_rows[-1] == n_new, \
+            "pop_tail must exactly undo the last append_tail"
+        self.n_nodes -= int(n_new)
+        self.bounds = self.bounds[:-1]
+        self._shard_rows = np.diff(self.bounds)
+        for level in range(self.n_levels):
+            self._front[level].pop()
+            self._mask[level].pop()
+        self._res = self._res[:, :-1]
+        self._heat = self._heat[:, :-1]
+        self._last = self._last[:, :-1]
+        self.n_shards -= 1
+        self.n_tail_shards -= 1
+
     # -- eviction -------------------------------------------------------
     def _heat_now(self, level: int, s: int) -> float:
         return float(self._heat[level, s]
@@ -363,10 +481,7 @@ class EmbeddingStore:
         return n
 
     def _victim_key(self, level: int):
-        if self.evict_policy == "lru":
-            return lambda s: (int(self._last[level, s]), s)
-        return lambda s: (self._heat_now(level, s),
-                          int(self._last[level, s]), s)
+        return self._victim_policy(self, level)
 
     def _enforce_budget(self) -> None:
         if self.budget_rows is None:
@@ -444,6 +559,7 @@ class EmbeddingStore:
         return {"version": self.version, "n_lookups": self.n_lookups,
                 "rows_gathered": self.rows_gathered, "n_swaps": self.n_swaps,
                 "n_shards": self.n_shards, "n_levels": self.n_levels,
+                "n_tail_shards": self.n_tail_shards,
                 "hits": self.hits, "misses": self.misses,
                 "hit_rate": self.hits / max(self.hits + self.misses, 1),
                 "n_evictions": self.n_evictions,
@@ -462,11 +578,13 @@ def store_from_inference(X: np.ndarray, level_outputs: Sequence[np.ndarray],
                          n_shards: int = 4, *,
                          budget_rows: Optional[int] = None,
                          evict_policy: str = "heat",
-                         admission: str = "probation") -> EmbeddingStore:
+                         admission: str = "probation",
+                         onboarding: str = "none") -> EmbeddingStore:
     """Build the store from a full epoch: X plus each layer's output as
     consumed by the next layer (see DeltaReinference.full_levels)."""
     return EmbeddingStore([np.asarray(X, np.float32)]
                           + [np.asarray(h, np.float32)
                              for h in level_outputs], n_shards=n_shards,
                           budget_rows=budget_rows,
-                          evict_policy=evict_policy, admission=admission)
+                          evict_policy=evict_policy, admission=admission,
+                          onboarding=onboarding)

@@ -1,46 +1,75 @@
 """Online embedding service launcher (gnnserve end-to-end).
 
-Builds the offline pipeline (CSR -> layer graphs -> full epoch), stands
-up the versioned store + continuous-batching engine, then drives a
-synthetic open-loop workload that interleaves lookup queries with graph
-mutations, printing serve/freshness stats.
+A THIN CLIENT of the public API: argparse -> ``DealConfig`` ->
+``api.Session.serve()`` (which owns the offline epoch, the versioned
+store with budget/eviction/onboarding, recompute-on-miss wiring, and
+the continuous-batching engine with optional multi-tenant QoS).  The
+driver loop here only generates traffic and prints stats.
 
   PYTHONPATH=src python -m repro.launch.serve_embeddings \
       --dataset ogbn-products --model gcn --ticks 50 \
       --mutations-per-tick 8 --staleness-bound 64
+
+  # one JSON artifact reproduces the whole pipeline
+  PYTHONPATH=src python -m repro.launch.serve_embeddings \
+      --config configs/examples/smoke.json --ticks 5
 
 ``--executor dist`` runs the epoch AND every delta refresh through the
 distributed executor (per-partition frontier split on a p x m mesh);
 needs p*m devices, e.g.  XLA_FLAGS=--xla_force_host_platform_device_count=8.
 
 ``--budget-rows R --evict-policy {lru,heat}`` caps each evictable store
-level at R resident rows: cold shards are dropped and lookups that miss
-rebuild exactly the missing rows through the delta engine
-(recompute-on-miss), bitwise-equal to an unbudgeted store.
+level at R resident rows (recompute-on-miss rebuilds evicted rows,
+bitwise-equal to an unbudgeted store).
+
+``--onboarding tail --nodes-per-tick K`` onboards K brand-new nodes per
+tick through the tail-partition path: added nodes serve via delta
+refresh (no re-partition) and fold into the main partitioning at the
+next full epoch.
 
 ``--tenants "name:priority:slot_quota:rate:slo,..."`` turns on
-multi-tenant QoS scheduling (``gnnserve.qos``): per-tenant freshness
-SLOs with deadline-driven refresh planning, weighted-fair slot quotas
-(preemptive reclaim) and a DRR row budget with token buckets.  The
-driver then splits traffic across the declared tenants — small
-interactive queries on the first tenant, large scans on the rest — and
-prints the per-tenant QoS table.
+multi-tenant QoS scheduling (``gnnserve.qos``).
 """
 from __future__ import annotations
 
 import argparse
-import copy
 import time
 
-import jax
 import numpy as np
 
-from repro.core.gnn_models import init_gat, init_gcn, init_sage
-from repro.core.graph import csr_from_edges_distributed, make_dataset
-from repro.core.sampler import sample_layer_graphs
-from repro.gnnserve import (DeltaReinference, EmbeddingServeEngine, Query,
-                            TenantRegistry, attach_recompute, parse_tenants,
-                            store_from_inference)
+from repro.api import (ConfigError, DealConfig, ExecutorSpec, GraphSpec,
+                       ModelSpec, PartitionSpec, QoSSpec, Session,
+                       StoreSpec, tenants_from_string)
+from repro.gnnserve import EmbeddingServeEngine, Query, TenantRegistry
+
+
+def _tenant_dicts(tenants: TenantRegistry):
+    return tuple({"name": t.name, "priority": t.priority,
+                  "slot_quota": t.slot_quota, "rate": t.rate,
+                  "staleness_slo": t.staleness_slo} for t in tenants)
+
+
+def _serve_session(cfg: DealConfig) -> Session:
+    try:
+        s = Session.build(cfg)
+        eng = s.serve()
+    except ConfigError as e:
+        raise SystemExit(str(e))
+    st = cfg.store
+    print(f"[epoch0] {s.n_nodes} nodes x {cfg.model.n_layers} layers in "
+          f"{s.timings['epoch_s']:.2f}s")
+    if st.budget_rows:
+        print(f"[budget] {st.budget_rows}/{s.n_nodes} rows per level "
+              f"resident ({st.evict_policy} eviction, recompute-on-miss)")
+    if st.onboarding == "tail":
+        print("[onboard] node additions append a tail partition "
+              "(delta-refresh served, folded at the next full epoch)")
+    if eng.qos is not None:
+        print("[qos] tenants: " + ", ".join(
+            f"{t.name}(prio={t.priority:g} quota={t.slot_quota} "
+            f"rate={t.rate:g} slo={t.staleness_slo})"
+            for t in eng.qos.registry))
+    return s
 
 
 def build_service(dataset: str, model: str, *, fanout: int = 8,
@@ -50,61 +79,34 @@ def build_service(dataset: str, model: str, *, fanout: int = 8,
                   budget_rows: int = 0, evict_policy: str = "heat",
                   scale: float = 1.0,
                   tenants: TenantRegistry = None) -> EmbeddingServeEngine:
-    src, dst, n = make_dataset(dataset, seed=seed, scale=scale)
-    g, _ = csr_from_edges_distributed(src, dst, n, n_workers=4)
-    lgs = sample_layer_graphs(g, fanout=fanout, n_layers=n_layers, seed=seed)
-    rng = np.random.default_rng(seed)
-    X = rng.standard_normal((n, d_feature), dtype=np.float32)
-    key = jax.random.PRNGKey(seed)
-    dims = [d_feature] * (n_layers + 1)
-    params = {"gcn": lambda: init_gcn(key, dims),
-              "sage": lambda: init_sage(key, dims),
-              "gat": lambda: init_gat(key, dims, heads=1)}[model]()
-
-    if executor == "dist":
-        from repro.core.ops import DistExecutor
-        from repro.launch.mesh import make_host_mesh
-        if len(jax.devices()) < p * m:
-            raise SystemExit(
-                f"--executor dist needs {p*m} devices; run under "
-                f"XLA_FLAGS=--xla_force_host_platform_device_count={p*m}")
-        if n % p != 0:
-            raise SystemExit(f"--p {p} must divide the node count {n}")
-        if m & (m - 1) != 0:
-            raise SystemExit(f"--m {m} must be a power of two "
-                             "(row-subset pad buckets)")
-        executor = DistExecutor(make_host_mesh(p, m))
-
-    t0 = time.time()
-    ri = DeltaReinference([copy.deepcopy(l) for l in lgs], model, params,
-                          executor=executor)
-    levels = ri.full_levels(X)
-    print(f"[epoch0] {n} nodes x {n_layers} layers in {time.time()-t0:.2f}s")
-    store = store_from_inference(X, levels[1:], n_shards=n_shards,
-                                 budget_rows=budget_rows or None,
-                                 evict_policy=evict_policy)
-    if budget_rows:
-        attach_recompute(store, ri)
-        print(f"[budget] {budget_rows}/{n} rows per level resident "
-              f"({evict_policy} eviction, recompute-on-miss)")
-    if tenants is not None:
-        print("[qos] tenants: " + ", ".join(
-            f"{t.name}(prio={t.priority:g} quota={t.slot_quota} "
-            f"rate={t.rate:g} slo={t.staleness_slo})" for t in tenants))
-    return EmbeddingServeEngine(store, ri, g,
-                                staleness_bound=staleness_bound,
-                                tenants=tenants)
+    """DEPRECATED shim — the pre-API entry point, kept for callers.
+    Builds the equivalent ``DealConfig`` and delegates to
+    ``Session.serve()``; the engine it returns serves bitwise the same
+    rows as the pre-API wiring (tests/test_api.py proves it)."""
+    cfg = DealConfig(
+        graph=GraphSpec(dataset=dataset, scale=scale, fanout=fanout,
+                        seed=seed, n_construct_workers=4),
+        model=ModelSpec(name=model, n_layers=n_layers,
+                        d_feature=d_feature),
+        partition=PartitionSpec(p=p, m=m),
+        executor=ExecutorSpec(name=executor, fallback_to_ref=False),
+        store=StoreSpec(n_shards=n_shards, budget_rows=budget_rows,
+                        evict_policy=evict_policy),
+        qos=QoSSpec(staleness_bound=staleness_bound,
+                    tenants=_tenant_dicts(tenants) if tenants else ()))
+    return _serve_session(cfg).engine
 
 
 def drive(eng: EmbeddingServeEngine, *, ticks: int = 50,
           queries_per_tick: int = 4, rows_per_query: int = 128,
-          mutations_per_tick: int = 8, seed: int = 0) -> None:
-    n = eng.store.n_nodes
+          mutations_per_tick: int = 8, nodes_per_tick: int = 0,
+          seed: int = 0) -> None:
     rng = np.random.default_rng(seed)
     names = eng.qos.registry.names if eng.qos is not None else [None]
     uid = 0
     t0 = time.time()
     for tick in range(ticks):
+        n = eng.store.n_nodes           # grows under tail onboarding
         for j in range(queries_per_tick):
             # with QoS: first tenant gets interactive-sized queries,
             # the rest get 8x scans (the batch/analytics side)
@@ -120,9 +122,22 @@ def drive(eng: EmbeddingServeEngine, *, ticks: int = 50,
             k = mutations_per_tick
             eng.mutate().add_edges(rng.integers(0, n, k),
                                    rng.integers(0, n, k))
+        if nodes_per_tick:
+            d = eng.store.level_dim(0)
+            # ids are assigned at refresh time, AFTER earlier pending
+            # adds — offset by them so each tick wires its OWN nodes
+            start = n + eng.log.pending_node_adds
+            eng.mutate().add_nodes(
+                nodes_per_tick,
+                rng.standard_normal((nodes_per_tick, d),
+                                    dtype=np.float32))
+            eng.mutate().add_edges(
+                rng.integers(0, n, nodes_per_tick),
+                np.arange(start, start + nodes_per_tick))
         eng.step()
     eng.run()                       # drain
     dt = time.time() - t0
+    n = eng.store.n_nodes
     s = eng.stats()
     refresh = eng.last_refresh_stats
     print(f"[serve] {s['n_served']} queries in {dt:.2f}s "
@@ -134,6 +149,10 @@ def drive(eng: EmbeddingServeEngine, *, ticks: int = 50,
         print(f"[fresh] last refresh frontier {refresh['frontier_sizes']} "
               f"of {n} rows, {refresh['rows_gemm']} gemm rows "
               f"(full epoch = {n * eng.reinfer.n_layers})")
+    if s["n_onboarded"]:
+        print(f"[onboard] {s['n_onboarded']} nodes added via "
+              f"{s['store_n_tail_shards']} tail partition(s) "
+              f"(store grew to {n} rows, no re-partition)")
     bound = ("per-tenant SLOs, tightest "
              + str(min(t.staleness_slo for t in eng.qos.registry))
              if eng.qos is not None else f"bound {eng.staleness_bound}")
@@ -163,20 +182,50 @@ def drive(eng: EmbeddingServeEngine, *, ticks: int = 50,
               f"{s['store_recompute_s']*1e3:.0f}ms)")
 
 
+def config_from_args(args) -> DealConfig:
+    return DealConfig(
+        graph=GraphSpec(dataset=args.dataset, scale=args.scale,
+                        fanout=args.fanout, seed=args.seed,
+                        n_construct_workers=4),
+        model=ModelSpec(name=args.model, n_layers=args.layers,
+                        d_feature=args.d_feature),
+        partition=PartitionSpec(p=args.p, m=args.m),
+        executor=ExecutorSpec(name=args.executor, fallback_to_ref=False),
+        store=StoreSpec(n_shards=args.n_shards,
+                        budget_rows=args.budget_rows,
+                        evict_policy=args.evict_policy,
+                        onboarding=args.onboarding),
+        qos=QoSSpec(staleness_bound=args.staleness_bound,
+                    tenants=(tenants_from_string(args.tenants)
+                             if args.tenants else ())))
+
+
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default=None, metavar="CFG.json",
+                    help="load the full DealConfig from a JSON artifact "
+                         "(overrides every pipeline flag)")
+    ap.add_argument("--dump-config", default=None, metavar="OUT.json",
+                    help="write the effective DealConfig ('-' = stdout) "
+                         "and exit without running")
     ap.add_argument("--dataset", default="ogbn-products")
-    ap.add_argument("--model", default="gcn",
-                    choices=["gcn", "gat", "sage"])
+    ap.add_argument("--model", default="gcn")
     ap.add_argument("--fanout", type=int, default=8)
     ap.add_argument("--layers", type=int, default=3)
+    ap.add_argument("--d-feature", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--n-shards", type=int, default=4)
     ap.add_argument("--ticks", type=int, default=50)
     ap.add_argument("--queries-per-tick", type=int, default=4)
     ap.add_argument("--mutations-per-tick", type=int, default=8)
+    ap.add_argument("--nodes-per-tick", type=int, default=0,
+                    help="onboard this many NEW nodes per tick "
+                         "(needs --onboarding tail)")
     ap.add_argument("--staleness-bound", type=int, default=64)
     ap.add_argument("--executor", default="ref",
-                    choices=["ref", "pallas", "dist"],
-                    help="delta-refresh backend (dist needs p*m devices)")
+                    help="delta-refresh backend: ref / pallas / dist "
+                         "(dist needs p*m devices) or any registered "
+                         "executor")
     ap.add_argument("--p", type=int, default=4, help="graph partitions")
     ap.add_argument("--m", type=int, default=2, help="feature partitions")
     ap.add_argument("--budget-rows", type=int, default=0,
@@ -184,8 +233,12 @@ def main():
                          "unbudgeted); misses recompute via the delta "
                          "engine")
     ap.add_argument("--evict-policy", default="heat",
-                    choices=["lru", "heat"],
-                    help="victim selection for over-budget levels")
+                    help="victim selection for over-budget levels "
+                         "(heat / lru or any registered policy)")
+    ap.add_argument("--onboarding", default="none",
+                    choices=["none", "tail"],
+                    help="tail: node additions append a tail partition "
+                         "served via delta refresh")
     ap.add_argument("--scale", type=float, default=1.0,
                     help="scale the dataset's node count (CI smoke)")
     ap.add_argument("--tenants", default=None,
@@ -193,16 +246,31 @@ def main():
                          "rate:slo,...' (rate 0 = unlimited rows/step); "
                          "replaces the global --staleness-bound")
     args = ap.parse_args()
-    eng = build_service(args.dataset, args.model, fanout=args.fanout,
-                        n_layers=args.layers,
-                        staleness_bound=args.staleness_bound,
-                        executor=args.executor, p=args.p, m=args.m,
-                        budget_rows=args.budget_rows,
-                        evict_policy=args.evict_policy, scale=args.scale,
-                        tenants=(parse_tenants(args.tenants)
-                                 if args.tenants else None))
-    drive(eng, ticks=args.ticks, queries_per_tick=args.queries_per_tick,
-          mutations_per_tick=args.mutations_per_tick)
+    try:
+        cfg = (DealConfig.load(args.config) if args.config
+               else config_from_args(args))
+        cfg.validate()
+    except ConfigError as e:
+        raise SystemExit(str(e))
+    if args.dump_config:
+        if args.dump_config == "-":
+            print(cfg.to_json())
+        else:
+            cfg.dump(args.dump_config)
+            print(f"[config] wrote {args.dump_config}")
+        return
+    if args.nodes_per_tick and cfg.store.onboarding != "tail":
+        raise SystemExit("--nodes-per-tick needs --onboarding tail "
+                         "(or store.onboarding=\"tail\" in --config)")
+    if args.nodes_per_tick and cfg.qos.tenants:
+        raise SystemExit("--nodes-per-tick is not supported with "
+                         "--tenants yet: QoS engines refuse node adds "
+                         "(lagged tenant views cannot address new ids)")
+    s = _serve_session(cfg)
+    drive(s.engine, ticks=args.ticks,
+          queries_per_tick=args.queries_per_tick,
+          mutations_per_tick=args.mutations_per_tick,
+          nodes_per_tick=args.nodes_per_tick)
 
 
 if __name__ == "__main__":

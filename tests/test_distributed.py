@@ -12,10 +12,27 @@ HELPER = pathlib.Path(__file__).parent / "helpers" / "dist_check.py"
 TUNED = pathlib.Path(__file__).parent / "helpers" / "tuned_check.py"
 
 
+def _run_check(script: pathlib.Path) -> subprocess.CompletedProcess:
+    """One retry on TIMEOUT only: 8 forced host devices on a small box
+    can wedge their collectives (threads asleep, ~0 CPU) — an
+    environmental deadlock, observed rarely and never reproducible
+    standalone.  A real check failure exits nonzero fast and is NOT
+    retried."""
+    for attempt in (0, 1):
+        try:
+            return subprocess.run([sys.executable, str(script)],
+                                  capture_output=True, text=True,
+                                  timeout=1200)
+        except subprocess.TimeoutExpired:
+            if attempt:
+                raise
+            print(f"# {script.name} wedged (collective deadlock on "
+                  "oversubscribed fake devices); retrying once")
+
+
 @pytest.mark.slow
 def test_distributed_primitives_and_engines():
-    res = subprocess.run([sys.executable, str(HELPER)],
-                         capture_output=True, text=True, timeout=1200)
+    res = _run_check(HELPER)
     print(res.stdout)
     print(res.stderr[-2000:] if res.returncode else "")
     assert res.returncode == 0, res.stdout + res.stderr[-2000:]
@@ -25,8 +42,7 @@ def test_distributed_primitives_and_engines():
 @pytest.mark.slow
 def test_tuned_variants_match_baseline():
     """§Perf hillclimbs (moe_ep, cp_decode) are numerics-preserving."""
-    res = subprocess.run([sys.executable, str(TUNED)],
-                         capture_output=True, text=True, timeout=1200)
+    res = _run_check(TUNED)
     print(res.stdout)
     assert res.returncode == 0, res.stdout + res.stderr[-2000:]
     assert "ALL TUNED CHECKS PASSED" in res.stdout

@@ -1,0 +1,267 @@
+"""Incremental node onboarding: tail partitions in the store, delta
+refresh over grown layer graphs, fold at the next full epoch, and the
+failure rollback (ROADMAP item "gnnserve incremental node onboarding")."""
+import copy
+
+import numpy as np
+import pytest
+
+N, D, LAYERS, FANOUT = 256, 16, 3, 4
+
+
+def _world(onboarding="tail", budget_rows=0, executor="ref", seed=0):
+    import jax
+
+    from repro.core.gnn_models import init_gcn
+    from repro.core.graph import csr_from_edges, rmat_edges
+    from repro.core.sampler import sample_layer_graphs
+    from repro.gnnserve import (DeltaReinference, EmbeddingServeEngine,
+                                attach_recompute, store_from_inference)
+    src, dst = rmat_edges(N, N * 8, seed=seed)
+    g = csr_from_edges(src, dst, N)
+    lgs = sample_layer_graphs(g, fanout=FANOUT, n_layers=LAYERS, seed=seed)
+    X = np.random.default_rng(seed).standard_normal((N, D),
+                                                    dtype=np.float32)
+    params = init_gcn(jax.random.PRNGKey(seed), [D] * (LAYERS + 1))
+    ri = DeltaReinference([copy.deepcopy(l) for l in lgs], "gcn", params,
+                          executor=executor)
+    store = store_from_inference(X, ri.full_levels(X)[1:], n_shards=4,
+                                 budget_rows=budget_rows or None,
+                                 onboarding=onboarding)
+    if budget_rows:
+        attach_recompute(store, ri)
+    eng = EmbeddingServeEngine(store, ri, g, staleness_bound=4)
+    return eng, params
+
+
+def _onboard(eng, k, seed=1):
+    """k new nodes with features, wired into the graph both ways."""
+    rng = np.random.default_rng(seed)
+    n = eng.store.n_nodes
+    rows = rng.standard_normal((k, D), dtype=np.float32)
+    eng.mutate().add_nodes(k, rows)
+    new = np.arange(n, n + k)
+    eng.mutate().add_edges(rng.integers(0, n, 2 * k), np.repeat(new, 2))
+    eng.mutate().add_edges(new, rng.integers(0, n, k))
+    return rows
+
+
+def _oracle_levels(eng, params, executor="ref"):
+    """A from-scratch full epoch on the engine's CURRENT layer graphs —
+    the bitwise reference for every onboarded store."""
+    from repro.gnnserve import DeltaReinference
+    n = eng.store.n_nodes
+    X = eng.store.lookup(np.arange(n), 0)
+    return DeltaReinference(eng.reinfer.layer_graphs, "gcn", params,
+                            executor=executor).full_levels(X)
+
+
+def test_refuses_without_tail_onboarding():
+    eng, _ = _world(onboarding="none")
+    eng.mutate().add_nodes(2)
+    with pytest.raises(NotImplementedError):
+        eng.refresh()
+    assert eng.log.pending > 0          # nothing was discarded
+    assert eng.store.n_nodes == N
+
+
+@pytest.mark.parametrize("executor", ["ref", "pallas"])
+def test_tail_onboarding_bitwise_equals_full_epoch(executor):
+    eng, params = _world(executor=executor)
+    rows = _onboard(eng, 3)
+    stats = eng.refresh()
+    assert stats["n_onboarded"] == 3
+    st = eng.store
+    assert st.n_nodes == N + 3
+    assert st.n_shards == 5 and st.n_tail_shards == 1
+    assert np.array_equal(st.lookup(np.arange(N, N + 3), 0), rows)
+    oracle = _oracle_levels(eng, params, executor)
+    all_ids = np.arange(N + 3)
+    for lvl in range(1, LAYERS + 1):
+        np.testing.assert_array_equal(st.lookup(all_ids, lvl),
+                                      oracle[lvl])
+
+
+def test_serving_and_repeated_onboarding():
+    from repro.gnnserve import Query
+    eng, params = _world()
+    _onboard(eng, 2, seed=1)
+    eng.refresh()
+    _onboard(eng, 3, seed=2)            # a second batch => second tail
+    eng.refresh()
+    st = eng.store
+    assert st.n_nodes == N + 5 and st.n_tail_shards == 2
+    q = Query(uid=0, node_ids=np.arange(N - 2, N + 5))
+    eng.submit(q)
+    eng.run()
+    oracle = _oracle_levels(eng, params)
+    np.testing.assert_array_equal(q.out, oracle[-1][N - 2:N + 5])
+
+
+def test_full_epoch_folds_tail_bitwise():
+    eng, params = _world()
+    _onboard(eng, 4)
+    eng.refresh()
+    oracle = _oracle_levels(eng, params)
+    fold = eng.full_epoch()
+    st = eng.store
+    assert st.n_tail_shards == 0 and st.n_shards == 4
+    np.testing.assert_array_equal(
+        st.bounds, np.linspace(0, N + 4, 5).astype(np.int64))
+    assert fold["version"] == st.version
+    all_ids = np.arange(N + 4)
+    for lvl in range(1, LAYERS + 1):
+        np.testing.assert_array_equal(st.lookup(all_ids, lvl),
+                                      oracle[lvl])
+
+
+def test_full_epoch_drains_pending_mutations_first():
+    eng, params = _world()
+    _onboard(eng, 2)
+    eng.full_epoch()                    # refresh + fold in one call
+    assert eng.store.n_nodes == N + 2 and eng.store.n_tail_shards == 0
+    assert eng.log.pending == 0
+
+
+def test_full_epoch_folds_node_adds_without_tail_onboarding():
+    """full_epoch IS the re-partition event: pending node adds fold
+    there even on an onboarding=\"none\" store (where refresh refuses)."""
+    eng, params = _world(onboarding="none")
+    _onboard(eng, 3)
+    with pytest.raises(NotImplementedError):
+        eng.refresh()                   # the delta path still refuses
+    eng.full_epoch()
+    st = eng.store
+    assert st.n_nodes == N + 3 and st.n_tail_shards == 0
+    assert eng.log.pending == 0
+    oracle = _oracle_levels(eng, params)
+    np.testing.assert_array_equal(st.lookup(np.arange(N + 3), -1),
+                                  oracle[-1])
+
+
+def test_full_epoch_poisons_swapped_out_store():
+    """Snapshots of the pre-fold store must SnapshotMiss on rows they
+    never pinned — not silently recompute against layer graphs that
+    later refreshes mutate."""
+    from repro.gnnserve import SnapshotMiss
+    eng, _ = _world(budget_rows=N // 4)     # most shards non-resident
+    old = eng.store
+    snap = old.snapshot()
+    eng.full_epoch()
+    assert eng.store is not old and old.version != snap.version
+    with pytest.raises(SnapshotMiss):
+        snap.lookup(np.arange(N), 1)
+
+
+def test_onboarding_on_budgeted_store_recomputes_tail():
+    eng, params = _world(budget_rows=N // 4)
+    rows = _onboard(eng, 3)
+    eng.refresh()
+    st = eng.store
+    # evict the tail shard explicitly: recompute-on-miss must rebuild
+    # the onboarded rows from their (pinned) tail features
+    st.evict(1, st.n_shards - 1)
+    oracle = _oracle_levels(eng, params)
+    all_ids = np.arange(N + 3)
+    for lvl in range(1, LAYERS + 1):
+        np.testing.assert_array_equal(st.lookup(all_ids, lvl),
+                                      oracle[lvl])
+    assert st.rows_recomputed > 0
+
+
+def test_failed_onboarding_rolls_back_everything():
+    eng, _ = _world()
+    lg0_rows = eng.reinfer.layer_graphs[0].nbr.shape[0]
+    eng.mutate().add_nodes(2)
+    # an edge whose SOURCE is far beyond even the grown node range makes
+    # apply_edge_mutations fail after the tail was appended
+    eng.mutate().add_edges(np.array([N + 100]), np.array([0]))
+    pending = eng.log.pending
+    with pytest.raises(AssertionError):
+        eng.refresh()
+    st = eng.store
+    assert st.n_nodes == N and st.n_shards == 4 and st.n_tail_shards == 0
+    assert eng.reinfer.layer_graphs[0].nbr.shape[0] == lg0_rows
+    assert eng.log.pending == pending   # requeued, nothing lost
+    assert eng.graph.n_nodes == N
+
+
+def test_bad_feature_width_rolls_back_cleanly():
+    eng, _ = _world()
+    eng.mutate().add_edges(np.array([1]), np.array([2]))   # good op
+    eng.mutate().add_nodes(2, np.zeros((2, D + 5), np.float32))
+    pending = eng.log.pending
+    with pytest.raises(AssertionError):
+        eng.refresh()
+    st = eng.store
+    assert st.n_nodes == N and st.n_shards == 4 and st.n_tail_shards == 0
+    assert eng.reinfer.layer_graphs[0].nbr.shape[0] == N
+    assert eng.log.pending == pending   # the good edge op survived too
+
+
+def test_add_nodes_rows_survive_drain_requeue():
+    from repro.gnnserve import MutationLog
+    log = MutationLog()
+    rows = np.random.default_rng(0).standard_normal((3, D),
+                                                    dtype=np.float32)
+    log.add_nodes(2, rows[:2])
+    log.add_nodes(1, rows[2:])
+    batch = log.drain()
+    assert batch.n_new_nodes == 3
+    np.testing.assert_array_equal(batch.new_node_rows, rows)
+    log.requeue(batch)
+    again = log.drain()
+    assert again.n_new_nodes == 3
+    np.testing.assert_array_equal(again.new_node_rows, rows)
+
+
+def test_add_nodes_mixed_rows_and_zero_fill():
+    from repro.gnnserve import MutationLog
+    log = MutationLog()
+    rows = np.ones((2, D), np.float32)
+    log.add_nodes(1)                    # no features: zero-filled
+    log.add_nodes(2, rows)
+    batch = log.drain()
+    assert batch.new_node_rows.shape == (3, D)
+    np.testing.assert_array_equal(batch.new_node_rows[0],
+                                  np.zeros(D, np.float32))
+    np.testing.assert_array_equal(batch.new_node_rows[1:], rows)
+
+
+def test_session_exposes_onboarding():
+    import dataclasses
+
+    from repro.api import (DealConfig, GraphSpec, ModelSpec, QoSSpec,
+                           Session, StoreSpec)
+    cfg = DealConfig(
+        graph=GraphSpec(dataset="rmat", n_nodes=N, avg_degree=8,
+                        fanout=FANOUT),
+        model=ModelSpec(name="gcn", n_layers=2, d_feature=D),
+        store=StoreSpec(onboarding="tail"),
+        qos=QoSSpec(staleness_bound=4))
+    s = Session.build(cfg)
+    eng = s.serve()
+    _onboard(eng, 2)
+    s.refresh()
+    assert s.store.n_nodes == N + 2 and s.store.n_tail_shards == 1
+    before = s.store
+    s.full_epoch()
+    assert s.store is not before        # the fold rebuilt the store
+    assert s.store.n_tail_shards == 0
+
+
+def test_qos_engines_still_refuse_node_adds():
+    from repro.api import (DealConfig, GraphSpec, ModelSpec, QoSSpec,
+                           Session, StoreSpec, tenants_from_string)
+    cfg = DealConfig(
+        graph=GraphSpec(dataset="rmat", n_nodes=N, avg_degree=8,
+                        fanout=FANOUT),
+        model=ModelSpec(name="gcn", n_layers=2, d_feature=D),
+        store=StoreSpec(onboarding="tail"),
+        qos=QoSSpec(tenants=tenants_from_string("ui:1:1:0:4")))
+    eng = Session.build(cfg).serve()
+    eng.mutate().add_nodes(1)
+    with pytest.raises(NotImplementedError):
+        eng.refresh()
+    with pytest.raises(NotImplementedError):
+        eng.full_epoch()                # no circular advice under QoS
