@@ -6,12 +6,18 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  Real runs MERGE their rows
 into results/bench.csv by name (so partial/--only/--executor runs never
-clobber other rows); ``--smoke`` runs every registered bench at tiny
-shapes as a CI liveness check and writes nothing.
+clobber other rows) and, per bench, write a ``results/BENCH_<key>.json``
+stage-breakdown summary: the bench runs under its own telemetry, so
+every instrumented span in the pipeline (``ops.*``, ``store.*``,
+``refresh.*``, ...) aggregates into a per-stage table for regression
+tracking alongside the headline CSV numbers.  ``--smoke`` runs every
+registered bench at tiny shapes as a CI liveness check and writes
+nothing.
 """
 import argparse
 import importlib
 import inspect
+import json
 import pathlib
 import sys
 import traceback
@@ -20,6 +26,8 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
 from benchmarks import common  # noqa: E402
+
+from repro import obs  # noqa: E402
 
 MODULES = {
     "fig14": "benchmarks.bench_e2e",
@@ -90,9 +98,12 @@ def main() -> None:
                  f"{', '.join(list(MODULES) + list(ALIASES))}")
     print("name,us_per_call,derived")
     failures = []
+    summaries = {}
     for k in keys:
         mod = importlib.import_module(MODULES[k])
         print(f"# === {k} ({MODULES[k]}) ===", flush=True)
+        n_rows_before = len(common.ROWS)
+        tel = obs.Telemetry(enabled=True)
         try:
             sig = inspect.signature(mod.run).parameters
             kw = {}
@@ -102,15 +113,35 @@ def main() -> None:
                 kw["executor"] = args.executor
             if "cfg" in sig and cfg is not None:
                 kw["cfg"] = cfg
-            mod.run(**kw)
+            with obs.use(tel):
+                mod.run(**kw)
         except Exception as e:
             failures.append((k, e))
             print(f"# FAILED {k}: {e}")
             traceback.print_exc()
-    if not args.smoke and common.ROWS:
+            continue
+        summaries[k] = {
+            "bench": k,
+            "module": MODULES[k],
+            "executor": args.executor,
+            "rows": common.ROWS[n_rows_before:],
+            "stages": tel.tracer.aggregate(),
+            "metrics": tel.metrics.to_dict(),
+            "trace_coverage": tel.tracer.coverage(),
+            "n_spans": len(tel.tracer.events),
+            "n_dropped_spans": tel.tracer.n_dropped,
+        }
+    if not args.smoke:
         out = pathlib.Path(__file__).resolve().parents[1] / "results"
         out.mkdir(exist_ok=True)
-        _merge_csv(out / "bench.csv", common.ROWS)
+        if common.ROWS:
+            _merge_csv(out / "bench.csv", common.ROWS)
+        for k, summary in summaries.items():
+            p = out / f"BENCH_{k.replace('-', '_')}.json"
+            p.write_text(json.dumps(summary, indent=1, sort_keys=True)
+                         + "\n")
+            print(f"# wrote {p.relative_to(out.parent)} "
+                  f"({len(summary['stages'])} stages)", flush=True)
     if failures:
         sys.exit(f"{len(failures)} benchmark group(s) failed: "
                  f"{[k for k, _ in failures]}")

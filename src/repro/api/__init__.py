@@ -5,7 +5,8 @@ One config tree, one lifecycle object, four plugin registries:
   ``DealConfig``   typed + serializable (exact JSON round-trip) +
                    eagerly validated (every bad field named);
                    sub-specs: GraphSpec, ModelSpec, PartitionSpec,
-                   ExecutorSpec, StoreSpec, QoSSpec, RefreshSpec.
+                   ExecutorSpec, StoreSpec, QoSSpec, RefreshSpec,
+                   TelemetrySpec.
   ``Session``      ``Session.build(cfg)`` -> ``infer_all()`` /
                    ``serve()`` / ``apply_mutations()`` / ``refresh()``
                    / ``full_epoch()`` / ``stats()`` / ``close()``.
@@ -22,7 +23,8 @@ making every run reproducible from one JSON artifact.
 """
 from repro.api.config import (ConfigError, DealConfig, ExecutorSpec,
                               GraphSpec, ModelSpec, PartitionSpec, QoSSpec,
-                              RefreshSpec, StoreSpec, tenants_from_string)
+                              RefreshSpec, StoreSpec, TelemetrySpec,
+                              tenants_from_string)
 from repro.api.registry import (ADMISSIONS, EVICT_POLICIES, EXECUTORS,
                                 MODELS, Registry, register_admission,
                                 register_evict_policy, register_executor,
@@ -31,7 +33,7 @@ from repro.api.session import Session
 
 __all__ = ["ConfigError", "DealConfig", "ExecutorSpec", "GraphSpec",
            "ModelSpec", "PartitionSpec", "QoSSpec", "RefreshSpec",
-           "StoreSpec", "tenants_from_string",
+           "StoreSpec", "TelemetrySpec", "tenants_from_string",
            "ADMISSIONS", "EVICT_POLICIES", "EXECUTORS", "MODELS",
            "Registry", "register_admission", "register_evict_policy",
            "register_executor", "register_model",

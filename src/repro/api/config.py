@@ -160,6 +160,28 @@ class RefreshSpec:
     sample_seed: int = 0
 
 
+@dataclasses.dataclass
+class TelemetrySpec:
+    """The ``repro.obs`` layer: per-Session span tracing + unified
+    metrics.  Disabled by default — the no-op mode's overhead at every
+    instrumentation site is a single attribute check, so leaving the
+    hooks compiled in costs nothing measurable."""
+    enabled: bool = False
+    capacity: int = 65536           # span ring-buffer size (oldest drop)
+    clock: str = "monotonic"        # "monotonic" | "fake" (deterministic
+    #                                 auto-advancing test clock)
+
+    def build(self):
+        """The runtime ``obs.Telemetry`` (None when disabled — the
+        session then leaves the process-current telemetry alone)."""
+        if not self.enabled:
+            return None
+        from repro import obs
+        clock = obs.FakeClock() if self.clock == "fake" else None
+        return obs.Telemetry(enabled=True, clock=clock,
+                             capacity=self.capacity)
+
+
 _TENANT_FIELDS = ("name", "priority", "slot_quota", "rate", "staleness_slo")
 
 
@@ -184,7 +206,8 @@ def tenants_from_string(text: str) -> Tuple[Dict[str, Any], ...]:
 
 _SECTIONS = {"graph": GraphSpec, "model": ModelSpec,
              "partition": PartitionSpec, "executor": ExecutorSpec,
-             "store": StoreSpec, "qos": QoSSpec, "refresh": RefreshSpec}
+             "store": StoreSpec, "qos": QoSSpec, "refresh": RefreshSpec,
+             "telemetry": TelemetrySpec}
 
 
 @dataclasses.dataclass
@@ -198,6 +221,8 @@ class DealConfig:
     store: StoreSpec = dataclasses.field(default_factory=StoreSpec)
     qos: QoSSpec = dataclasses.field(default_factory=QoSSpec)
     refresh: RefreshSpec = dataclasses.field(default_factory=RefreshSpec)
+    telemetry: TelemetrySpec = dataclasses.field(
+        default_factory=TelemetrySpec)
 
     # -- serialization --------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
@@ -415,6 +440,13 @@ class DealConfig:
                 e.append(f"{path}.staleness_slo: must be >= 1, got "
                          f"{t.get('staleness_slo')}")
         # (refresh.sample_seed's type is covered by the type pass above)
+        tel = self.telemetry
+        if tel.capacity < 1:
+            e.append(f"telemetry.capacity: must be >= 1, got "
+                     f"{tel.capacity}")
+        if tel.clock not in ("monotonic", "fake"):
+            e.append(f"telemetry.clock: must be \"monotonic\" or "
+                     f"\"fake\", got {tel.clock!r}")
 
         if e:
             raise ConfigError("invalid DealConfig:\n  - "

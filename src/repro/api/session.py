@@ -33,6 +33,7 @@ from typing import Any, Dict, Optional
 
 import numpy as np
 
+from repro import obs
 from repro.api.config import ConfigError, DealConfig
 from repro.api.registry import MODELS
 
@@ -47,6 +48,14 @@ class Session:
         self.cfg = cfg
         self._closed = False
         self.timings: Dict[str, float] = {}
+        # telemetry first: the pipeline stages below record through it.
+        # When enabled it becomes the PROCESS-current telemetry for the
+        # session's lifetime (close() restores the previous one); when
+        # disabled the current telemetry is left alone, so tests can
+        # still scope their own via obs.use().
+        self.telemetry = cfg.telemetry.build()
+        self._prev_telemetry = (obs.install(self.telemetry)
+                                if self.telemetry is not None else None)
         self._build_pipeline()
         self._H: Optional[np.ndarray] = None
         self._engine = None
@@ -69,30 +78,44 @@ class Session:
         cfg = self.cfg
         g, m = cfg.graph, cfg.model
 
-        t0 = time.perf_counter()
-        if g.dataset == "rmat":
-            n = int(g.n_nodes * g.scale)
-            src, dst = rmat_edges(n, int(n * g.avg_degree), seed=g.seed)
-        else:
-            src, dst, n = make_dataset(g.dataset, seed=g.seed,
-                                       scale=g.scale)
-        self.src, self.dst, self.n_nodes = src, dst, n
+        with obs.span("construct.dataset") as sp:
+            t0 = time.perf_counter()
+            if g.dataset == "rmat":
+                n = int(g.n_nodes * g.scale)
+                src, dst = rmat_edges(n, int(n * g.avg_degree),
+                                      seed=g.seed)
+            else:
+                src, dst, n = make_dataset(g.dataset, seed=g.seed,
+                                           scale=g.scale)
+            self.src, self.dst, self.n_nodes = src, dst, n
+            if sp:
+                sp.set(dataset=g.dataset, n_nodes=n, n_edges=src.size)
         self.graph, self.construct_stats = csr_from_edges_distributed(
             src, dst, n, n_workers=g.n_construct_workers)
         self.timings["construct_s"] = time.perf_counter() - t0
 
         t1 = time.perf_counter()
-        self.layer_graphs = sample_layer_graphs(
-            self.graph, fanout=g.fanout, n_layers=m.n_layers, seed=g.seed)
+        with obs.span("sample.layer_graphs") as sp:
+            self.layer_graphs = sample_layer_graphs(
+                self.graph, fanout=g.fanout, n_layers=m.n_layers,
+                seed=g.seed)
+            if sp:
+                sp.set(n_layers=m.n_layers, fanout=g.fanout)
         self.timings["sample_s"] = time.perf_counter() - t1
 
-        rng = np.random.default_rng(g.seed)
-        self.X = rng.standard_normal((n, m.d_feature), dtype=np.float32)
-        dims = [m.d_feature] * (m.n_layers + 1)
-        plugin = MODELS.get(m.name)
-        self.params = plugin.init(jax.random.PRNGKey(g.seed), dims,
-                                  heads=m.heads)
-        self.executor = cfg.executor.build(cfg.partition, n_nodes=n)
+        with obs.span("featprep.init") as sp:
+            rng = np.random.default_rng(g.seed)
+            self.X = rng.standard_normal((n, m.d_feature),
+                                         dtype=np.float32)
+            dims = [m.d_feature] * (m.n_layers + 1)
+            plugin = MODELS.get(m.name)
+            self.params = plugin.init(jax.random.PRNGKey(g.seed), dims,
+                                      heads=m.heads)
+            if sp:
+                sp.set(d_feature=m.d_feature, bytes=int(self.X.nbytes))
+        with obs.span("session.executor_build",
+                      {"executor": cfg.executor.name}):
+            self.executor = cfg.executor.build(cfg.partition, n_nodes=n)
 
     # -- offline: all-node inference ------------------------------------
     def infer_all(self) -> np.ndarray:
@@ -108,13 +131,18 @@ class Session:
         lgs = self.layer_graphs[:len(spec.layers)]
         ex = self.executor
         t0 = time.perf_counter()
-        if isinstance(ex, DistExecutor):
-            need_sddmm = any(op.kind == "attn_scores"
-                             for layer in spec.layers for op in layer.ops)
-            ios = ex.bind(lgs, need_sddmm=need_sddmm)
-        else:
-            ios = [DenseIO.from_layer_graph(lg) for lg in lgs]
-        self._H = np.asarray(run_model(ex, spec, ios, self.X))
+        with obs.span("session.infer_all",
+                      {"model": self.cfg.model.name}) as sp:
+            if isinstance(ex, DistExecutor):
+                need_sddmm = any(op.kind == "attn_scores"
+                                 for layer in spec.layers
+                                 for op in layer.ops)
+                ios = ex.bind(lgs, need_sddmm=need_sddmm)
+            else:
+                ios = [DenseIO.from_layer_graph(lg) for lg in lgs]
+            self._H = np.asarray(run_model(ex, spec, ios, self.X))
+            if sp:
+                sp.set(rows=int(self._H.shape[0]))
         self.timings["infer_s"] = time.perf_counter() - t0
         assert not np.isnan(self._H).any()
         return self._H
@@ -136,7 +164,10 @@ class Session:
             cfg.model.name, self.params,
             sample_seed=cfg.refresh.sample_seed, executor=self.executor)
         t0 = time.perf_counter()
-        levels = self.reinfer.full_levels(self.X)
+        with obs.span("serve.epoch") as sp:
+            levels = self.reinfer.full_levels(self.X)
+            if sp:
+                sp.set(n_levels=len(levels))
         self.timings["epoch_s"] = time.perf_counter() - t0
         store = store_from_inference(
             self.X, levels[1:], n_shards=st.n_shards,
@@ -182,22 +213,71 @@ class Session:
     # -- observability / lifecycle --------------------------------------
     def stats(self) -> Dict[str, Any]:
         """Pipeline timings + construction stats, plus the full serve/
-        store/QoS counter tree once the engine exists."""
+        store/QoS counter tree once the engine exists (the legacy keys,
+        unchanged), plus:
+
+          ``plan_cache``   ``build_subset_plan_cached`` hit/miss counters
+          ``metrics``      the flat UNIFIED metric view (``obs.compat``
+                           naming: ``store.evictions``,
+                           ``delta.frontier_rows.layer<l>``,
+                           ``qos.tenant.<name>.*``, ...), with live
+                           telemetry histograms merged on top when the
+                           session runs with ``telemetry.enabled``.
+        """
         self._check_open()
+        from repro.core.partition import subset_plan_cache_stats
+        from repro.obs import compat
         out: Dict[str, Any] = {"n_nodes": self.n_nodes,
                                "n_edges": self.graph.n_edges,
                                **{f"t_{k}": v
                                   for k, v in self.timings.items()}}
+        engine_stats = refresh_stats = None
         if self._engine is not None:
-            out.update(self._engine.stats())
+            engine_stats = self._engine.stats()
+            refresh_stats = self._engine.last_refresh_stats
+            out.update(engine_stats)
+        out["plan_cache"] = subset_plan_cache_stats()
+        out["metrics"] = compat.unified_metrics(
+            engine_stats=engine_stats,
+            construct_stats=self.construct_stats,
+            refresh_stats=refresh_stats,
+            plan_cache=out["plan_cache"],
+            timings=self.timings,
+            live=(self.telemetry.metrics.to_dict()
+                  if self.telemetry is not None else None))
         return out
+
+    def dump_trace(self, path) -> Dict[str, Any]:
+        """Write the session's span trace as Chrome/Perfetto trace-event
+        JSON (load it at https://ui.perfetto.dev), with the metrics
+        registry embedded under ``deal_metrics``.  Returns the document.
+        Needs ``telemetry.enabled: true`` in the config."""
+        self._check_open()
+        if self.telemetry is None:
+            raise ConfigError(
+                "dump_trace needs telemetry enabled: set "
+                "telemetry.enabled = true in the DealConfig")
+        return obs.dump_chrome_trace(
+            self.telemetry.tracer, path, self.telemetry.metrics,
+            process_name=f"deal.{self.cfg.model.name}")
+
+    def prometheus_text(self) -> str:
+        """The metrics registry in Prometheus exposition format (empty
+        when telemetry is disabled)."""
+        self._check_open()
+        if self.telemetry is None:
+            return ""
+        return obs.prometheus_text(self.telemetry.metrics)
 
     def _check_open(self) -> None:
         if self._closed:
             raise ConfigError("session is closed")
 
     def close(self) -> None:
-        """Release the big arrays (graph, features, store, engine)."""
+        """Release the big arrays (graph, features, store, engine) and
+        hand the process-current telemetry back to whoever held it."""
+        if not self._closed and self.telemetry is not None:
+            obs.install(self._prev_telemetry)
         self._closed = True
         self._engine = None
         for name in ("X", "graph", "layer_graphs", "reinfer", "_H",

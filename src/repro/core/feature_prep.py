@@ -22,6 +22,15 @@ from typing import Dict, Tuple
 
 import numpy as np
 
+from repro import obs
+
+
+def _loader_span(strategy: str, stats: Dict) -> None:
+    """One counter pair per loader run (file vs network rows) — the
+    Fig 21 stage breakdown under the unified names."""
+    obs.add(f"featprep.{strategy}.file_rows", stats["file_rows"])
+    obs.add(f"featprep.{strategy}.net_rows", stats["net_rows"])
+
 
 def write_feature_files(path, N: int, D: int, n_files: int = 8,
                         seed: int = 0) -> Tuple[list, np.ndarray]:
@@ -41,6 +50,12 @@ def write_feature_files(path, N: int, D: int, n_files: int = 8,
 
 def scan_all_load(files, n_machines: int, N: int, D: int):
     """Every machine reads every file; file traffic = M * N rows."""
+    with obs.span("featprep.scan_all",
+                  {"n_machines": n_machines} if obs.enabled() else None):
+        return _scan_all_load(files, n_machines, N, D)
+
+
+def _scan_all_load(files, n_machines: int, N: int, D: int):
     t0 = time.perf_counter()
     bounds = np.linspace(0, N, n_machines + 1).astype(int)
     out = np.zeros((N, D), np.float32)
@@ -53,12 +68,20 @@ def scan_all_load(files, n_machines: int, N: int, D: int):
             file_rows += ids.size
             sel = (ids >= lo) & (ids < hi)
             out[ids[sel]] = rows[sel]
-    return out, {"seconds": time.perf_counter() - t0,
-                 "file_rows": file_rows, "net_rows": 0}
+    stats = {"seconds": time.perf_counter() - t0,
+             "file_rows": file_rows, "net_rows": 0}
+    _loader_span("scan_all", stats)
+    return out, stats
 
 
 def redistribute_load(files, n_machines: int, N: int, D: int):
     """Each machine loads 1/M of the files, then shuffles to owners."""
+    with obs.span("featprep.redistribute",
+                  {"n_machines": n_machines} if obs.enabled() else None):
+        return _redistribute_load(files, n_machines, N, D)
+
+
+def _redistribute_load(files, n_machines: int, N: int, D: int):
     t0 = time.perf_counter()
     bounds = np.linspace(0, N, n_machines + 1).astype(int)
     loaded = []          # per machine: (ids, rows)
@@ -80,8 +103,10 @@ def redistribute_load(files, n_machines: int, N: int, D: int):
         owner = np.searchsorted(bounds, ids, side="right") - 1
         net_rows += int((owner != m).sum())
         out[ids] = rows
-    return out, {"seconds": time.perf_counter() - t0,
-                 "file_rows": file_rows, "net_rows": net_rows}
+    stats = {"seconds": time.perf_counter() - t0,
+             "file_rows": file_rows, "net_rows": net_rows}
+    _loader_span("redistribute", stats)
+    return out, stats
 
 
 def fused_load(files, n_machines: int, N: int, D: int, w: np.ndarray):
@@ -91,6 +116,12 @@ def fused_load(files, n_machines: int, N: int, D: int, w: np.ndarray):
     Returns H1 = X @ w computed WITHOUT materializing the ordered X, plus a
     location table for subsequent primitives.
     """
+    with obs.span("featprep.fused",
+                  {"n_machines": n_machines} if obs.enabled() else None):
+        return _fused_load(files, n_machines, N, D, w)
+
+
+def _fused_load(files, n_machines: int, N: int, D: int, w: np.ndarray):
     t0 = time.perf_counter()
     loaded_ids, loaded_rows = [], []
     file_rows = 0
@@ -104,5 +135,7 @@ def fused_load(files, n_machines: int, N: int, D: int, w: np.ndarray):
     table = np.empty(N, np.int64)        # node id -> loader position
     table[ids] = np.arange(ids.size)
     h1 = rows[table] @ w                 # gather fused into the first GEMM
-    return h1, {"seconds": time.perf_counter() - t0,
-                "file_rows": file_rows, "net_rows": 0, "table": table}
+    stats = {"seconds": time.perf_counter() - t0,
+             "file_rows": file_rows, "net_rows": 0, "table": table}
+    _loader_span("fused", stats)
+    return h1, stats

@@ -14,6 +14,8 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
+
 
 @dataclasses.dataclass
 class Graph:
@@ -66,21 +68,25 @@ def csr_from_edges_distributed(src: np.ndarray, dst: np.ndarray,
     buckets_dst = [[] for _ in range(n_workers)]
     reader_bounds = np.linspace(0, E, n_workers + 1).astype(np.int64)
     shuffle_worker_s = []
-    for w in range(n_workers):
-        tw = time.perf_counter()
-        lo, hi = reader_bounds[w], reader_bounds[w + 1]
-        for c0 in range(lo, hi, chunk_edges):
-            c1 = min(c0 + chunk_edges, hi)
-            p = part_of[c0:c1]
-            for q in range(n_workers):
-                sel = p == q
-                if not sel.any():
-                    continue
-                buckets_src[q].append(src[c0:c1][sel])
-                buckets_dst[q].append(dst[c0:c1][sel])
-                if q != w:          # cross-worker traffic
-                    exchanged += int(sel.sum()) * 8
-        shuffle_worker_s.append(time.perf_counter() - tw)
+    with obs.span("construct.shuffle") as sp:
+        for w in range(n_workers):
+            tw = time.perf_counter()
+            lo, hi = reader_bounds[w], reader_bounds[w + 1]
+            for c0 in range(lo, hi, chunk_edges):
+                c1 = min(c0 + chunk_edges, hi)
+                p = part_of[c0:c1]
+                for q in range(n_workers):
+                    sel = p == q
+                    if not sel.any():
+                        continue
+                    buckets_src[q].append(src[c0:c1][sel])
+                    buckets_dst[q].append(dst[c0:c1][sel])
+                    if q != w:          # cross-worker traffic
+                        exchanged += int(sel.sum()) * 8
+            shuffle_worker_s.append(time.perf_counter() - tw)
+        if sp:
+            sp.set(n_workers=n_workers, exchanged_bytes=exchanged)
+    obs.add("construct.exchanged_bytes", exchanged)
     t_shuffle = time.perf_counter() - t0
 
     # pass 2: local CSR build per worker
@@ -88,21 +94,24 @@ def csr_from_edges_distributed(src: np.ndarray, dst: np.ndarray,
     indptr = np.zeros(n_nodes + 1, np.int64)
     chunks = []
     build_worker_s = []
-    for q in range(n_workers):
-        tw = time.perf_counter()
-        lo, hi = bounds[q], bounds[q + 1]
-        s = (np.concatenate(buckets_src[q]) if buckets_src[q]
-             else np.empty(0, src.dtype))
-        d = (np.concatenate(buckets_dst[q]) if buckets_dst[q]
-             else np.empty(0, dst.dtype))
-        local = d - lo
-        counts = np.bincount(local, minlength=hi - lo)
-        indptr[lo + 1:hi + 1] = counts
-        order = np.argsort(local, kind="stable")
-        chunks.append(s[order].astype(np.int32))
-        build_worker_s.append(time.perf_counter() - tw)
-    np.cumsum(indptr, out=indptr)
-    g = Graph(indptr=indptr, indices=np.concatenate(chunks), n_nodes=n_nodes)
+    with obs.span("construct.local_build",
+                  {"n_workers": n_workers} if obs.enabled() else None):
+        for q in range(n_workers):
+            tw = time.perf_counter()
+            lo, hi = bounds[q], bounds[q + 1]
+            s = (np.concatenate(buckets_src[q]) if buckets_src[q]
+                 else np.empty(0, src.dtype))
+            d = (np.concatenate(buckets_dst[q]) if buckets_dst[q]
+                 else np.empty(0, dst.dtype))
+            local = d - lo
+            counts = np.bincount(local, minlength=hi - lo)
+            indptr[lo + 1:hi + 1] = counts
+            order = np.argsort(local, kind="stable")
+            chunks.append(s[order].astype(np.int32))
+            build_worker_s.append(time.perf_counter() - tw)
+        np.cumsum(indptr, out=indptr)
+        g = Graph(indptr=indptr, indices=np.concatenate(chunks),
+                  n_nodes=n_nodes)
     # modeled wall time on a real cluster: slowest worker per parallel
     # phase + network (workers here run sequentially on one host).
     net_bw = 25e9 / 8                    # the paper's 25 Gbps Ethernet

@@ -38,6 +38,7 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
 from repro.api.registry import EXECUTORS, register_executor
 from repro.core import primitives as prim
 from repro.core.gnn_models import (LayerSpec, ModelSpec, gat_head_scores,
@@ -108,20 +109,27 @@ def run_layer(ex, layer: LayerSpec, io, h_tgt, h_src, heads: int = 1):
         return v
 
     for op in layer.ops:
-        if op.kind == "gemm":
-            out = ex.gemm(get(op.src[0]), op.param)
-        elif op.kind == "spmm":
-            out = ex.spmm(get(op.src[0]), io.mean_w, io)
-        elif op.kind == "add":
-            out = get(op.src[0]) + get(op.src[1])
-        elif op.kind == "attn_scores":
-            out = ex.attn_scores(get(op.src[0]), get(op.src[1]), io, heads)
-        elif op.kind == "edge_softmax":
-            out = ex.edge_softmax(get(op.src[0]), io)
-        elif op.kind == "attend":
-            out = ex.attend(get(op.src[0]), get(op.src[1]), io, heads)
-        else:
-            raise ValueError(f"unknown layer op {op.kind!r}")
+        with obs.span("ops." + op.kind) as sp:
+            if op.kind == "gemm":
+                out = ex.gemm(get(op.src[0]), op.param)
+            elif op.kind == "spmm":
+                out = ex.spmm(get(op.src[0]), io.mean_w, io)
+            elif op.kind == "add":
+                out = get(op.src[0]) + get(op.src[1])
+            elif op.kind == "attn_scores":
+                out = ex.attn_scores(get(op.src[0]), get(op.src[1]), io,
+                                     heads)
+            elif op.kind == "edge_softmax":
+                out = ex.edge_softmax(get(op.src[0]), io)
+            elif op.kind == "attend":
+                out = ex.attend(get(op.src[0]), get(op.src[1]), io, heads)
+            else:
+                raise ValueError(f"unknown layer op {op.kind!r}")
+            if sp:
+                # make the span honest under async dispatch; value-neutral
+                out = jax.block_until_ready(out)
+                sp.set(executor=getattr(ex, "name", type(ex).__name__),
+                       rows=int(out.shape[0]))
         env[op.out] = out
     return env[layer.out]
 
@@ -311,19 +319,25 @@ class DistExecutor:
     # -- full-graph binding ---------------------------------------------
     def bind(self, layer_graphs: Sequence[LayerGraph],
              need_sddmm: bool = False) -> List[DistIO]:
-        self.plan = build_plan(list(layer_graphs), self.P, self.M)
-        ios = []
-        for l, lp in enumerate(self.plan.layers):
-            lg = layer_graphs[l]
-            dev = prim.plan_device_arrays(lp)
-            ios.append(DistIO(
-                spmm=self._spmm,
-                args=self._plan_args(dev),
-                mean_w=self._put(mean_weights(lg.mask), self._row_spec),
-                mask_f=self._put(lg.mask.astype(np.float32),
-                                 self._row_spec),
-                sddmm=self._sddmm_fn(lp.fanout) if need_sddmm else None,
-                sddmm_args=self._deal_args(dev) if need_sddmm else ()))
+        with obs.span("dist.bind") as bsp:
+            self.plan = build_plan(list(layer_graphs), self.P, self.M)
+            ios = []
+            for l, lp in enumerate(self.plan.layers):
+                lg = layer_graphs[l]
+                dev = prim.plan_device_arrays(lp)
+                ios.append(DistIO(
+                    spmm=self._spmm,
+                    args=self._plan_args(dev),
+                    mean_w=self._put(mean_weights(lg.mask),
+                                     self._row_spec),
+                    mask_f=self._put(lg.mask.astype(np.float32),
+                                     self._row_spec),
+                    sddmm=self._sddmm_fn(lp.fanout) if need_sddmm
+                    else None,
+                    sddmm_args=self._deal_args(dev) if need_sddmm
+                    else ()))
+            if bsp:
+                bsp.set(n_layers=len(ios), P=self.P, M=self.M)
         return ios
 
     # -- executor primitives --------------------------------------------
@@ -360,8 +374,13 @@ class DistExecutor:
             "row-subset mode needs the unique-row exchange plan"
         assert self.M & (self.M - 1) == 0, \
             "model axis must be a power of two (pad buckets)"
-        sp = build_subset_plan_cached(lg, rows, self.P, m_align=self.M,
-                                      floor=self.subset_floor)
+        with obs.span("dist.subset_plan") as psp:
+            sp = build_subset_plan_cached(lg, rows, self.P,
+                                          m_align=self.M,
+                                          floor=self.subset_floor)
+            if psp:
+                psp.set(rows=int(rows.size), src_rows=int(sp.n_src_rows),
+                        level=level)
         args = (jnp.asarray(sp.send_local), jnp.asarray(sp.edge_dst),
                 jnp.asarray(sp.edge_slot), jnp.asarray(sp.edge_pos),
                 jnp.asarray(sp.edge_mask))
@@ -376,8 +395,15 @@ class DistExecutor:
                 sp.row_mask.reshape(-1, sp.fanout).astype(np.float32),
                 self._row_spec),
             sddmm=self._sddmm_fn(sp.fanout))
-        H_src = self._put(read_level(level, sp.src_ids.reshape(-1)),
-                          self._hd_spec)
+        with obs.span("dist.exchange") as xsp:
+            src_rows = read_level(level, sp.src_ids.reshape(-1))
+            H_src = self._put(src_rows, self._hd_spec)
+            if xsp:
+                nbytes = int(np.asarray(src_rows).nbytes)
+                xsp.set(bytes=nbytes, rows=int(sp.n_src_rows),
+                        level=level)
+                obs.add("dist.exchanged_bytes", nbytes)
+                obs.add("dist.src_rows", int(sp.n_src_rows))
         h_tgt = lambda: self._put(                       # noqa: E731
             read_level(level, sp.row_ids.reshape(-1)), self._hd_spec)
         H = run_layer(self, layer, io, h_tgt, H_src, heads)

@@ -19,6 +19,7 @@ from typing import List
 
 import numpy as np
 
+from repro import obs
 from repro.core.sampler import LayerGraph
 
 
@@ -308,12 +309,18 @@ def build_subset_plan_cached(lg: LayerGraph, rows: np.ndarray, P: int,
     plan = cache.get(key)
     if plan is not None:
         SUBSET_PLAN_CACHE["hits"] += 1
+        obs.add("plan_cache.hits")
         return plan
     SUBSET_PLAN_CACHE["misses"] += 1
+    obs.add("plan_cache.misses")
     if len(cache) >= _SUBSET_CACHE_CAP:
         cache.pop(next(iter(cache)))    # FIFO drop-one: clearing all
         # would also evict the hot frontier the cache exists to keep
-    plan = build_subset_plan(lg, rows, P, m_align=m_align, floor=floor)
+    with obs.span("dist.subset_plan_build") as sp:
+        plan = build_subset_plan(lg, rows, P, m_align=m_align,
+                                 floor=floor)
+        if sp:
+            sp.set(rows=int(rows.size), P=P)
     cache[key] = plan
     return plan
 

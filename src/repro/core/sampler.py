@@ -18,6 +18,7 @@ from typing import List, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.graph import Graph
 
 
@@ -67,10 +68,13 @@ def sample_layer_graphs(g: Graph, fanout: int, n_layers: int,
     deg = g.degrees()                      # the shared sampling structure:
     starts = g.indptr[:-1]                 # built ONCE, reused k times
     out = []
-    for _ in range(n_layers):
-        nbr, mask = draw_fixed_fanout(deg, starts, g.indices, g.n_edges,
-                                      fanout, rng)
-        out.append(LayerGraph(nbr=nbr, mask=mask, fanout=fanout))
+    for l in range(n_layers):
+        with obs.span("sample.layer") as sp:
+            nbr, mask = draw_fixed_fanout(deg, starts, g.indices,
+                                          g.n_edges, fanout, rng)
+            out.append(LayerGraph(nbr=nbr, mask=mask, fanout=fanout))
+            if sp:
+                sp.set(layer=l, rows=int(nbr.shape[0]), fanout=fanout)
     return out
 
 

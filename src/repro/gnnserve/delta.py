@@ -39,6 +39,7 @@ from typing import Dict, List, Optional, Sequence
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core.gnn_models import model_spec
 from repro.core.graph import Graph
 from repro.core.ops import DenseIO, DistExecutor, get_executor, run_layer
@@ -319,8 +320,11 @@ class DeltaReinference:
         levels = [np.asarray(X, np.float32)]
         ids = np.arange(levels[0].shape[0], dtype=np.int64)
         for l in range(L):
-            H = self._layer_rows(l, ids,
-                                 lambda lvl, want: levels[lvl][want])
+            with obs.span("epoch.layer") as sp:
+                H = self._layer_rows(l, ids,
+                                     lambda lvl, want: levels[lvl][want])
+                if sp:
+                    sp.set(layer=l, rows=int(ids.size))
             levels.append(H)
         return levels
 
@@ -427,8 +431,11 @@ class DeltaReinference:
             # content-addressed seeding (no version term): the draw for a
             # row depends only on its final CSR state, so refresh
             # batching never changes the bits (see resample_rows)
-            resample_rows(g_new, self.layer_graphs, resampled,
-                          seed=self.sample_seed)
+            with obs.span("refresh.resample") as sp:
+                resample_rows(g_new, self.layer_graphs, resampled,
+                              seed=self.sample_seed)
+                if sp:
+                    sp.set(rows=int(resampled.size))
             if resampled.size:
                 # incremental maintenance: splice only the resampled
                 # rows' old/new entries into each cached reverse index —
@@ -440,9 +447,12 @@ class DeltaReinference:
                             self._rev[l], resampled, old_nbr_l, old_mask_l,
                             lg.nbr[resampled], lg.mask[resampled])
                         self.rev_splices += 1
-            frontier = forward_frontier(
-                [self._reverse(l) for l in range(self.n_layers)],
-                feat_ids, resampled, self.n_layers)
+            with obs.span("refresh.frontier") as sp:
+                frontier = forward_frontier(
+                    [self._reverse(l) for l in range(self.n_layers)],
+                    feat_ids, resampled, self.n_layers)
+                if sp:
+                    sp.set(rows=int(sum(f.size for f in frontier)))
 
             store.begin_update()
             if feat_ids.size:
@@ -450,11 +460,16 @@ class DeltaReinference:
                                  np.asarray(feat_rows, np.float32))
             for l in range(self.n_layers):
                 rows = frontier[l]
+                obs.add("delta.frontier_rows", rows.size)
                 if rows.size == 0:
                     continue
-                h = self._layer_rows(
-                    l, rows, lambda lvl, want: store.lookup_staged(want, lvl))
-                store.write_rows(l + 1, rows, h)
+                with obs.span("refresh.layer") as sp:
+                    h = self._layer_rows(
+                        l, rows,
+                        lambda lvl, want: store.lookup_staged(want, lvl))
+                    store.write_rows(l + 1, rows, h)
+                    if sp:
+                        sp.set(layer=l, rows=int(rows.size))
         except Exception:
             store.abort()       # readers stay on the last committed epoch
             if old_rows is not None:

@@ -31,6 +31,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro import obs
 from repro.core.graph import Graph
 from repro.gnnserve.delta import DeltaReinference, attach_recompute
 from repro.gnnserve.mutations import (MutationLog, apply_edge_mutations,
@@ -59,6 +60,9 @@ class Query:
     submit_step: int = -1
     first_gather_step: int = -1
     observed_staleness: int = -1
+    # wall-clock submit stamp (telemetry only; -1 when disabled) —
+    # queue-wait histograms read it at first pin
+    submit_ns: int = -1
 
 
 class EmbeddingServeEngine:
@@ -97,6 +101,9 @@ class EmbeddingServeEngine:
 
     # -- ingress --------------------------------------------------------
     def submit(self, q: Query) -> None:
+        if obs.enabled():
+            q.submit_ns = obs.current().now_ns()
+            obs.add("serve.submitted")
         if self.qos is not None:
             q.node_ids = np.asarray(q.node_ids, np.int64)
             self.qos.route(q)
@@ -136,10 +143,26 @@ class EmbeddingServeEngine:
                     "(the re-partition event, which folds them)")
         return self._refresh()
 
+    def _observe_wait(self, q: Query) -> None:
+        """Queue-wait sample at first pin (submit -> first gather)."""
+        if q.submit_ns >= 0 and obs.enabled():
+            wait_ms = (obs.current().now_ns() - q.submit_ns) / 1e6
+            obs.observe("serve.queue_wait_ms", wait_ms)
+            if self.qos is not None:
+                obs.observe(f"qos.tenant.{q.tenant}.wait_ms", wait_ms)
+
     def _refresh(self) -> Dict:
         """The gate-free refresh body: ``full_epoch`` calls it directly
         so pending node adds fold there even on ``onboarding="none"``
         stores (a full epoch IS the re-partition event)."""
+        with obs.span("serve.refresh") as rsp:
+            stats = self._refresh_body()
+            if rsp:
+                rsp.set(rows_gemm=int(stats.get("rows_gemm", 0)),
+                        n_onboarded=int(stats.get("n_onboarded", 0)))
+        return stats
+
+    def _refresh_body(self) -> Dict:
         batch = self.log.drain()
         n_new = batch.n_new_nodes
         new_ids = np.empty(0, np.int64)
@@ -255,8 +278,14 @@ class EmbeddingServeEngine:
         """Admit, maybe refresh, then one batched gather. Returns False
         when idle.  With QoS, admission/refresh/row-split are delegated
         to the per-tenant scheduler (``_step_qos``)."""
-        if self.qos is not None:
-            return self._step_qos()
+        with obs.span("serve.step") as sp:
+            r = (self._step_qos() if self.qos is not None
+                 else self._step_fifo())
+            if sp:
+                sp.set(progressed=r, qos=self.qos is not None)
+        return r
+
+    def _step_fifo(self) -> bool:
         self._admit()
         active = [i for i in range(self.B) if self.slot_q[i] is not None]
         if not active:
@@ -286,6 +315,7 @@ class EmbeddingServeEngine:
                 # can drop the store's pointer but never the snapshot's
                 q.snap = self.store.pinned_snapshot(q.node_ids, q.level)
                 q.served_version = q.snap.version
+                self._observe_wait(q)
             lo = self.cursor[i]
             per_key.setdefault(
                 (q.snap.version, q.level % self.store.n_levels), []).append(
@@ -295,18 +325,23 @@ class EmbeddingServeEngine:
             snap = self.slot_q[chunks[0][0]].snap
             ids = np.concatenate([self.slot_q[i].node_ids[lo:hi]
                                   for i, lo, hi in chunks])
-            try:
-                rows = snap.lookup(ids, level)        # one sharded gather
-            except SnapshotMiss:
-                # same-version queries can still pin DIFFERENT shard
-                # arrays (an eviction + re-admission between their pins);
-                # after an epoch flip the shared snapshot can't serve the
-                # other queries' rows — each query's own snapshot can,
-                # by the pinning guarantee
-                rows = np.concatenate([
-                    self.slot_q[i].snap.lookup(
-                        self.slot_q[i].node_ids[lo:hi], level)
-                    for i, lo, hi in chunks])
+            gsp = obs.span("serve.gather")
+            if gsp:
+                gsp.set(rows=int(ids.size), level=level,
+                        n_queries=len(chunks))
+            with gsp:
+                try:
+                    rows = snap.lookup(ids, level)    # one sharded gather
+                except SnapshotMiss:
+                    # same-version queries can still pin DIFFERENT shard
+                    # arrays (an eviction + re-admission between their
+                    # pins); after an epoch flip the shared snapshot
+                    # can't serve the other queries' rows — each query's
+                    # own snapshot can, by the pinning guarantee
+                    rows = np.concatenate([
+                        self.slot_q[i].snap.lookup(
+                            self.slot_q[i].node_ids[lo:hi], level)
+                        for i, lo, hi in chunks])
             off = 0
             for i, lo, hi in chunks:
                 self.slot_q[i].out[lo:hi] = rows[off:off + (hi - lo)]
@@ -337,6 +372,7 @@ class EmbeddingServeEngine:
             q.snap = self.qos.epoch_snapshot(st.view_version)
         q.served_version = st.view_version
         self.qos.on_pin(q, stale)
+        self._observe_wait(q)
 
     def _restart_on_current(self, q: Query) -> None:
         """A lagged view hit rows the old epoch can't serve any more
@@ -358,6 +394,9 @@ class EmbeddingServeEngine:
         # quota is lent out work-conserving
         preempt, admit = qos.plan_admission(self.slot_q)
         for i in preempt:
+            if obs.enabled():
+                obs.add("qos.preemptions")
+                obs.add(f"qos.tenant.{self.slot_q[i].tenant}.preemptions")
             qos.requeue_front(self.slot_q[i])
             self.slot_q[i] = None
         for i, q in admit:
@@ -408,10 +447,15 @@ class EmbeddingServeEngine:
             snap = self.slot_q[chunks[0][0]].snap
             ids = np.concatenate([self.slot_q[i].node_ids[lo:hi]
                                   for i, lo, hi in chunks])
-            try:
-                rows = snap.lookup(ids, level)
-            except SnapshotMiss:
-                rows = None
+            gsp = obs.span("serve.gather")
+            if gsp:
+                gsp.set(rows=int(ids.size), level=level,
+                        n_queries=len(chunks))
+            with gsp:
+                try:
+                    rows = snap.lookup(ids, level)
+                except SnapshotMiss:
+                    rows = None
             if rows is not None:
                 off = 0
                 for i, lo, hi in chunks:

@@ -60,6 +60,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.api.registry import (ADMISSIONS, EVICT_POLICIES,
                                 register_admission, register_evict_policy)
 
@@ -280,6 +281,9 @@ class EmbeddingStore:
         n_hit = int(have.sum())
         self.hits += n_hit
         self.misses += local.size - n_hit
+        if obs.enabled():
+            obs.add("store.hits", n_hit)
+            obs.add("store.misses", local.size - n_hit)
         if n_hit == local.size:
             return data, mask, None
         need = np.unique(local[~have])
@@ -292,9 +296,12 @@ class EmbeddingStore:
         t0 = time.perf_counter()
         self._recompute_depth += 1
         try:
-            rows = np.asarray(
-                self.recompute(level, need + self.bounds[s], staged),
-                np.float32)
+            with obs.span("store.recompute") as rsp:
+                rows = np.asarray(
+                    self.recompute(level, need + self.bounds[s], staged),
+                    np.float32)
+                if rsp:
+                    rsp.set(level=level, shard=s, rows=int(need.size))
         finally:
             self._recompute_depth -= 1
         if self._recompute_depth == 0:
@@ -305,6 +312,9 @@ class EmbeddingStore:
             self.n_recompute_spans += 1
         self.n_recomputes += 1
         self.rows_recomputed += int(need.size)
+        if obs.enabled():
+            obs.add("store.recomputes")
+            obs.add("store.rows_recomputed", need.size)
         if staged and self._staged is not None:
             # an overlay read must never leak in-progress values into the
             # committed front (an abort would leave them behind) — admit
@@ -329,18 +339,22 @@ class EmbeddingStore:
         owner = self._owner(ids)
         self._gather_depth += 1
         try:
-            for s in np.unique(owner):
-                sel = owner == s
-                local = ids[sel] - self.bounds[s]
-                data, mask, admitted = self._ensure(level, int(s), local,
-                                                    staged)
-                out[sel] = data[local]
-                # the registered admission policy decides how much heat
-                # this touch contributes (see _probation_admission)
-                w = (self._admit_policy(local, admitted)
-                     if level > 0 and not staged else local.size)
-                self._heat[level, s] = self._heat_now(level, int(s)) + w
-                self._last[level, s] = self._tick
+            with obs.span("store.gather") as gsp:
+                for s in np.unique(owner):
+                    sel = owner == s
+                    local = ids[sel] - self.bounds[s]
+                    data, mask, admitted = self._ensure(level, int(s),
+                                                        local, staged)
+                    out[sel] = data[local]
+                    # the registered admission policy decides how much
+                    # heat this touch contributes (_probation_admission)
+                    w = (self._admit_policy(local, admitted)
+                         if level > 0 and not staged else local.size)
+                    self._heat[level, s] = self._heat_now(level, int(s)) + w
+                    self._last[level, s] = self._tick
+                if gsp:
+                    gsp.set(rows=int(ids.size), level=level,
+                            staged=staged)
         finally:
             self._gather_depth -= 1
         if self._gather_depth == 0:
@@ -472,10 +486,16 @@ class EmbeddingStore:
         if self._front[level][s] is None:
             return 0
         n = int(self._res[level, s])
-        self._front[level][s] = None
-        self._mask[level][s] = np.zeros(int(self._shard_rows[s]), bool)
-        self._res[level, s] = 0
-        self._heat[level, s] = 0.0
+        with obs.span("store.evict") as sp:
+            self._front[level][s] = None
+            self._mask[level][s] = np.zeros(int(self._shard_rows[s]),
+                                            bool)
+            self._res[level, s] = 0
+            self._heat[level, s] = 0.0
+            if sp:
+                sp.set(level=level, shard=s, rows=n)
+                obs.add("store.evictions")
+                obs.add("store.rows_evicted", n)
         self.n_evictions += 1
         self.rows_evicted += n
         return n

@@ -37,6 +37,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.api import (ConfigError, DealConfig, ExecutorSpec, GraphSpec,
                        ModelSpec, PartitionSpec, QoSSpec, Session,
                        StoreSpec, tenants_from_string)
@@ -106,36 +107,41 @@ def drive(eng: EmbeddingServeEngine, *, ticks: int = 50,
     uid = 0
     t0 = time.time()
     for tick in range(ticks):
-        n = eng.store.n_nodes           # grows under tail onboarding
-        for j in range(queries_per_tick):
-            # with QoS: first tenant gets interactive-sized queries,
-            # the rest get 8x scans (the batch/analytics side)
-            name = names[j % len(names)]
-            rows = (rows_per_query if name in (None, names[0])
-                    else 8 * rows_per_query)
-            q = Query(uid=uid, node_ids=rng.integers(0, n, rows))
-            if name is not None:
-                q.tenant = name
-            eng.submit(q)
-            uid += 1
-        if mutations_per_tick:
-            k = mutations_per_tick
-            eng.mutate().add_edges(rng.integers(0, n, k),
-                                   rng.integers(0, n, k))
-        if nodes_per_tick:
-            d = eng.store.level_dim(0)
-            # ids are assigned at refresh time, AFTER earlier pending
-            # adds — offset by them so each tick wires its OWN nodes
-            start = n + eng.log.pending_node_adds
-            eng.mutate().add_nodes(
-                nodes_per_tick,
-                rng.standard_normal((nodes_per_tick, d),
-                                    dtype=np.float32))
-            eng.mutate().add_edges(
-                rng.integers(0, n, nodes_per_tick),
-                np.arange(start, start + nodes_per_tick))
-        eng.step()
-    eng.run()                       # drain
+        with obs.span("serve.tick") as tsp:
+            n = eng.store.n_nodes       # grows under tail onboarding
+            for j in range(queries_per_tick):
+                # with QoS: first tenant gets interactive-sized queries,
+                # the rest get 8x scans (the batch/analytics side)
+                name = names[j % len(names)]
+                rows = (rows_per_query if name in (None, names[0])
+                        else 8 * rows_per_query)
+                q = Query(uid=uid, node_ids=rng.integers(0, n, rows))
+                if name is not None:
+                    q.tenant = name
+                eng.submit(q)
+                uid += 1
+            if mutations_per_tick:
+                k = mutations_per_tick
+                eng.mutate().add_edges(rng.integers(0, n, k),
+                                       rng.integers(0, n, k))
+            if nodes_per_tick:
+                d = eng.store.level_dim(0)
+                # ids are assigned at refresh time, AFTER earlier
+                # pending adds — offset by them so each tick wires its
+                # OWN nodes
+                start = n + eng.log.pending_node_adds
+                eng.mutate().add_nodes(
+                    nodes_per_tick,
+                    rng.standard_normal((nodes_per_tick, d),
+                                        dtype=np.float32))
+                eng.mutate().add_edges(
+                    rng.integers(0, n, nodes_per_tick),
+                    np.arange(start, start + nodes_per_tick))
+            eng.step()
+            if tsp:
+                tsp.set(tick=tick)
+    with obs.span("serve.drain"):
+        eng.run()                   # drain
     dt = time.time() - t0
     n = eng.store.n_nodes
     s = eng.stats()
@@ -245,6 +251,10 @@ def main():
                     help="multi-tenant QoS: 'name:priority:slot_quota:"
                          "rate:slo,...' (rate 0 = unlimited rows/step); "
                          "replaces the global --staleness-bound")
+    ap.add_argument("--trace", default=None, metavar="TRACE.json",
+                    help="enable telemetry and write a Chrome/Perfetto "
+                         "trace of the whole run (construct -> epoch -> "
+                         "serve loop) on exit; load at ui.perfetto.dev")
     args = ap.parse_args()
     try:
         cfg = (DealConfig.load(args.config) if args.config
@@ -266,11 +276,21 @@ def main():
         raise SystemExit("--nodes-per-tick is not supported with "
                          "--tenants yet: QoS engines refuse node adds "
                          "(lagged tenant views cannot address new ids)")
+    if args.trace:
+        cfg.telemetry.enabled = True
     s = _serve_session(cfg)
     drive(s.engine, ticks=args.ticks,
           queries_per_tick=args.queries_per_tick,
           mutations_per_tick=args.mutations_per_tick,
           nodes_per_tick=args.nodes_per_tick)
+    if args.trace:
+        doc = s.dump_trace(args.trace)
+        tr = s.telemetry.tracer
+        lo, hi = tr.window_ns()
+        print(f"[trace] wrote {args.trace}: "
+              f"{len(doc['traceEvents'])} events, "
+              f"coverage {tr.coverage():.2f} over "
+              f"{(hi - lo) / 1e6:.0f}ms")
 
 
 if __name__ == "__main__":
