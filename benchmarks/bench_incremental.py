@@ -45,7 +45,7 @@ BUDGET_FRACS = (0.25, 0.5)     # eviction sweep: resident-row cap / level
 _DIST_SCRIPT = r"""
 import numpy as np, time
 from repro.api import (DealConfig, ExecutorSpec, GraphSpec, ModelSpec,
-                       PartitionSpec, Session)
+                       PartitionSpec, RefreshSpec, Session)
 from repro.gnnserve import (DeltaReinference, MutationLog,
                             apply_edge_mutations, store_from_inference)
 
@@ -53,12 +53,17 @@ SMOKE = @SMOKE@
 N = 1024 if SMOKE else 4096
 FANOUT, LAYERS, D = 4, 3, 64
 FRACTIONS = (0.01,) if SMOKE else (0.001, 0.005, 0.01, 0.05)
+# dist_local_cutover: a refresh layer whose gathered universe is under
+# 2048 rows runs on the local executor — mesh collective setup + cold
+# subset plans cost ~10x the compute at the frac<=0.001 frontier sizes
+# (2048 covers every layer of the frac 0.001 refreshes at N=4096)
 sess = Session.build(DealConfig(
     graph=GraphSpec(dataset="rmat", n_nodes=N, avg_degree=14,
                     fanout=FANOUT, seed=0),
     model=ModelSpec(name="gcn", n_layers=LAYERS, d_feature=D),
     partition=PartitionSpec(p=4, m=2),
-    executor=ExecutorSpec(name="dist", fallback_to_ref=False)))
+    executor=ExecutorSpec(name="dist", fallback_to_ref=False),
+    refresh=RefreshSpec(dist_local_cutover=2048)))
 sess.serve()
 g, src, dst = sess.graph, sess.src, sess.dst
 ri, store, params = sess.reinfer, sess.store, sess.params
@@ -102,7 +107,10 @@ for frac in FRACTIONS:
     t_full = sorted(tf)[len(tf) // 2]
     print(f"CSV,incremental/delta_frac{frac}_dist,{t*1e6:.1f},"
           f"frontier={max(stats['frontier_sizes'])}/{N} "
-          f"rows_gemm={stats['rows_gemm']}")
+          f"rows_gemm={stats['rows_gemm']} "
+          f"route_local={stats['n_local_cutovers']} "
+          f"route_dist={stats['n_dist_layers']} "
+          f"cutover={stats['local_cutover']}")
     print(f"CSV,incremental/full_frac{frac}_dist,{t_full*1e6:.1f},"
           f"rows_gemm={N * LAYERS}")
     print(f"CSV,incremental/speedup_frac{frac}_dist,"

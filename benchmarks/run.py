@@ -40,6 +40,7 @@ MODULES = {
     "fig3": "benchmarks.bench_breakdown",
     "incremental": "benchmarks.bench_incremental",
     "qos": "benchmarks.bench_qos",
+    "kernels": "benchmarks.bench_kernels",
 }
 ALIASES = {"e2e": "fig14"}
 

@@ -162,7 +162,8 @@ class Session:
         self.reinfer = DeltaReinference(
             [copy.deepcopy(lg) for lg in self.layer_graphs],
             cfg.model.name, self.params,
-            sample_seed=cfg.refresh.sample_seed, executor=self.executor)
+            sample_seed=cfg.refresh.sample_seed, executor=self.executor,
+            local_cutover=cfg.refresh.dist_local_cutover)
         t0 = time.perf_counter()
         with obs.span("serve.epoch") as sp:
             levels = self.reinfer.full_levels(self.X)
@@ -236,6 +237,10 @@ class Session:
             engine_stats = self._engine.stats()
             refresh_stats = self._engine.last_refresh_stats
             out.update(engine_stats)
+            out["refresh_cutover"] = {
+                "threshold": self.reinfer.local_cutover,
+                "n_local": self.reinfer.n_local_cutovers,
+                "n_dist": self.reinfer.n_dist_layers}
         out["plan_cache"] = subset_plan_cache_stats()
         out["metrics"] = compat.unified_metrics(
             engine_stats=engine_stats,

@@ -139,3 +139,48 @@ def _fused_load(files, n_machines: int, N: int, D: int, w: np.ndarray):
              "file_rows": file_rows, "net_rows": 0, "table": table}
     _loader_span("fused", stats)
     return h1, stats
+
+
+def fused_load_spmm(files, n_machines: int, N: int, D: int, w: np.ndarray,
+                    lg, executor):
+    """FULLY fused §3.5: loader-order GEMM + table-indirect layer-1
+    aggregation — even the ``rows[table]`` copy that ``fused_load``
+    still materializes disappears.
+
+    The GEMM runs over rows IN LOADER ORDER (per-row dots don't care
+    about row order, so ``(rows @ w)[table[i]] == (rows[table] @ w)[i]``
+    bitwise) and the first aggregation consumes the location table
+    directly through ``DenseIO.table`` — the gather+spmm kernel on the
+    pallas executor, a lazy translated take on ref.  Returns the
+    aggregated layer-1 output (node order, pre-activation) plus stats.
+    ``lg`` is layer 1's sampled layer graph; ``executor`` a single-host
+    executor from ``core.ops``.
+    """
+    with obs.span("featprep.fused_spmm",
+                  {"n_machines": n_machines} if obs.enabled() else None):
+        return _fused_load_spmm(files, n_machines, N, D, w, lg, executor)
+
+
+def _fused_load_spmm(files, n_machines: int, N: int, D: int,
+                     w: np.ndarray, lg, executor):
+    from repro.core.ops import DenseIO      # lazy: avoid an import cycle
+
+    t0 = time.perf_counter()
+    loaded_ids, loaded_rows = [], []
+    file_rows = 0
+    for m in range(n_machines):
+        for f in files[m::n_machines]:
+            z = np.load(f)
+            loaded_ids.append(z["ids"]); loaded_rows.append(z["rows"])
+            file_rows += z["ids"].size
+    ids = np.concatenate(loaded_ids)
+    rows = np.concatenate(loaded_rows)
+    table = np.empty(N, np.int64)        # node id -> loader position
+    table[ids] = np.arange(ids.size)
+    h1_rows = executor.gemm(executor.prepare(rows), w)   # loader order!
+    io = DenseIO(lg.nbr, lg.mask, table=table)
+    agg = executor.spmm(h1_rows, io.mean_w, io)
+    stats = {"seconds": time.perf_counter() - t0,
+             "file_rows": file_rows, "net_rows": 0, "table": table}
+    _loader_span("fused_spmm", stats)
+    return agg, stats

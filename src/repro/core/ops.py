@@ -38,7 +38,7 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro import obs
+from repro import obs, tuning
 from repro.api.registry import EXECUTORS, register_executor
 from repro.core import primitives as prim
 from repro.core.gnn_models import (LayerSpec, ModelSpec, gat_head_scores,
@@ -46,6 +46,7 @@ from repro.core.gnn_models import (LayerSpec, ModelSpec, gat_head_scores,
 from repro.core.partition import build_plan, build_subset_plan_cached
 from repro.core.sampler import LayerGraph
 from repro.kernels import ops as kops
+from repro.kernels.spmm import auto_block_n
 
 
 # ----------------------------------------------------------------------
@@ -55,18 +56,40 @@ from repro.kernels import ops as kops
 class DenseIO:
     """Graph binding for the single-host executors: a fixed-fanout
     neighbor matrix whose ids index the spmm/sddmm source rows directly
-    (global ids in full-graph mode, universe positions in delta mode)."""
+    (global ids in full-graph mode, universe positions in delta mode).
 
-    def __init__(self, nbr: np.ndarray, mask: np.ndarray):
+    An optional ``table`` adds one level of indirection — the ids in
+    ``nbr`` index ``table`` and ``table[id]`` indexes the source rows
+    (loader order in §3.5 fused feature prep, universe positions in
+    delta refresh).  Executors with a fused gather kernel consume
+    ``table`` directly; everything else reads ``nbr_resolved``, which
+    materializes the translation lazily (and is bitwise-identical, so
+    the two routes interchange freely)."""
+
+    def __init__(self, nbr: np.ndarray, mask: np.ndarray, table=None):
         self.nbr_np = np.asarray(nbr)
         self.mask_np = np.asarray(mask)
         self.nbr = jnp.asarray(self.nbr_np)
         self.mask = jnp.asarray(self.mask_np)
+        self.table = (None if table is None
+                      else jnp.asarray(table, jnp.int32))
+        self._nbr_resolved = None
         self._mean_w = None
 
     @classmethod
     def from_layer_graph(cls, lg: LayerGraph) -> "DenseIO":
         return cls(lg.nbr, lg.mask)
+
+    @property
+    def nbr_resolved(self):
+        """``nbr`` with the table indirection applied (identity when no
+        table) — the materialized-gather fallback path."""
+        if self.table is None:
+            return self.nbr
+        if self._nbr_resolved is None:
+            self._nbr_resolved = jnp.take(
+                self.table, self.nbr.reshape(-1)).reshape(self.nbr.shape)
+        return self._nbr_resolved
 
     @property
     def mean_w(self):
@@ -95,10 +118,31 @@ class DistIO:
 # spec interpreter
 # ----------------------------------------------------------------------
 
+def _fusable_attn_pair(ex, layer: LayerSpec, i: int) -> bool:
+    """True when ops[i] is an (attn_scores -> edge_softmax) pair the
+    executor can collapse into one ``attn_scores_softmax`` call: the
+    softmax must be the ONLY consumer of the raw scores (they are never
+    materialized on the fused path)."""
+    ops = layer.ops
+    if (getattr(ex, "attn_scores_softmax", None) is None
+            or ops[i].kind != "attn_scores" or i + 1 >= len(ops)
+            or ops[i + 1].kind != "edge_softmax"
+            or ops[i + 1].src[0] != ops[i].out):
+        return False
+    readers = [op for j, op in enumerate(ops)
+               if j != i + 1 and ops[i].out in op.src]
+    return not readers and layer.out != ops[i].out
+
+
 def run_layer(ex, layer: LayerSpec, io, h_tgt, h_src, heads: int = 1):
     """Execute one LayerSpec.  ``h_tgt``/``h_src`` may be zero-arg
     callables, resolved on first use (delta refresh reads target rows
-    from the store only for models that reference them)."""
+    from the store only for models that reference them).
+
+    Peephole: an (attn_scores -> edge_softmax) pair collapses into one
+    ``attn_scores_softmax`` call when the executor exposes it (the
+    fused SDDMM+softmax kernel) — the (N, F) score tensor never
+    round-trips through HBM."""
     env: Dict[str, Any] = {"h_tgt": h_tgt, "h_src": h_src}
 
     def get(name):
@@ -108,29 +152,41 @@ def run_layer(ex, layer: LayerSpec, io, h_tgt, h_src, heads: int = 1):
             env[name] = v
         return v
 
-    for op in layer.ops:
-        with obs.span("ops." + op.kind) as sp:
-            if op.kind == "gemm":
+    skip = -1
+    for i, op in enumerate(layer.ops):
+        if i == skip:
+            continue
+        kind = op.kind
+        out_slot = op.out
+        if _fusable_attn_pair(ex, layer, i):
+            kind = "attn_scores_softmax"
+            out_slot = layer.ops[i + 1].out
+            skip = i + 1
+        with obs.span("ops." + kind) as sp:
+            if kind == "gemm":
                 out = ex.gemm(get(op.src[0]), op.param)
-            elif op.kind == "spmm":
+            elif kind == "spmm":
                 out = ex.spmm(get(op.src[0]), io.mean_w, io)
-            elif op.kind == "add":
+            elif kind == "add":
                 out = get(op.src[0]) + get(op.src[1])
-            elif op.kind == "attn_scores":
+            elif kind == "attn_scores":
                 out = ex.attn_scores(get(op.src[0]), get(op.src[1]), io,
                                      heads)
-            elif op.kind == "edge_softmax":
+            elif kind == "attn_scores_softmax":
+                out = ex.attn_scores_softmax(get(op.src[0]),
+                                             get(op.src[1]), io, heads)
+            elif kind == "edge_softmax":
                 out = ex.edge_softmax(get(op.src[0]), io)
-            elif op.kind == "attend":
+            elif kind == "attend":
                 out = ex.attend(get(op.src[0]), get(op.src[1]), io, heads)
             else:
-                raise ValueError(f"unknown layer op {op.kind!r}")
+                raise ValueError(f"unknown layer op {kind!r}")
             if sp:
                 # make the span honest under async dispatch; value-neutral
                 out = jax.block_until_ready(out)
                 sp.set(executor=getattr(ex, "name", type(ex).__name__),
                        rows=int(out.shape[0]))
-        env[op.out] = out
+        env[out_slot] = out
     return env[layer.out]
 
 
@@ -165,12 +221,12 @@ class RefExecutor:
         return prim.ref_gemm(H, jnp.asarray(W))
 
     def spmm(self, H_src, w_edge, io: DenseIO):
-        return prim.ref_spmm(H_src, w_edge, io.nbr, io.mask)
+        return prim.ref_spmm(H_src, w_edge, io.nbr_resolved, io.mask)
 
     def attn_scores(self, q, k, io: DenseIO, heads: int):
         """Per-head scaled dot scores (R, F, h); k rows may outnumber q
         rows (universe gather)."""
-        return gat_head_scores(q, k, io.nbr, io.mask, heads)
+        return gat_head_scores(q, k, io.nbr_resolved, io.mask, heads)
 
     def edge_softmax(self, s, io: DenseIO):
         return masked_softmax(s.transpose(0, 2, 1),
@@ -179,7 +235,8 @@ class RefExecutor:
     def attend(self, alpha, v, io: DenseIO, heads: int):
         D = v.shape[-1]
         dh = D // heads
-        vn = jnp.take(v.reshape(-1, heads, dh), io.nbr.reshape(-1),
+        vn = jnp.take(v.reshape(-1, heads, dh),
+                      io.nbr_resolved.reshape(-1),
                       axis=0).reshape(io.nbr.shape + (heads, dh))
         return jnp.einsum("nfh,nfhd->nhd", alpha, vn).reshape(
             alpha.shape[0], D)
@@ -189,70 +246,165 @@ class RefExecutor:
 # PallasExecutor — the kernels in kernels/ (compiled on TPU)
 # ----------------------------------------------------------------------
 
+def pad_to_blocks(block_n: int, nbr, mask, *row_arrays):
+    """Pad the leading (row) axis of graph-shaped arrays to the next
+    ``block_n`` multiple — the ONE pad-to-block helper every Pallas
+    call site shares.  ``nbr`` pads with 0 (a valid in-range id) and
+    ``mask`` with False, so padded slots contribute exactly 0.0 and the
+    output slice-back is value-neutral.  Returns (Rp, nbr, mask,
+    *row_arrays) with every extra array zero-padded the same way."""
+    R = nbr.shape[0]
+    Rp = -(-R // block_n) * block_n
+
+    def pad(a, fill=0):
+        if a.shape[0] == Rp:
+            return a
+        widths = [(0, Rp - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
+        return jnp.pad(a, widths, constant_values=fill)
+
+    return (Rp, pad(nbr), pad(mask, fill=False)) + tuple(
+        pad(a) for a in row_arrays)
+
+
 class PallasExecutor(RefExecutor):
     """Routes spmm/sddmm through the Pallas kernels (``kernels.ops``
     dispatch: compiled on TPU, interpret mode elsewhere).  GEMM stays on
     XLA's MXU path — a hand-written matmul kernel would only lose.
-    Rows are padded to ``block_n`` multiples and feature columns to a
-    block that divides them, then sliced back — non-aligned shapes work.
+    Rows are padded to block multiples and feature columns to a block
+    that divides them, then sliced back — non-aligned shapes just work.
+
+    ``fused_gather``: consume ``DenseIO.table`` via the fused
+    gather+spmm kernel instead of materializing ``nbr_resolved``
+    (bitwise-identical — same per-row accumulation order, masked slots
+    multiply by exact 0.0).  ``fused_attention``: collapse GAT's
+    attn_scores -> edge_softmax into the one-pass SDDMM+softmax kernel
+    (all heads per call, no HBM score round-trip) via the ``run_layer``
+    peephole.  ``block_table``: a ``tuning.BlockTable`` source
+    ("default" = configs/tuned_blocks.json) consulted per (kernel,
+    shape-bucket, dtype) at bind time; block sizes never change the
+    per-row accumulation order, so tuned vs untuned is bitwise too.
+    ``block_n=None`` auto-sizes from the padded row count.
     """
 
     name = "pallas"
 
-    def __init__(self, block_n: int = 8, block_d: int = 128,
-                 use_kernel: bool = True):
+    def __init__(self, block_n: Optional[int] = None, block_d: int = 128,
+                 use_kernel: bool = True, fused_gather: bool = True,
+                 fused_attention: bool = True, block_table=None):
         self.block_n = block_n
         self.block_d = block_d
         self.use_kernel = use_kernel
+        self.fused_gather = fused_gather
+        self.fused_attention = fused_attention
+        self._blocks = tuning.resolve_block_table(block_table)
+        self._block_memo: Dict[Tuple, Tuple] = {}
 
-    def _pad_rows(self, a, R_pad, fill=0):
-        if a.shape[0] == R_pad:
-            return a
-        pad = [(0, R_pad - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
-        return jnp.pad(a, pad, constant_values=fill)
+    def _pick_blocks(self, kernel: str, R: int, D: int,
+                     dtype) -> Tuple[Optional[int], int]:
+        """(block_n, block_d) for one call site: tuned table entry if
+        bound, else the constructor values (block_n None -> auto)."""
+        key = (kernel, tuning.shape_bucket(R), tuning.shape_bucket(D),
+               jnp.dtype(dtype).name)
+        got = self._block_memo.get(key)
+        if got is None:
+            tuned = {}
+            if self._blocks is not None:
+                tuned = self._blocks.lookup(kernel, N=R, D=D,
+                                            dtype=key[3]) or {}
+            got = (tuned.get("block_n", self.block_n),
+                   tuned.get("block_d", self.block_d))
+            self._block_memo[key] = got
+        return got
 
-    def _spmm_kernel(self, H_src, w_edge, nbr, mask):
+    def _row_block(self, bn: Optional[int], R: int) -> Tuple[int, int]:
+        """(pad multiple, kernel row block).  An explicit/tuned block is
+        both; None pads to the f32 sublane tile (8) and lets
+        ``auto_block_n`` take the largest divisor of the padded count."""
+        if bn is not None:
+            return bn, bn
+        Rp = -(-R // 8) * 8
+        return 8, auto_block_n(Rp)
+
+    def _spmm_kernel(self, H_src, w_edge, nbr, mask, table=None):
         R, F = nbr.shape
         D = H_src.shape[1]
-        Rp = -(-R // self.block_n) * self.block_n
-        bd = math.gcd(D, self.block_d)
+        kernel = "gather_spmm" if table is not None else "spmm"
+        bn, bd0 = self._pick_blocks(kernel, R, D, H_src.dtype)
+        pad_n, block_n = self._row_block(bn, R)
+        _, nbr, mask, w_edge = pad_to_blocks(pad_n, nbr, mask, w_edge)
+        bd = math.gcd(D, bd0)
         Dp = D
         if bd < 8:                       # awkward width: pad columns
             Dp = -(-D // 8) * 8
-            bd = math.gcd(Dp, self.block_d)
+            bd = math.gcd(Dp, bd0)
             H_src = jnp.pad(H_src, ((0, 0), (0, Dp - D)))
-        out = kops.spmm(H_src, self._pad_rows(w_edge, Rp),
-                        self._pad_rows(nbr, Rp),
-                        self._pad_rows(mask, Rp, fill=False),
-                        use_kernel=self.use_kernel,
-                        block_n=self.block_n, block_d=bd)
+        if table is not None:
+            out = kops.gather_spmm(H_src, table, w_edge, nbr, mask,
+                                   use_kernel=self.use_kernel,
+                                   block_n=block_n, block_d=bd)
+        else:
+            out = kops.spmm(H_src, w_edge, nbr, mask,
+                            use_kernel=self.use_kernel,
+                            block_n=block_n, block_d=bd)
         return out[:R, :D]
 
     def spmm(self, H_src, w_edge, io: DenseIO):
-        return self._spmm_kernel(H_src, w_edge, io.nbr, io.mask)
+        if self.fused_gather and io.table is not None:
+            return self._spmm_kernel(H_src, w_edge, io.nbr, io.mask,
+                                     table=io.table)
+        return self._spmm_kernel(H_src, w_edge, io.nbr_resolved, io.mask)
 
     def attn_scores(self, q, k, io: DenseIO, heads: int):
-        """Per-head SDDMM kernel calls over head-major column slices."""
+        """Per-head SDDMM kernel calls over head-major column slices
+        (the UNFUSED score path — kept for specs that consume raw
+        scores; the peephole routes GAT through
+        ``attn_scores_softmax``)."""
         R = io.nbr.shape[0]
         D = q.shape[1]
         dh = D // heads
-        Rp = -(-R // self.block_n) * self.block_n
-        nbr = self._pad_rows(io.nbr, Rp)
-        mask = self._pad_rows(io.mask, Rp, fill=False)
-        qp = self._pad_rows(q, Rp)
+        bn, _ = self._pick_blocks("sddmm", R, dh, q.dtype)
+        pad_n, block_n = self._row_block(bn, R)
+        _, nbr, mask, qp = pad_to_blocks(pad_n, io.nbr_resolved, io.mask,
+                                         q)
         per_head = [kops.sddmm(qp[:, h * dh:(h + 1) * dh],
                                k[:, h * dh:(h + 1) * dh], nbr, mask,
                                use_kernel=self.use_kernel,
-                               block_n=self.block_n)
+                               block_n=block_n)
                     for h in range(heads)]
         s = jnp.stack(per_head, axis=-1)[:R]            # (R, F, h)
         return s / jnp.sqrt(jnp.float32(dh))
 
+    @property
+    def attn_scores_softmax(self):
+        """Fused SDDMM + masked-softmax entry the ``run_layer`` peephole
+        probes for; None (= disabled) when fusion is off."""
+        if not self.fused_attention:
+            return None
+        return self._attn_scores_softmax
+
+    def _attn_scores_softmax(self, q, k, io: DenseIO, heads: int):
+        R = io.nbr.shape[0]
+        D = q.shape[1]
+        bn, _ = self._pick_blocks("gat_attention", R, D // heads,
+                                  q.dtype)
+        pad_n, block_n = self._row_block(bn, R)
+        _, nbr, mask, qp = pad_to_blocks(pad_n, io.nbr_resolved, io.mask,
+                                         q)
+        alpha = kops.gat_attention(qp, k, nbr, mask, heads=heads,
+                                   use_kernel=self.use_kernel,
+                                   block_n=block_n)
+        return alpha[:R]
+
     def attend(self, alpha, v, io: DenseIO, heads: int):
         D = v.shape[-1]
         dh = D // heads
+        nbr = io.nbr if (self.fused_gather and io.table is not None) \
+            else io.nbr_resolved
+        table = io.table if (self.fused_gather and io.table is not None) \
+            else None
         outs = [self._spmm_kernel(v[:, h * dh:(h + 1) * dh],
-                                  alpha[..., h], io.nbr, io.mask)
+                                  alpha[..., h], nbr, io.mask,
+                                  table=table)
                 for h in range(heads)]
         return jnp.concatenate(outs, axis=-1)
 

@@ -255,7 +255,8 @@ class DeltaReinference:
     """
 
     def __init__(self, layer_graphs: Sequence[LayerGraph], model: str,
-                 params, *, sample_seed: int = 0, executor="ref"):
+                 params, *, sample_seed: int = 0, executor="ref",
+                 local_cutover: int = 0):
         # model resolves through the registry below (model_spec raises
         # with every registered name on a typo)
         self.layer_graphs = list(layer_graphs)
@@ -267,6 +268,18 @@ class DeltaReinference:
         self.rows_gemm = 0
         self.rev_rebuilds = 0
         self.rev_splices = 0
+        # frontier-size cutover (dist executor only): a layer whose
+        # universe (rows_gemm unit) is below the threshold routes to a
+        # lazily-built LOCAL executor instead of the mesh — collective
+        # setup + cold subset plans dominate tiny frontiers.  0 = off
+        # (the default: routing changes which reduction produced the
+        # bits, so dist-vs-dist bitwise equivalence only holds with the
+        # cutover disabled or thresholds equal).
+        self.local_cutover = int(local_cutover)
+        self.n_local_cutovers = 0
+        self.n_dist_layers = 0
+        self._local_ex = None
+        self._table_pool: List[np.ndarray] = []
         self._rev: List[Optional[ReverseIndex]] = \
             [None] * len(self.layer_graphs)
 
@@ -279,6 +292,26 @@ class DeltaReinference:
             self._rev[l] = build_reverse_index(self.layer_graphs[l])
             self.rev_rebuilds += 1
         return self._rev[l]
+
+    def _local_executor(self):
+        """The single-host executor tiny dist frontiers cut over to."""
+        if self._local_ex is None:
+            self._local_ex = get_executor("ref")
+        return self._local_ex
+
+    def _scratch_table(self, n: int) -> np.ndarray:
+        """Node-count-sized int32 scratch for the fused id translation,
+        drawn from a pool (``_layer_rows`` returns it after resetting
+        its touched entries to 0, so stale ids always map to a valid
+        position).  A pool rather than one persistent buffer because
+        recompute-on-miss re-enters ``_layer_rows`` mid-layer on a
+        budgeted store — the outer layer's table must survive the inner
+        call."""
+        while self._table_pool:
+            t = self._table_pool.pop()
+            if t.size >= n:
+                return t
+        return np.zeros(max(n, 1), np.int32)
 
     # -- incremental node onboarding ------------------------------------
     def extend_nodes(self, n_new: int) -> None:
@@ -348,21 +381,51 @@ class DeltaReinference:
         layer = spec.layers[l]
         ex = self.executor
 
-        if isinstance(ex, DistExecutor):
-            h, take, n_src = ex.run_rows(layer, lg, rows, read_level, l,
-                                         spec.heads)
-            self.rows_gemm += n_src
-            if l < L - 1:
-                h = spec.activation(h)
-            return np.asarray(jax.block_until_ready(h))[take]
-
         F = lg.fanout
         nbrs = lg.nbr[rows][lg.mask[rows]]
         U = np.unique(np.concatenate([rows, nbrs.astype(np.int64)]))
+
+        if isinstance(ex, DistExecutor):
+            if self.local_cutover and U.size < self.local_cutover:
+                # tiny frontier: the mesh's collective setup + cold
+                # subset plan costs more than just computing locally
+                self.n_local_cutovers += 1
+                with obs.span("refresh.route") as sp:
+                    if sp:
+                        sp.set(route="local", layer=l,
+                               rows=int(rows.size), universe=int(U.size),
+                               threshold=self.local_cutover)
+                ex = self._local_executor()
+            else:
+                self.n_dist_layers += 1
+                if self.local_cutover:
+                    with obs.span("refresh.route") as sp:
+                        if sp:
+                            sp.set(route="dist", layer=l,
+                                   rows=int(rows.size),
+                                   universe=int(U.size),
+                                   threshold=self.local_cutover)
+                h, take, n_src = ex.run_rows(layer, lg, rows, read_level,
+                                             l, spec.heads)
+                self.rows_gemm += n_src
+                if l < L - 1:
+                    h = spec.activation(h)
+                return np.asarray(jax.block_until_ready(h))[take]
+
         R, Rp = rows.size, _pow2(rows.size)
         Up = _pow2(U.size)
-        pos = np.zeros((Rp, F), np.int32)
-        pos[:R] = _remap(lg.nbr[rows], lg.mask[rows], U)
+        # FUSED id translation: instead of densely remapping every
+        # neighbor slot onto universe positions (an O(R*F log U)
+        # searchsorted), hand the executor the GLOBAL neighbor ids plus
+        # a scratch table with table[U] = universe positions — the
+        # translation rides layer-1's gather (gather_spmm kernel on the
+        # pallas path, a lazy take on ref).  Ids outside U (stale masked
+        # slots, pad rows) read the scratch's resting 0, exactly the
+        # position-0 pin `_remap` applied, so the bits cannot change.
+        table = self._scratch_table(lg.nbr.shape[0])
+        table[U] = np.arange(U.size, dtype=np.int32)
+        nbr_np = np.zeros((Rp, F), np.int32)
+        nbr_np[:R] = lg.nbr[rows]
         mask_np = np.zeros((Rp, F), bool)
         mask_np[:R] = lg.mask[rows]
         # pad with rows already being read (NOT row 0): on a budgeted
@@ -372,13 +435,21 @@ class DeltaReinference:
         U_p = np.concatenate([U, np.full(Up - U.size, U[0], np.int64)])
         self.rows_gemm += int(U.size)
 
-        io = DenseIO(pos, mask_np)
+        io = DenseIO(nbr_np, mask_np, table=table)
         h_src = jnp.asarray(read_level(l, U_p))
         h_tgt = lambda: jnp.asarray(read_level(l, rows_p))  # noqa: E731
-        h = run_layer(ex, layer, io, h_tgt, h_src, spec.heads)
-        if l < L - 1:
-            h = spec.activation(h)
-        return np.asarray(jax.block_until_ready(h))[:R]
+        try:
+            h = run_layer(ex, layer, io, h_tgt, h_src, spec.heads)
+            if l < L - 1:
+                h = spec.activation(h)
+            out = np.asarray(jax.block_until_ready(h))[:R]
+        finally:
+            # reset AFTER the compute is done: jnp.asarray may alias the
+            # scratch buffer zero-copy on CPU, so an early reset would
+            # corrupt the very table the ops are reading
+            table[U] = 0
+            self._table_pool.append(table)
+        return out
 
     # -- row-level recompute (decoupled from mutation batches) ----------
     def recompute_rows(self, store: EmbeddingStore, level: int,
@@ -487,7 +558,10 @@ class DeltaReinference:
                 "n_resampled": int(resampled.size),
                 "n_feat_updates": int(feat_ids.size),
                 "rev_splices": self.rev_splices,
-                "rev_rebuilds": self.rev_rebuilds}
+                "rev_rebuilds": self.rev_rebuilds,
+                "local_cutover": self.local_cutover,
+                "n_local_cutovers": self.n_local_cutovers,
+                "n_dist_layers": self.n_dist_layers}
 
 
 # ----------------------------------------------------------------------

@@ -10,6 +10,8 @@ import jax
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.gat_attention import gat_attention as _gat_attention
+from repro.kernels.gather_spmm import gather_spmm as _gather_spmm
 from repro.kernels.sddmm import sddmm as _sddmm
 from repro.kernels.spmm import spmm as _spmm
 
@@ -24,6 +26,25 @@ def spmm(h, w, nbr, mask, use_kernel: bool = False, **kw):
     if use_kernel:
         return _spmm(h, w, nbr, mask, interpret=True, **kw)
     return ref.spmm_ref(h, w, nbr, mask)
+
+
+def gather_spmm(h, table, w, nbr, mask, use_kernel: bool = False, **kw):
+    if _on_tpu():
+        return _gather_spmm(h, table, w, nbr, mask, interpret=False, **kw)
+    if use_kernel:
+        return _gather_spmm(h, table, w, nbr, mask, interpret=True, **kw)
+    return ref.gather_spmm_ref(h, table, w, nbr, mask)
+
+
+def gat_attention(q, k, nbr, mask, heads: int = 1, use_kernel: bool = False,
+                  **kw):
+    if _on_tpu():
+        return _gat_attention(q, k, nbr, mask, heads=heads, interpret=False,
+                              **kw)
+    if use_kernel:
+        return _gat_attention(q, k, nbr, mask, heads=heads, interpret=True,
+                              **kw)
+    return ref.gat_attention_ref(q, k, nbr, mask, heads)
 
 
 def sddmm(q, k, nbr, mask, use_kernel: bool = False, **kw):

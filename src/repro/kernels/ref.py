@@ -35,6 +35,43 @@ def sddmm_ref(q, k, nbr, mask):
     return (out * mask).astype(jnp.float32)
 
 
+def gather_spmm_ref(h, table, w, nbr, mask):
+    """out[i] = sum_f w[i,f] * mask[i,f] * h[table[nbr[i,f]]].
+
+    The fused-gather SPMM oracle: ``nbr`` carries UNTRANSLATED ids (global
+    node ids, loader-order ids, ...) and ``table`` maps them onto rows of
+    ``h`` — the indirection the Deal §3.5 fusion pushes into layer-1's
+    gather instead of materializing ``h[table]``.  Resolving the ids and
+    calling ``spmm_ref`` is bitwise-identical to gathering from a
+    materialized reorder, because the per-row reductions see the same
+    values in the same order.  Masked slots may map anywhere in-range:
+    their coefficient is exactly 0.0 and adding 0.0 is exact.
+    """
+    idx = jnp.take(jnp.asarray(table), nbr.reshape(-1)).reshape(nbr.shape)
+    return spmm_ref(h, w, idx, mask)
+
+
+def gat_attention_ref(q, k, nbr, mask, heads: int):
+    """Fused GAT edge attention oracle: per-head scaled dot scores +
+    masked edge softmax in one pass — alpha (N, F, heads) f32.
+
+    Matches ``gnn_models.gat_head_scores`` -> ``masked_softmax``
+    op-for-op (same f32 dot, same /sqrt(dh), same -1e30 fill, same
+    softmax), so the fused Pallas kernel and the unfused two-op spec
+    path verify against the same math.
+    """
+    N, D = q.shape
+    dh = D // heads
+    qh = q.reshape(N, heads, dh).astype(jnp.float32)
+    kh = k.reshape(-1, heads, dh).astype(jnp.float32)
+    kn = jnp.take(kh, nbr.reshape(-1), axis=0).reshape(
+        nbr.shape + (heads, dh))
+    s = jnp.einsum("nhd,nfhd->nfh", qh, kn) / jnp.sqrt(jnp.float32(dh))
+    m = mask[:, :, None]
+    p = jax.nn.softmax(jnp.where(m, s, -1e30), axis=1)
+    return p * m
+
+
 def flash_attention_ref(q, k, v, *, causal=True):
     """q:(BH,Sq,hd) k,v:(BH,Skv,hd) — plain softmax attention, f32."""
     BH, Sq, hd = q.shape

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.spmm import auto_block_n
+
 
 def _sddmm_kernel(nbr_ref, mask_ref, q_ref, k_ref, o_ref, *, fanout: int,
                   block_n: int):
@@ -31,12 +33,16 @@ def _sddmm_kernel(nbr_ref, mask_ref, q_ref, k_ref, o_ref, *, fanout: int,
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def sddmm(q, k, nbr, mask, *, block_n: int = 8, interpret: bool = True):
+def sddmm(q, k, nbr, mask, *, block_n: int = None, interpret: bool = True):
     """q: (N, D); k: (U, D) source table; nbr, mask: (N, F) with ids into
     k's rows (U and N decouple for row-subset execution).  Returns (N, F)
-    f32 scores."""
+    f32 scores.  block_n=None picks the largest divisor of N <=64 —
+    the old fixed block_n=8 launched 8x more grid steps than needed on
+    typical pow2-padded row counts."""
     N, D = q.shape
     F = nbr.shape[1]
+    if block_n is None:
+        block_n = auto_block_n(N)
     assert N % block_n == 0, (N, block_n)
     grid = (N // block_n,)
     return pl.pallas_call(

@@ -21,6 +21,23 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def auto_block_n(n: int) -> int:
+    """Largest power-of-two node-block (<=64) that tiles n exactly.
+
+    The kernels grid over n // block_n, so block_n must divide n; callers
+    pad n to a multiple of 8 first (f32 sublane tile), which this floors
+    to.  Shared by spmm / sddmm / gather_spmm / gat_attention as the
+    default when no tuned block table overrides it.
+    """
+    for bn in (64, 32, 16, 8):
+        if n % bn == 0:
+            return bn
+    for bn in (4, 2, 1):
+        if n % bn == 0:
+            return bn
+    return 1
+
+
 def _spmm_kernel(nbr_ref, w_ref, h_ref, o_ref, *, block_d: int,
                  fanout: int, block_n: int):
     j = pl.program_id(1)
@@ -41,17 +58,20 @@ def _spmm_kernel(nbr_ref, w_ref, h_ref, o_ref, *, block_d: int,
 
 @functools.partial(jax.jit, static_argnames=("block_n", "block_d",
                                              "interpret"))
-def spmm(h, w, nbr, mask, *, block_n: int = 8, block_d: int = 128,
+def spmm(h, w, nbr, mask, *, block_n: int = None, block_d: int = 128,
          interpret: bool = True):
     """out[i] = sum_f w[i,f]*mask[i,f]*h[nbr[i,f]].
 
     h: (N, D) source-row table; w/mask/nbr: (R, F).  The output has R rows
     — R and N are decoupled so the layer-op executors can gather from a
     universe table while producing only the target rows (row-subset mode).
-    R % block_n == 0, D % block_d == 0.
+    R % block_n == 0 (block_n=None picks the largest divisor <=64),
+    D % block_d == 0.
     """
     N, D = h.shape
     R, F = nbr.shape
+    if block_n is None:
+        block_n = auto_block_n(R)
     assert R % block_n == 0 and D % block_d == 0, (R, D, block_n, block_d)
     wm = (w * mask).astype(h.dtype)
     grid = (R // block_n, D // block_d)

@@ -4,8 +4,9 @@ standalone shuffle pass is gone (Fig 13 / Fig 21)."""
 import numpy as np
 import pytest
 
-from repro.core.feature_prep import (fused_load, redistribute_load,
-                                     scan_all_load, write_feature_files)
+from repro.core.feature_prep import (fused_load, fused_load_spmm,
+                                     redistribute_load, scan_all_load,
+                                     write_feature_files)
 
 N, D, OUT, M = 256, 16, 8, 4
 
@@ -44,3 +45,32 @@ def test_scan_all_reads_everything_m_times(prepared):
     x, s = scan_all_load(files, M, N, D)
     np.testing.assert_array_equal(x, feats)
     assert s["file_rows"] == M * N and s["net_rows"] == 0
+
+
+@pytest.fixture(scope="module")
+def layer1(prepared):
+    from repro.core.graph import csr_from_edges, rmat_edges
+    from repro.core.sampler import sample_layer_graphs
+    src, dst = rmat_edges(N, N * 8, seed=3)
+    g = csr_from_edges(src, dst, N)
+    return sample_layer_graphs(g, fanout=4, n_layers=1, seed=1)[0]
+
+
+@pytest.mark.parametrize("executor", ["ref", "pallas"])
+def test_fused_spmm_bitwise_and_shuffle_free(prepared, layer1, executor):
+    """The FULLY fused loader (loader-order GEMM + table-indirect
+    aggregation) must be BITWISE equal to the materialized pipeline
+    through the same executor: per-row GEMM dots don't care about row
+    order, and the fused gather sees the same values in the same
+    reduction order.  And it still pays zero shuffle traffic."""
+    from repro.core.ops import DenseIO, get_executor
+    files, feats, w = prepared
+    ex = get_executor(executor)
+    agg, stats = fused_load_spmm(files, M, N, D, w, layer1, ex)
+
+    io = DenseIO.from_layer_graph(layer1)
+    want = np.asarray(ex.spmm(ex.gemm(ex.prepare(feats), w),
+                              io.mean_w, io))
+    np.testing.assert_array_equal(np.asarray(agg), want)
+    assert stats["net_rows"] == 0 and stats["file_rows"] == N
+    assert np.array_equal(np.sort(stats["table"]), np.arange(N))

@@ -9,6 +9,7 @@ import pytest
 from repro.core.gnn_models import init_gat, init_gcn, init_sage
 from repro.core.graph import csr_from_edges, rmat_edges
 from repro.core.layerwise import LOCAL_ENGINES
+from repro.core.ops import DistExecutor
 from repro.core.sampler import sample_layer_graphs
 from repro.gnnserve import (DeltaReinference, EmbeddingServeEngine,
                             EmbeddingStore, MutationLog, Query,
@@ -397,3 +398,69 @@ def test_engine_fresh_query_and_node_adds(world):
     eng.submit(Query(uid=1, node_ids=np.arange(4), fresh=True))
     with pytest.raises(NotImplementedError):
         eng.run()
+
+
+# ----------------------------------------------------------------------
+# frontier-size cutover (dist -> local routing for tiny frontiers)
+# ----------------------------------------------------------------------
+
+class _FakeDist(DistExecutor):
+    """A DistExecutor by type only: any mesh work explodes.  Lets the
+    cutover tests prove which route a layer actually took without
+    spinning up a mesh subprocess."""
+
+    def __init__(self):          # no mesh, no plan
+        pass
+
+    def run_rows(self, *a, **k):
+        raise AssertionError("dist path taken")
+
+
+def test_cutover_routes_tiny_frontiers_local(world):
+    """With the threshold above every universe size, all layers run on
+    the lazily-built local executor — bitwise-equal to a ref-executor
+    refresh — and the counters record the routing decision."""
+    g, src, dst, lgs, X = world
+    params = _params("gcn")
+    twins = {}
+    for name, ex, cut in (("cut", _FakeDist(), 10 ** 9), ("ref", "ref", 0)):
+        ri = DeltaReinference([copy.deepcopy(l) for l in lgs], "gcn",
+                              params, executor=ex, local_cutover=cut)
+        store = store_from_inference(
+            X, DeltaReinference(lgs, "gcn", params).full_levels(X)[1:],
+            n_shards=4)
+        g2 = g
+        rng = np.random.default_rng(11)
+        for _ in range(2):
+            batch = _mutate(rng, src, dst).drain()
+            g2 = apply_edge_mutations(g2, batch)
+            stats = ri.refresh(store, g2, batch.feat_ids, batch.feat_rows,
+                               batch.affected_dsts())
+        twins[name] = (store, stats)
+    store_c, stats_c = twins["cut"]
+    store_r, _ = twins["ref"]
+    assert stats_c["n_local_cutovers"] > 0
+    assert stats_c["n_dist_layers"] == 0
+    assert stats_c["local_cutover"] == 10 ** 9
+    ids = np.arange(N)
+    for lvl in range(L + 1):
+        np.testing.assert_array_equal(store_c.lookup(ids, lvl),
+                                      store_r.lookup(ids, lvl))
+
+
+def test_cutover_disabled_takes_dist_path(world):
+    """local_cutover=0 (the default) must leave routing untouched —
+    run_rows is reached, preserving dist-vs-dist bitwise equivalence."""
+    g, src, dst, lgs, X = world
+    params = _params("gcn")
+    ri = DeltaReinference([copy.deepcopy(l) for l in lgs], "gcn", params,
+                          executor=_FakeDist())
+    store = store_from_inference(
+        X, DeltaReinference(lgs, "gcn", params).full_levels(X)[1:],
+        n_shards=4)
+    rng = np.random.default_rng(11)
+    batch = _mutate(rng, src, dst).drain()
+    g2 = apply_edge_mutations(g, batch)
+    with pytest.raises(AssertionError, match="dist path taken"):
+        ri.refresh(store, g2, batch.feat_ids, batch.feat_rows,
+                   batch.affected_dsts())
