@@ -30,7 +30,19 @@ Wait and staleness are measured externally and identically for every
 run: wait = engine steps from submit to first gather (the pin), and
 observed staleness = mutation ops that arrived before the pin minus ops
 folded into the pinned epoch.
+
+A second study targets the INLINE-REFRESH STALL: with a >=5%-of-N
+feature burst refreshing every tick (triggered by tiny ``fresh=True``
+batch queries, so the strict tenant is never a refresh waiter), the
+strict tenant's WALL-CLOCK p95 queue wait is measured solo (no scans),
+multi (saturating scans, chunked refresh) and inline (same traffic,
+``chunk_rows=0``).  Asserted: chunked multi stays within 2x solo — the
+scheduler really does admit strict gathers between chunks — and the
+chunked engine's outputs are bitwise-equal to the inline engine's under
+identical traffic (chunking changes scheduling, never bits).
 """
+import time
+
 import numpy as np
 
 from benchmarks import common
@@ -48,29 +60,35 @@ BATCH_INFLIGHT = 4          # keep this many scans queued/active at once
 MUTS_PER_TICK = 2
 UI_SLO = 8
 BATCH_SLO = 100_000         # analytics can read arbitrarily stale rows
+CHUNK_ROWS = 256            # refresh chunk size for the stall study
+BURST_FRAC = 0.05           # feature-burst size, fraction of N
 
 
-def _cfg(n, *, seed=0, bound=UI_SLO, tenants="", executor="ref"):
+def _cfg(n, *, seed=0, bound=UI_SLO, tenants="", executor="ref",
+         chunk_rows=0):
     """The declarative world: equal configs build bitwise-identical
     Sessions, so every engine below gets its own Session instead of a
     hand-shared world."""
     from repro.api import (DealConfig, ExecutorSpec, GraphSpec, ModelSpec,
-                           QoSSpec, tenants_from_string)
+                           QoSSpec, RefreshSpec, tenants_from_string)
     return DealConfig(
         graph=GraphSpec(dataset="rmat", n_nodes=n, avg_degree=DEG,
                         fanout=FANOUT, seed=seed),
         model=ModelSpec(name="gcn", n_layers=LAYERS, d_feature=D),
         executor=ExecutorSpec(name=executor),
+        refresh=RefreshSpec(chunk_rows=chunk_rows),
         qos=QoSSpec(staleness_bound=bound, batch_slots=SLOTS,
                     rows_per_step=ROWS_PER_STEP,
                     tenants=(tenants_from_string(tenants)
                              if tenants else ())))
 
 
-def _engine(n, *, seed=0, bound=UI_SLO, tenants="", executor="ref"):
+def _engine(n, *, seed=0, bound=UI_SLO, tenants="", executor="ref",
+            chunk_rows=0):
     from repro.api import Session
     return Session.build(_cfg(n, seed=seed, bound=bound, tenants=tenants,
-                              executor=executor)).serve()
+                              executor=executor,
+                              chunk_rows=chunk_rows)).serve()
 
 
 class _Meter:
@@ -176,6 +194,160 @@ def _bitwise_phase(n, ticks, executor="ref", seed=23):
     return 1.0, ""
 
 
+def _drive_refresh(eng, n, ticks, steps_per_tick, *, with_batch, seed=31):
+    """The stall-study schedule: every tick a >=5%-of-N feature burst
+    lands and a tiny ``fresh=True`` batch query forces a refresh (the
+    batch tenant is the waiter, never ui), then the ui query arrives —
+    its WALL-CLOCK wait from submit to pin is what the chunking bounds.
+    Returns the list of ui waits in seconds."""
+    from repro.gnnserve import Query
+    rng = np.random.default_rng(seed)
+    burst = max(int(BURST_FRAC * n), 1)
+    uid = 0
+    waits, watch, batch_live = [], [], []
+
+    def pin_sweep():
+        now = time.perf_counter()
+        for q, t0 in watch[:]:
+            if q.served_version >= 0:
+                waits.append(now - t0)
+                watch.remove((q, t0))
+
+    def tick(measure):
+        nonlocal uid
+        fid = rng.choice(n, burst, replace=False)
+        eng.mutate().update_features(
+            fid, rng.standard_normal((burst, D)).astype(np.float32))
+        trig = Query(uid=uid, node_ids=rng.integers(0, n, 4),
+                     tenant="batch", fresh=True)
+        uid += 1
+        eng.submit(trig)
+        q = Query(uid=uid, node_ids=rng.integers(0, n, UI_ROWS),
+                  tenant="ui")
+        uid += 1
+        eng.submit(q)
+        if measure:
+            watch.append((q, time.perf_counter()))
+        if with_batch:
+            batch_live[:] = [b for b in batch_live if not b.done]
+            while len(batch_live) < BATCH_INFLIGHT:
+                b = Query(uid=uid, node_ids=rng.integers(0, n, BATCH_ROWS),
+                          tenant="batch")
+                uid += 1
+                eng.submit(b)
+                batch_live.append(b)
+        for _ in range(steps_per_tick):
+            eng.step()
+            if measure:
+                pin_sweep()
+
+    tick(measure=False)         # warmup: compiles the refresh buckets
+    eng.run()
+    for _ in range(ticks):
+        tick(measure=True)
+    guard = 0
+    while watch and guard < 10_000:
+        eng.step()
+        pin_sweep()
+        guard += 1
+    return waits
+
+
+def _chunked_bitwise_phase(n, ticks, executor="ref", seed=41):
+    """Chunked vs inline engine under identical traffic (scans, bursts,
+    fresh triggers, node adds): chunking moves work between steps, the
+    served bits per tenant must not move at all."""
+    from repro.gnnserve import Query
+    tenants = f"ui:4:2:0:{UI_SLO},batch:1:1:0:{BATCH_SLO}"
+    engines = {c: _engine(n, seed=3, tenants=tenants, chunk_rows=c,
+                          executor=executor)
+               for c in (0, CHUNK_ROWS)}
+    rng = np.random.default_rng(seed)
+    burst = max(int(BURST_FRAC * n), 1)
+    pairs = []
+    for tick in range(ticks):
+        fid = rng.choice(n, burst, replace=False)
+        feats = rng.standard_normal((burst, D)).astype(np.float32)
+        ids = {"ui": rng.integers(0, n, UI_ROWS),
+               "batch": rng.integers(0, n, 4 * UI_ROWS)}
+        row = {}
+        for c, eng in engines.items():
+            eng.mutate().update_features(fid, feats)
+            t = Query(uid=10 * tick, node_ids=ids["batch"][:4],
+                      tenant="batch", fresh=True)
+            eng.submit(t)
+            for j, name in enumerate(("ui", "batch")):
+                q = Query(uid=10 * tick + 1 + j, node_ids=ids[name],
+                          tenant=name)
+                eng.submit(q)
+                row.setdefault(name, []).append(q)
+            eng.run()
+        pairs.extend((name, qs[0], qs[1]) for name, qs in row.items())
+    stats = {c: eng.stats() for c, eng in engines.items()}
+    assert stats[CHUNK_ROWS]["n_refresh_chunks"] \
+        > stats[CHUNK_ROWS]["n_refreshes"], "chunking never engaged"
+    assert stats[0]["n_refresh_chunks"] == 0
+    for name, qi, qc in pairs:
+        assert qi.done and qc.done
+        if (qi.served_version != qc.served_version
+                or not np.array_equal(qi.out, qc.out)):
+            return 0.0, name
+    return 1.0, ""
+
+
+def _chunked_phase(n, smoke, executor="ref", suffix=""):
+    """The inline-refresh stall, measured and bounded: ui wall-clock p95
+    wait with chunked refresh under saturating scans must stay within 2x
+    of the scan-free solo run; the inline engine's wait under the same
+    traffic is emitted for contrast (unbounded by construction).
+
+    ui here is latency-strict but staleness-TOLERANT (its SLO absorbs
+    the bursts): every refresh is someone else's — the batch triggers
+    demand it, so ui is never a waiter and has no freshness reason to
+    queue behind the job.  Inline it queues anyway (the whole frontier
+    recomputes inside one step); chunked it pins between chunks."""
+    ticks = 6 if smoke else 24
+    steps_per_tick = 6
+    tenants = f"ui:4:2:0:{BATCH_SLO},batch:1:1:0:{BATCH_SLO}"
+
+    def p95(w):
+        return float(np.percentile(np.asarray(w, float), 95))
+
+    solo = _drive_refresh(
+        _engine(n, tenants=tenants, chunk_rows=CHUNK_ROWS,
+                executor=executor),
+        n, ticks, steps_per_tick, with_batch=False)
+    multi = _drive_refresh(
+        _engine(n, tenants=tenants, chunk_rows=CHUNK_ROWS,
+                executor=executor),
+        n, ticks, steps_per_tick, with_batch=True)
+    inline = _drive_refresh(
+        _engine(n, tenants=tenants, chunk_rows=0, executor=executor),
+        n, ticks, steps_per_tick, with_batch=True)
+
+    burst = max(int(BURST_FRAC * n), 1)
+    # absolute floor absorbs scheduler jitter on tiny smoke runs
+    cap = max(2.0 * p95(solo), p95(solo) + 0.05)
+    common.emit(f"qos/refresh_ui_wait_p95_solo{suffix}", 1e3 * p95(solo),
+                f"ms;burst={burst}rows/tick;chunk={CHUNK_ROWS}")
+    common.emit(f"qos/refresh_ui_wait_p95_chunked{suffix}", 1e3 * p95(multi),
+                f"ms;cap={1e3 * cap:.1f}ms;batch_inflight="
+                f"{BATCH_INFLIGHT}x{BATCH_ROWS}")
+    common.emit(f"qos/refresh_ui_wait_p95_inline{suffix}", 1e3 * p95(inline),
+                "ms;chunk=0;same_traffic;unbounded_stall")
+    assert p95(multi) <= cap, \
+        f"chunked refresh p95 wait {p95(multi):.3f}s exceeds {cap:.3f}s " \
+        "(solo x2): strict gathers are not being admitted between chunks"
+
+    ok, who = _chunked_bitwise_phase(512 if smoke else 1024,
+                                     4 if smoke else 8, executor=executor)
+    common.emit(f"qos/refresh_chunked_bitwise{suffix}", ok,
+                "chunked_vs_inline_engine"
+                + (f";diverged={who}" if who else ""))
+    assert ok == 1.0, \
+        f"tenant {who} diverged between chunked and inline refresh"
+
+
 def run(smoke: bool = False, executor: str = "ref"):
     if executor == "dist":
         print("# qos: dist executor exercised via the incremental bench; "
@@ -239,6 +411,9 @@ def run(smoke: bool = False, executor: str = "ref"):
                 "vs_single_tenant_engine_at_same_slo"
                 + (f";diverged={who}" if who else ""))
     assert ok == 1.0, f"tenant {who} diverged from its solo-SLO run"
+
+    # -- preemptible chunked refresh vs the inline stall ----------------
+    _chunked_phase(n, smoke, executor=executor, suffix=suffix)
 
 
 if __name__ == "__main__":

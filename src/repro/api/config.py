@@ -177,9 +177,17 @@ class RefreshSpec:
     universe is below ``dist_local_cutover`` rows runs on a local
     executor instead of the mesh (0 = never cut over; routing decisions
     surface in ``Session.stats()`` and the ``refresh.route`` trace
-    spans)."""
+    spans).
+
+    ``chunk_rows`` makes refresh preemptible under QoS: the delta
+    frontier splits into chunks of this many rows and the scheduler
+    interleaves them with tenant gathers, one chunk per serve step
+    (0 = the whole refresh runs inline inside one step).  Chunking is
+    bitwise-invariant — any value serves the exact bits of the inline
+    refresh."""
     sample_seed: int = 0
     dist_local_cutover: int = 0
+    chunk_rows: int = 0
 
 
 @dataclasses.dataclass
@@ -473,6 +481,9 @@ class DealConfig:
         if r.dist_local_cutover < 0:
             e.append(f"refresh.dist_local_cutover: must be >= 0 "
                      f"(0 = never cut over), got {r.dist_local_cutover}")
+        if r.chunk_rows < 0:
+            e.append(f"refresh.chunk_rows: must be >= 0 "
+                     f"(0 = inline refresh), got {r.chunk_rows}")
         tel = self.telemetry
         if tel.capacity < 1:
             e.append(f"telemetry.capacity: must be >= 1, got "

@@ -56,6 +56,10 @@ class Session:
         self.telemetry = cfg.telemetry.build()
         self._prev_telemetry = (obs.install(self.telemetry)
                                 if self.telemetry is not None else None)
+        # session-scoped subset-plan cache counters: stats() must report
+        # THIS session's hits/misses, not every session in the process
+        from repro.core.partition import install_plan_cache_counters
+        self._plan_cache_counters = install_plan_cache_counters()
         self._build_pipeline()
         self._H: Optional[np.ndarray] = None
         self._engine = None
@@ -181,7 +185,8 @@ class Session:
             store, self.reinfer, self.graph,
             batch_slots=q.batch_slots, rows_per_step=q.rows_per_step,
             staleness_bound=q.staleness_bound,
-            tenants=q.tenant_registry(), refresh_charge=q.refresh_charge)
+            tenants=q.tenant_registry(), refresh_charge=q.refresh_charge,
+            refresh_chunk_rows=cfg.refresh.chunk_rows)
         return self._engine
 
     @property
@@ -226,7 +231,6 @@ class Session:
                            session runs with ``telemetry.enabled``.
         """
         self._check_open()
-        from repro.core.partition import subset_plan_cache_stats
         from repro.obs import compat
         out: Dict[str, Any] = {"n_nodes": self.n_nodes,
                                "n_edges": self.graph.n_edges,
@@ -241,7 +245,7 @@ class Session:
                 "threshold": self.reinfer.local_cutover,
                 "n_local": self.reinfer.n_local_cutovers,
                 "n_dist": self.reinfer.n_dist_layers}
-        out["plan_cache"] = subset_plan_cache_stats()
+        out["plan_cache"] = dict(self._plan_cache_counters)
         out["metrics"] = compat.unified_metrics(
             engine_stats=engine_stats,
             construct_stats=self.construct_stats,
@@ -281,8 +285,11 @@ class Session:
     def close(self) -> None:
         """Release the big arrays (graph, features, store, engine) and
         hand the process-current telemetry back to whoever held it."""
-        if not self._closed and self.telemetry is not None:
-            obs.install(self._prev_telemetry)
+        if not self._closed:
+            if self.telemetry is not None:
+                obs.install(self._prev_telemetry)
+            from repro.core.partition import uninstall_plan_cache_counters
+            uninstall_plan_cache_counters(self._plan_cache_counters)
         self._closed = True
         self._engine = None
         for name in ("X", "graph", "layer_graphs", "reinfer", "_H",

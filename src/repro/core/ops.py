@@ -516,12 +516,17 @@ class DistExecutor:
 
     # -- row-subset mode (distributed delta refresh) --------------------
     def run_rows(self, layer: LayerSpec, lg: LayerGraph, rows: np.ndarray,
-                 read_level: Callable, level: int, heads: int = 1):
+                 read_level: Callable, level: int, heads: int = 1,
+                 *, n_nodes: Optional[int] = None):
         """Execute ``layer`` for the sorted row subset ``rows``, frontier
         split per partition.  ``read_level(level, ids)`` supplies input
         rows (the store's staged view during a refresh).  Returns the
         (pre-activation) global padded output plus (take, n_src): the
-        real-row indices into it and the universe-row work count."""
+        real-row indices into it and the universe-row work count.
+
+        ``n_nodes`` pins the partition geometry to the pre-growth main
+        range when the layer graph has an unfolded tail appended — every
+        row (and masked neighbour) passed here must stay below it."""
         assert self.spmm_variant == "deal", \
             "row-subset mode needs the unique-row exchange plan"
         assert self.M & (self.M - 1) == 0, \
@@ -529,7 +534,8 @@ class DistExecutor:
         with obs.span("dist.subset_plan") as psp:
             sp = build_subset_plan_cached(lg, rows, self.P,
                                           m_align=self.M,
-                                          floor=self.subset_floor)
+                                          floor=self.subset_floor,
+                                          n_nodes=n_nodes)
             if psp:
                 psp.set(rows=int(rows.size), src_rows=int(sp.n_src_rows),
                         level=level)

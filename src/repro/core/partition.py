@@ -15,7 +15,7 @@ source lives k hops around the data-axis ring.
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
@@ -179,13 +179,23 @@ class SubsetPlan:
 
 
 def build_subset_plan(lg: LayerGraph, rows: np.ndarray, P: int,
-                      *, m_align: int = 1, floor: int = 8) -> SubsetPlan:
+                      *, m_align: int = 1, floor: int = 8,
+                      n_nodes: Optional[int] = None) -> SubsetPlan:
     """Comm plan for recomputing ``rows`` of one layer on a P-way data
     axis.  ``rows`` must be sorted unique global ids; ``m_align`` forces
     the row buckets to a multiple of the model-axis size (the tiled
-    all-to-all GEMM splits rows M ways)."""
+    all-to-all GEMM splits rows M ways).
+
+    ``n_nodes`` overrides the partitioned node count: a tail-grown layer
+    graph (incremental onboarding) keeps the ORIGINAL main-partition
+    geometry — callers route rows that touch the tail elsewhere, and the
+    plan here must keep deriving the same 1-D ownership (and therefore
+    the same per-row reduction order) as before the growth."""
     rows = np.asarray(rows, np.int64)
-    n, F = lg.n_nodes, lg.fanout
+    n, F = int(n_nodes or lg.n_nodes), lg.fanout
+    assert rows.size == 0 or int(rows[-1]) < n, \
+        "subset rows outside the partitioned range (route tail rows " \
+        "to a local executor)"
     bounds = partition_nodes(n, P)
     floor = pad_bucket(max(floor, m_align))
     split = np.searchsorted(rows, bounds)
@@ -276,13 +286,41 @@ def build_subset_plan(lg: LayerGraph, rows: np.ndarray, P: int,
 # (P / n_nodes / m_align / floor).  ``resample_rows`` mutates the layer
 # graph in place, so it must call ``invalidate_subset_plans``.
 
-SUBSET_PLAN_CACHE = {"hits": 0, "misses": 0}
+SUBSET_PLAN_CACHE = {"hits": 0, "misses": 0}   # process-global aggregate
+_COUNTER_SCOPES: List[dict] = []
 _SUBSET_CACHE_ATTR = "_subset_plan_cache"
 _SUBSET_CACHE_CAP = 64          # plans are small; bound pathological churn
 
 
+def install_plan_cache_counters() -> dict:
+    """Open a fresh hit/miss counter scope and return it.
+
+    Counts are mirrored into every installed scope AND the process-global
+    aggregate, so a `Session` can report its own cache behaviour without
+    seeing traffic from other sessions in the same process (config
+    sweeps, the test suite).  Pair with ``uninstall_plan_cache_counters``."""
+    c = {"hits": 0, "misses": 0}
+    _COUNTER_SCOPES.append(c)
+    return c
+
+
+def uninstall_plan_cache_counters(counters: dict) -> None:
+    try:
+        _COUNTER_SCOPES.remove(counters)
+    except ValueError:
+        pass                     # idempotent: double-close is fine
+
+
 def subset_plan_cache_stats() -> dict:
-    return dict(SUBSET_PLAN_CACHE)
+    """Compat alias: innermost installed scope, else the global aggregate."""
+    return dict(_COUNTER_SCOPES[-1] if _COUNTER_SCOPES else SUBSET_PLAN_CACHE)
+
+
+def _count_plan_cache(key: str) -> None:
+    SUBSET_PLAN_CACHE[key] += 1
+    for c in _COUNTER_SCOPES:
+        c[key] += 1
+    obs.add(f"plan_cache.{key}")
 
 
 def invalidate_subset_plans(lg: LayerGraph) -> None:
@@ -291,13 +329,14 @@ def invalidate_subset_plans(lg: LayerGraph) -> None:
 
 
 def build_subset_plan_cached(lg: LayerGraph, rows: np.ndarray, P: int,
-                             *, m_align: int = 1, floor: int = 8
-                             ) -> SubsetPlan:
+                             *, m_align: int = 1, floor: int = 8,
+                             n_nodes: Optional[int] = None) -> SubsetPlan:
     """``build_subset_plan`` memoized per (layer graph, frontier
     signature).  Safe because plans depend only on (lg.nbr, lg.mask,
     rows, P, n_nodes, m_align, floor) and every nbr/mask mutation goes
     through ``resample_rows`` -> ``invalidate_subset_plans``."""
     rows = np.asarray(rows, np.int64)
+    n = int(n_nodes or lg.n_nodes)
     cache = getattr(lg, _SUBSET_CACHE_ATTR, None)
     if cache is None:
         cache = {}
@@ -305,20 +344,18 @@ def build_subset_plan_cached(lg: LayerGraph, rows: np.ndarray, P: int,
     # the row bytes themselves, not their hash: a 64-bit hash collision
     # would silently return another frontier's exchange plan, and the
     # key bytes are tiny next to the cached plan arrays
-    key = (P, m_align, floor, lg.n_nodes, rows.tobytes())
+    key = (P, m_align, floor, n, rows.tobytes())
     plan = cache.get(key)
     if plan is not None:
-        SUBSET_PLAN_CACHE["hits"] += 1
-        obs.add("plan_cache.hits")
+        _count_plan_cache("hits")
         return plan
-    SUBSET_PLAN_CACHE["misses"] += 1
-    obs.add("plan_cache.misses")
+    _count_plan_cache("misses")
     if len(cache) >= _SUBSET_CACHE_CAP:
         cache.pop(next(iter(cache)))    # FIFO drop-one: clearing all
         # would also evict the hot frontier the cache exists to keep
     with obs.span("dist.subset_plan_build") as sp:
         plan = build_subset_plan(lg, rows, P, m_align=m_align,
-                                 floor=floor)
+                                 floor=floor, n_nodes=n)
         if sp:
             sp.set(rows=int(rows.size), P=P)
     cache[key] = plan

@@ -69,9 +69,9 @@ Session): ``launch/serve_embeddings.py`` (CLI service loop),
 ``benchmarks/bench_incremental.py`` (delta vs full-recompute study).
 """
 from repro.gnnserve.delta import (DeltaReinference, RecomputeOnMiss,
-                                  attach_recompute, build_reverse_index,
-                                  forward_frontier, resample_rows,
-                                  splice_reverse_index)
+                                  RefreshJob, attach_recompute,
+                                  build_reverse_index, forward_frontier,
+                                  resample_rows, splice_reverse_index)
 from repro.gnnserve.engine import EmbeddingServeEngine, Query
 from repro.gnnserve.mutations import (MutationBatch, MutationLog,
                                       apply_edge_mutations, grow_graph)
@@ -81,7 +81,8 @@ from repro.gnnserve.store import (EmbeddingStore, EvictedRowMiss,
                                   SnapshotMiss, StoreSnapshot,
                                   store_from_inference)
 
-__all__ = ["DeltaReinference", "RecomputeOnMiss", "attach_recompute",
+__all__ = ["DeltaReinference", "RecomputeOnMiss", "RefreshJob",
+           "attach_recompute",
            "build_reverse_index", "forward_frontier",
            "resample_rows", "splice_reverse_index",
            "EmbeddingServeEngine", "Query",

@@ -278,6 +278,17 @@ class DeltaReinference:
         self.local_cutover = int(local_cutover)
         self.n_local_cutovers = 0
         self.n_dist_layers = 0
+        # main-partition extent for the dist executor: tail-onboarded
+        # rows (ids >= n_main) never fit the `n % P == 0` subset-plan
+        # geometry, so any row that IS or READS a tail node routes
+        # through the local executor instead (see _layer_rows_dist).
+        # Frozen for the lifetime of this instance — re-partitioning the
+        # grown graph would change per-row reduction orders and break
+        # bitwise equality with the epochs already served; folding the
+        # tail back into the mesh is a rebind (new session), not a flag.
+        self.n_main = (int(self.layer_graphs[0].n_nodes)
+                       if self.layer_graphs else 0)
+        self.n_tail_routed = 0
         self._local_ex = None
         self._table_pool: List[np.ndarray] = []
         self._rev: List[Optional[ReverseIndex]] = \
@@ -365,9 +376,84 @@ class DeltaReinference:
     def _layer_rows(self, l: int, rows: np.ndarray, read_level) -> np.ndarray:
         """Recompute layer l's output for `rows` through the bound
         executor; `read_level(level, ids)` supplies input rows (the
-        store's staged view during a refresh).
+        store's staged view during a refresh)."""
+        ex = self.executor
+        if isinstance(ex, DistExecutor):
+            return self._layer_rows_dist(l, rows, read_level, ex)
+        return self._layer_rows_single(l, rows, read_level, ex)
 
-        Single-host backends: row/universe counts are padded to
+    def _layer_rows_dist(self, l: int, rows: np.ndarray, read_level,
+                         ex) -> np.ndarray:
+        """Dist dispatch with tail-partition routing: rows that are, or
+        sample, a tail-onboarded node (id >= n_main) cannot enter the
+        ``n % P == 0`` subset-plan geometry without re-partitioning (and
+        re-partitioning would change reduction orders, i.e. bits), so
+        they route through the PR 7 local path; the remaining rows keep
+        the frozen main geometry.  Outputs merge order-preserving."""
+        lg = self.layer_graphs[l]
+        n_main = self.n_main
+        if lg.n_nodes > n_main:
+            touches = rows >= n_main
+            if rows.size:
+                touches = touches | (
+                    (lg.nbr[rows] >= n_main) & lg.mask[rows]).any(axis=1)
+            if touches.any():
+                tail_rows = rows[touches]
+                main_rows = rows[~touches]
+                self.n_tail_routed += int(tail_rows.size)
+                with obs.span("refresh.route") as sp:
+                    if sp:
+                        sp.set(route="tail-local", layer=l,
+                               rows=int(tail_rows.size), n_main=n_main)
+                h_tail = self._layer_rows_single(
+                    l, tail_rows, read_level, self._local_executor())
+                if main_rows.size == 0:
+                    return h_tail
+                h_main = self._layer_rows_dist_main(
+                    l, main_rows, read_level, ex)
+                out = np.empty((rows.size, h_tail.shape[1]), h_tail.dtype)
+                out[touches] = h_tail
+                out[~touches] = h_main
+                return out
+        return self._layer_rows_dist_main(l, rows, read_level, ex)
+
+    def _layer_rows_dist_main(self, l: int, rows: np.ndarray, read_level,
+                              ex) -> np.ndarray:
+        lg = self.layer_graphs[l]
+        spec = self.spec
+        layer = spec.layers[l]
+        nbrs = lg.nbr[rows][lg.mask[rows]]
+        U = np.unique(np.concatenate([rows, nbrs.astype(np.int64)]))
+        if self.local_cutover and U.size < self.local_cutover:
+            # tiny frontier: the mesh's collective setup + cold
+            # subset plan costs more than just computing locally
+            self.n_local_cutovers += 1
+            with obs.span("refresh.route") as sp:
+                if sp:
+                    sp.set(route="local", layer=l,
+                           rows=int(rows.size), universe=int(U.size),
+                           threshold=self.local_cutover)
+            return self._layer_rows_single(l, rows, read_level,
+                                           self._local_executor())
+        self.n_dist_layers += 1
+        if self.local_cutover:
+            with obs.span("refresh.route") as sp:
+                if sp:
+                    sp.set(route="dist", layer=l,
+                           rows=int(rows.size),
+                           universe=int(U.size),
+                           threshold=self.local_cutover)
+        h, take, n_src = ex.run_rows(
+            layer, lg, rows, read_level, l, spec.heads,
+            n_nodes=self.n_main if lg.n_nodes > self.n_main else None)
+        self.rows_gemm += n_src
+        if l < self.n_layers - 1:
+            h = spec.activation(h)
+        return np.asarray(jax.block_until_ready(h))[take]
+
+    def _layer_rows_single(self, l: int, rows: np.ndarray, read_level,
+                           ex) -> np.ndarray:
+        """Single-host layer body.  Row/universe counts are padded to
         power-of-two buckets so the op-by-op compile cache hits across
         refreshes (frontier sizes vary per mutation batch; unpadded
         shapes would recompile every time).  Padding rows duplicate row 0
@@ -379,38 +465,10 @@ class DeltaReinference:
         L = self.n_layers
         spec = self.spec
         layer = spec.layers[l]
-        ex = self.executor
 
         F = lg.fanout
         nbrs = lg.nbr[rows][lg.mask[rows]]
         U = np.unique(np.concatenate([rows, nbrs.astype(np.int64)]))
-
-        if isinstance(ex, DistExecutor):
-            if self.local_cutover and U.size < self.local_cutover:
-                # tiny frontier: the mesh's collective setup + cold
-                # subset plan costs more than just computing locally
-                self.n_local_cutovers += 1
-                with obs.span("refresh.route") as sp:
-                    if sp:
-                        sp.set(route="local", layer=l,
-                               rows=int(rows.size), universe=int(U.size),
-                               threshold=self.local_cutover)
-                ex = self._local_executor()
-            else:
-                self.n_dist_layers += 1
-                if self.local_cutover:
-                    with obs.span("refresh.route") as sp:
-                        if sp:
-                            sp.set(route="dist", layer=l,
-                                   rows=int(rows.size),
-                                   universe=int(U.size),
-                                   threshold=self.local_cutover)
-                h, take, n_src = ex.run_rows(layer, lg, rows, read_level,
-                                             l, spec.heads)
-                self.rows_gemm += n_src
-                if l < L - 1:
-                    h = spec.activation(h)
-                return np.asarray(jax.block_until_ready(h))[take]
 
         R, Rp = rows.size, _pow2(rows.size)
         Up = _pow2(U.size)
@@ -481,12 +539,23 @@ class DeltaReinference:
                                 lambda lvl, want: read(want, lvl))
 
     # -- the refresh ----------------------------------------------------
-    def refresh(self, store: EmbeddingStore, g_new: Graph,
-                feat_ids: np.ndarray, feat_rows: np.ndarray,
-                resampled: np.ndarray) -> Dict[str, float]:
-        """Apply one mutation batch's compute: resample dirty rows of the
-        layer graphs from `g_new`, walk the forward frontier, and rewrite
-        only those store rows.  Commits a new store version."""
+    def begin_refresh(self, store: EmbeddingStore, g_new: Graph,
+                      feat_ids: np.ndarray, feat_rows: np.ndarray,
+                      resampled: np.ndarray, *, chunk_rows: int = 0
+                      ) -> "RefreshJob":
+        """Open an incremental refresh: run the cheap prologue eagerly
+        (resample dirty rows, splice reverse indexes, walk the forward
+        frontier, open the staging overlay, write feature rows) and
+        return a :class:`RefreshJob` whose ``step()`` calls run the
+        frontier compute one row chunk at a time.  Nothing is visible to
+        readers until ``finish()`` commits.
+
+        Chunking is bitwise-invariant: a row's output depends only on
+        its own (already fully written) lower level, never on which rows
+        share the batch, and the content-addressed resample seeds carry
+        no chunk/batch term — so any ``chunk_rows`` produces the exact
+        bits of the one-shot :meth:`refresh`.
+        """
         resampled = np.asarray(resampled, np.int64)
         feat_ids = np.asarray(feat_ids, np.int64)
         self.rows_gemm = 0
@@ -530,17 +599,7 @@ class DeltaReinference:
                 store.write_rows(0, feat_ids,
                                  np.asarray(feat_rows, np.float32))
             for l in range(self.n_layers):
-                rows = frontier[l]
-                obs.add("delta.frontier_rows", rows.size)
-                if rows.size == 0:
-                    continue
-                with obs.span("refresh.layer") as sp:
-                    h = self._layer_rows(
-                        l, rows,
-                        lambda lvl, want: store.lookup_staged(want, lvl))
-                    store.write_rows(l + 1, rows, h)
-                    if sp:
-                        sp.set(layer=l, rows=int(rows.size))
+                obs.add("delta.frontier_rows", frontier[l].size)
         except Exception:
             store.abort()       # readers stay on the last committed epoch
             if old_rows is not None:
@@ -552,16 +611,140 @@ class DeltaReinference:
                     invalidate_subset_plans(lg)
                 self._rev = [None] * len(self.layer_graphs)
             raise
-        version = store.commit()
+        return RefreshJob(self, store, frontier, chunk_rows,
+                          resampled=resampled, feat_ids=feat_ids,
+                          old_rows=old_rows)
+
+    def refresh(self, store: EmbeddingStore, g_new: Graph,
+                feat_ids: np.ndarray, feat_rows: np.ndarray,
+                resampled: np.ndarray) -> Dict[str, float]:
+        """Apply one mutation batch's compute in one shot: resample dirty
+        rows of the layer graphs from `g_new`, walk the forward frontier,
+        and rewrite only those store rows.  Commits a new store version.
+        Equivalent to draining a :meth:`begin_refresh` job inline."""
+        job = self.begin_refresh(store, g_new, feat_ids, feat_rows,
+                                 resampled)
+        while not job.done:
+            job.step()
+        return job.finish()
+
+
+class RefreshJob:
+    """One in-flight incremental refresh, split into schedulable chunks.
+
+    The worklist is ordered: layer l+1's frontier reads layer l's staged
+    rows through the overlay, so layers cannot interleave — but WITHIN a
+    layer each output row depends only on its own inputs, never on its
+    chunk-mates, so a layer's frontier splits freely into row chunks.
+    Equal-size chunks reuse the pow2 pad buckets, so the executor's
+    compile cache keeps hitting across chunk boundaries.
+
+    Lifecycle: ``step()`` until ``done``, then ``finish()`` to commit;
+    ``abort()`` (called automatically if a step raises) rolls the store
+    AND the layer-graph resamples back so readers stay on the last
+    committed epoch.  ``hold_rows`` is the top-level frontier — the
+    monotone superset of every dirty row — which the engine uses to
+    fence recompute-on-miss gathers off rows whose graph state is
+    mid-flight (recompute through a resampled row before commit would
+    replay the wrong neighborhood).
+    """
+
+    def __init__(self, reinfer: DeltaReinference, store: EmbeddingStore,
+                 frontier: List[np.ndarray], chunk_rows: int, *,
+                 resampled: np.ndarray, feat_ids: np.ndarray, old_rows):
+        self.reinfer = reinfer
+        self.store = store
+        self.frontier = frontier
+        self._resampled = resampled
+        self._feat_ids = feat_ids
+        self._old_rows = old_rows
+        self.chunk_rows = int(chunk_rows)
+        self._work: List[tuple] = []
+        for l, rows in enumerate(frontier):
+            if rows.size == 0:
+                continue
+            step = self.chunk_rows if self.chunk_rows > 0 else int(rows.size)
+            for lo in range(0, int(rows.size), step):
+                self._work.append((l, lo, min(lo + step, int(rows.size))))
+        self._idx = 0
+        self.n_chunks = len(self._work)
+        self.rows_gemm = 0
+        self.hold_rows = (frontier[-1] if frontier
+                          else np.empty(0, np.int64))
+        self._dead = False
+
+    @property
+    def done(self) -> bool:
+        return self._idx >= self.n_chunks
+
+    def step(self) -> Dict[str, int]:
+        """Run one chunk against the staging overlay.  On any failure the
+        whole job aborts (store + layer graphs roll back) and re-raises."""
+        assert not self._dead, "job already finished/aborted"
+        assert not self.done, "no chunks left; call finish()"
+        l, lo, hi = self._work[self._idx]
+        rows = self.frontier[l][lo:hi]
+        ri = self.reinfer
+        before = ri.rows_gemm
+        try:
+            with obs.span("refresh.layer") as sp:
+                with obs.span("refresh.chunk") as csp:
+                    h = ri._layer_rows(
+                        l, rows,
+                        lambda lvl, want: self.store.lookup_staged(
+                            want, lvl))
+                    self.store.write_rows(l + 1, rows, h)
+                    if csp:
+                        csp.set(layer=l, rows=int(rows.size),
+                                chunk=self._idx, n_chunks=self.n_chunks)
+                if sp:
+                    sp.set(layer=l, rows=int(rows.size))
+        except Exception:
+            self.abort()
+            raise
+        self._idx += 1
+        # per-chunk work delta off the instance counter, so concurrent
+        # recompute-on-miss traffic between chunks doesn't pollute the
+        # job's own accounting
+        done_gemm = ri.rows_gemm - before
+        self.rows_gemm += done_gemm
+        return {"layer": l, "rows": int(rows.size),
+                "rows_gemm": int(done_gemm),
+                "chunk": self._idx, "n_chunks": self.n_chunks}
+
+    def finish(self) -> Dict[str, float]:
+        assert not self._dead, "job already finished/aborted"
+        assert self.done, "chunks remain; step() until done"
+        self._dead = True
+        version = self.store.commit()
+        ri = self.reinfer
         return {"version": version, "rows_gemm": self.rows_gemm,
-                "frontier_sizes": [int(f.size) for f in frontier],
-                "n_resampled": int(resampled.size),
-                "n_feat_updates": int(feat_ids.size),
-                "rev_splices": self.rev_splices,
-                "rev_rebuilds": self.rev_rebuilds,
-                "local_cutover": self.local_cutover,
-                "n_local_cutovers": self.n_local_cutovers,
-                "n_dist_layers": self.n_dist_layers}
+                "frontier_sizes": [int(f.size) for f in self.frontier],
+                "n_resampled": int(self._resampled.size),
+                "n_feat_updates": int(self._feat_ids.size),
+                "n_chunks": self.n_chunks,
+                "rev_splices": ri.rev_splices,
+                "rev_rebuilds": ri.rev_rebuilds,
+                "local_cutover": ri.local_cutover,
+                "n_local_cutovers": ri.n_local_cutovers,
+                "n_dist_layers": ri.n_dist_layers,
+                "n_tail_routed": ri.n_tail_routed}
+
+    def abort(self) -> None:
+        """Roll back the staged update and the layer-graph resamples."""
+        if self._dead:
+            return
+        self._dead = True
+        self.store.abort()      # readers stay on the last committed epoch
+        ri = self.reinfer
+        if self._old_rows is not None:
+            for lg, (nbr, mask) in zip(ri.layer_graphs, self._old_rows):
+                lg.nbr[self._resampled] = nbr
+                lg.mask[self._resampled] = mask
+                # the failed refresh may have cached frontier plans
+                # over the now-rolled-back samples
+                invalidate_subset_plans(lg)
+            ri._rev = [None] * len(ri.layer_graphs)
 
 
 # ----------------------------------------------------------------------

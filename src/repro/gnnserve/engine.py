@@ -12,9 +12,10 @@ When the mutation log exceeds the bound (or a query demands
 ``fresh=True``), the engine drains the log, splices the CSR overlay,
 and runs delta re-inference BEFORE the next gather; the store's
 double-buffered commit makes the epoch flip invisible to readers.
-Node additions cannot be expressed as a row delta (they re-partition
-the store); the engine refuses them and defers to an offline
-re-partition epoch (ROADMAP open item: incremental node onboarding).
+Node additions onboard incrementally on ``onboarding="tail"`` stores
+(a tail partition appended past the main 1-D partitioning); on
+``onboarding="none"`` stores they refuse and defer to ``full_epoch()``
+(the re-partition event).
 
 Multi-tenant QoS (``tenants=TenantRegistry(...)``): the global bound
 and FIFO queue are replaced by ``gnnserve.qos`` — per-tenant freshness
@@ -23,6 +24,17 @@ views), weighted-fair slot quotas with preemptive reclaim, and a
 deficit-round-robin row budget with token buckets.  Queries carry a
 ``tenant`` tag; with ``tenants=None`` the engine behaves exactly as
 before (single implicit tenant at ``staleness_bound``).
+
+Refresh is a SCHEDULED workload under QoS when ``refresh_chunk_rows``
+is set: instead of running the whole delta frontier inline inside one
+serve step (head-of-line blocking every tenant behind a large
+mutation batch), the engine opens a ``RefreshJob`` and advances it ONE
+row chunk per step, interleaved with tenant gathers.  Chunk compute is
+charged to the lowest-priority tenants' DRR credit as it lands; only
+the tenants whose SLO (or ``fresh=True``) demanded the refresh wait
+for it — everyone else keeps gathering at their pinned views, and the
+committed bits are chunk-invariant (see ``DeltaReinference.
+begin_refresh``), so chunking never changes what any tenant reads.
 """
 from __future__ import annotations
 
@@ -33,9 +45,10 @@ import numpy as np
 
 from repro import obs
 from repro.core.graph import Graph
-from repro.gnnserve.delta import DeltaReinference, attach_recompute
-from repro.gnnserve.mutations import (MutationLog, apply_edge_mutations,
-                                      grow_graph)
+from repro.gnnserve.delta import (DeltaReinference, RefreshJob,
+                                  attach_recompute)
+from repro.gnnserve.mutations import (MutationBatch, MutationLog,
+                                      apply_edge_mutations, grow_graph)
 from repro.gnnserve.qos import QoSScheduler, TenantRegistry
 from repro.gnnserve.store import (EmbeddingStore, SnapshotMiss,
                                   store_from_inference)
@@ -65,12 +78,26 @@ class Query:
     submit_ns: int = -1
 
 
+@dataclasses.dataclass
+class _RefreshRec:
+    """Engine-side record of one in-flight (or inline) refresh: the
+    drained batch for rollback/requeue, the delta job, the post-splice
+    graph to swap in at commit, and the onboarding extent."""
+    batch: MutationBatch
+    job: RefreshJob
+    graph: Graph
+    n_new: int
+    n_nodes_before: int         # store extent before any tail append
+    charged: int = 0            # rows_gemm already charged per chunk
+
+
 class EmbeddingServeEngine:
     def __init__(self, store: EmbeddingStore, reinfer: DeltaReinference,
                  graph: Graph, *, batch_slots: int = 4,
                  rows_per_step: int = 256, staleness_bound: int = 64,
                  tenants: Optional[TenantRegistry] = None,
-                 refresh_charge: float = 1.0):
+                 refresh_charge: float = 1.0,
+                 refresh_chunk_rows: int = 0):
         self.store = store
         self.reinfer = reinfer
         self.graph = graph
@@ -88,6 +115,12 @@ class EmbeddingServeEngine:
         self.n_served = 0
         self.ops_drained = 0        # mutation ops folded into the store
         self.last_refresh_stats: Dict = {}
+        # preemptible chunked refresh (QoS scheduling only; the FIFO
+        # path keeps its inline refresh): 0 = inline, >0 = rows per
+        # chunk, one chunk advanced per _step_qos
+        self.refresh_chunk_rows = int(refresh_chunk_rows)
+        self.n_refresh_chunks = 0
+        self._rjob: Optional[_RefreshRec] = None
         self.qos: Optional[QoSScheduler] = None
         if tenants is not None:
             self.qos = QoSScheduler(tenants, batch_slots=batch_slots,
@@ -124,24 +157,24 @@ class EmbeddingServeEngine:
         """Drain the log and fold it into the store via delta
         re-inference.  Node additions onboard incrementally when the
         store was built with ``onboarding="tail"`` (a tail partition is
-        appended and the new ids ride this refresh's resampled set);
-        otherwise they refuse here and fold via ``full_epoch()``."""
-        # check BEFORE draining: rejecting must not discard pending edits
-        if self.log.has_node_adds:
-            if self.qos is not None:
-                # lagged tenant views pinned before the append cannot
-                # address the new ids
-                raise NotImplementedError(
-                    "node additions under multi-tenant QoS are not "
-                    "supported yet; drain the tenants and rebuild, or "
-                    "onboard on a non-QoS engine")
-            if self.store.onboarding != "tail":
-                raise NotImplementedError(
-                    "node additions re-partition the store; build it "
-                    "with onboarding=\"tail\" (StoreSpec.onboarding) "
-                    "for incremental onboarding, or call full_epoch() "
-                    "(the re-partition event, which folds them)")
+        appended and the new ids ride this refresh's resampled set) —
+        QoS engines included: tenants whose views lag the append keep
+        their pre-append epoch snapshot, and tail ids resolve only for
+        views at/after the append version (see ``_pin_qos``).  On
+        ``onboarding="none"`` stores node additions refuse here and
+        fold via ``full_epoch()``."""
+        self._drain_refresh_job()   # an in-flight chunked job commits
+        self._check_onboarding()    # first, THEN any newly pending ops
         return self._refresh()
+
+    def _check_onboarding(self) -> None:
+        # check BEFORE draining: rejecting must not discard pending edits
+        if self.log.has_node_adds and self.store.onboarding != "tail":
+            raise NotImplementedError(
+                "node additions re-partition the store; build it "
+                "with onboarding=\"tail\" (StoreSpec.onboarding) "
+                "for incremental onboarding, or call full_epoch() "
+                "(the re-partition event, which folds them)")
 
     def _observe_wait(self, q: Query) -> None:
         """Queue-wait sample at first pin (submit -> first gather)."""
@@ -163,10 +196,24 @@ class EmbeddingServeEngine:
         return stats
 
     def _refresh_body(self) -> Dict:
+        rec = self._open_refresh(chunk_rows=0)
+        try:
+            while not rec.job.done:
+                rec.job.step()
+        except Exception:
+            self._rollback_refresh(rec)
+            raise
+        return self._finish_refresh(rec)
+
+    def _open_refresh(self, *, chunk_rows: int) -> _RefreshRec:
+        """Drain the log and open the delta job: onboarding structures,
+        CSR splice, resample + frontier + staging overlay (the job
+        prologue).  Nothing is reader-visible until the job commits."""
         batch = self.log.drain()
         n_new = batch.n_new_nodes
         new_ids = np.empty(0, np.int64)
         graph0 = self.graph
+        n_before = self.store.n_nodes
         extended = tailed = False
         try:
             if n_new:
@@ -188,9 +235,9 @@ class EmbeddingServeEngine:
                 # fanout rows and pushes them through every frontier
                 # level, so their tail shard commits fully written
                 resampled = np.union1d(resampled, new_ids)
-            stats = self.reinfer.refresh(
+            job = self.reinfer.begin_refresh(
                 self.store, graph, batch.feat_ids, batch.feat_rows,
-                resampled)
+                resampled, chunk_rows=chunk_rows)
         except Exception:
             # a bad batch must not silently discard the good mutations
             # drained alongside it — roll back exactly the onboarding
@@ -203,19 +250,114 @@ class EmbeddingServeEngine:
                 self.reinfer.shrink_nodes(n_new)
             self.log.requeue(batch)
             raise
-        self.graph = graph
-        self.ops_drained += batch.n_ops
+        return _RefreshRec(batch=batch, job=job, graph=graph,
+                           n_new=n_new, n_nodes_before=n_before)
+
+    def _rollback_refresh(self, rec: _RefreshRec) -> None:
+        """Unwind a refresh whose job aborted mid-chunk (the job itself
+        already rolled the store + layer-graph resamples back)."""
+        if rec.n_new:
+            self.store.pop_tail(rec.n_new)
+            self.reinfer.shrink_nodes(rec.n_new)
+        self.log.requeue(rec.batch)
+
+    def _finish_refresh(self, rec: _RefreshRec) -> Dict:
+        stats = rec.job.finish()
+        self.graph = rec.graph
+        self.ops_drained += rec.batch.n_ops
         self.n_refreshes += 1
-        self.n_onboarded += n_new
-        stats["n_onboarded"] = n_new
+        self.n_onboarded += rec.n_new
+        stats["n_onboarded"] = rec.n_new
         self.last_refresh_stats = stats
         if self.qos is not None:
             # the new epoch becomes pinnable for per-tenant views, and
             # its compute cost lands on batch-tenant row budgets first
             self.qos.record_epoch(self.store.version, self.ops_drained,
                                   self.store.snapshot())
-            self.qos.charge_refresh(stats["rows_gemm"])
+            remaining = int(stats["rows_gemm"]) - rec.charged
+            if remaining > 0:   # chunked jobs already charged per chunk
+                self.qos.charge_refresh(remaining)
         return stats
+
+    # -- preemptible chunked refresh (QoS) ------------------------------
+    def _open_refresh_job(self, due) -> None:
+        """Open a chunked refresh the QoS loop advances one chunk per
+        step.  ``due`` tenants become the job's waiters: their views
+        advance when it commits, and until then their new pins defer —
+        everyone else keeps gathering at their pinned views between
+        chunks."""
+        assert self._rjob is None
+        self._check_onboarding()
+        self._rjob = self._open_refresh(chunk_rows=self.refresh_chunk_rows)
+        self.qos.refresh_waiters.update(due)
+        if obs.enabled():
+            obs.add("qos.refresh_jobs")
+
+    def _advance_refresh_job(self) -> None:
+        """Run one chunk of the in-flight job; commit + advance waiter
+        views when the last chunk lands."""
+        rec = self._rjob
+        if not rec.job.done:
+            try:
+                info = rec.job.step()
+            except Exception:
+                self._rjob = None
+                self.qos.refresh_waiters.clear()
+                self._rollback_refresh(rec)
+                raise
+            self.n_refresh_chunks += 1
+            if info["rows_gemm"]:
+                # charge as the work lands, not at commit: the DRR
+                # credit of the batch tenants absorbs each chunk in the
+                # very step it ran, so their next grants shrink NOW
+                self.qos.charge_refresh(info["rows_gemm"])
+                rec.charged += int(info["rows_gemm"])
+        if rec.job.done:
+            with obs.span("serve.refresh") as rsp:
+                stats = self._finish_refresh(rec)
+                if rsp:
+                    rsp.set(rows_gemm=int(stats.get("rows_gemm", 0)),
+                            n_onboarded=int(stats.get("n_onboarded", 0)),
+                            n_chunks=int(stats.get("n_chunks", 0)))
+            waiters = sorted(self.qos.refresh_waiters)
+            self.qos.refresh_waiters.clear()
+            self._rjob = None
+            self.qos.advance_views(waiters, self.store.version,
+                                   self.ops_drained, refreshed=True)
+
+    def _drain_refresh_job(self) -> None:
+        """Complete any in-flight chunked refresh synchronously (public
+        ``refresh``/``full_epoch`` entry points must not observe a
+        half-applied job)."""
+        while self._rjob is not None:
+            self._advance_refresh_job()
+
+    def _refresh_holds(self, q: Query) -> bool:
+        """While a chunked refresh is in flight, must this query's PIN
+        wait for the commit?  Three reasons: (1) its tenant demanded the
+        refresh (serving it the old epoch would violate the very SLO
+        that triggered the job); (2) it reads tail ids appended by the
+        job (unreadable until the commit makes them resolvable); (3) on
+        a budgeted store, pinning rows in the job's frontier could
+        recompute through mid-flight layer-graph rows (wrong
+        neighborhoods before commit).  Pinned queries are never held —
+        their snapshots are immutable."""
+        rec = self._rjob
+        if q.served_version == -2:      # parked by _restart_on_current
+            return True
+        if q.tenant in self.qos.refresh_waiters:
+            return True
+        if q.node_ids.size == 0:
+            return False
+        if int(q.node_ids.max()) >= rec.n_nodes_before:
+            return True
+        hold = rec.job.hold_rows
+        if self.store.recompute is not None and hold.size:
+            pos = np.clip(np.searchsorted(hold, q.node_ids),
+                          0, hold.size - 1)
+            if (hold[pos] == q.node_ids).any():
+                return True
+        return False
 
     def full_epoch(self, n_shards: Optional[int] = None) -> Dict:
         """Re-partition epoch: refresh any pending mutations, then
@@ -228,12 +370,8 @@ class EmbeddingServeEngine:
         old store keep serving their epoch untouched.  Pending node
         additions fold here REGARDLESS of ``store.onboarding`` — this is
         the re-partition event ``refresh`` defers them to."""
+        self._drain_refresh_job()
         if self.log.pending:
-            if self.log.has_node_adds and self.qos is not None:
-                raise NotImplementedError(
-                    "node additions under multi-tenant QoS are not "
-                    "supported yet; drain the tenants and rebuild, or "
-                    "onboard on a non-QoS engine")
             self._refresh()
         st = self.store
         X = st.lookup(np.arange(st.n_nodes, dtype=np.int64), 0)
@@ -368,9 +506,23 @@ class EmbeddingServeEngine:
                                        self.ops_drained)
         if st.view_version == self.store.version:
             q.snap = self.store.pinned_snapshot(q.node_ids, q.level)
+            q.served_version = st.view_version
         else:
-            q.snap = self.qos.epoch_snapshot(st.view_version)
-        q.served_version = st.view_version
+            snap = self.qos.epoch_snapshot(st.view_version)
+            if q.node_ids.size and \
+                    int(q.node_ids.max()) >= int(snap.bounds[-1]):
+                # the lagged view predates a tail append: tail ids
+                # resolve only for views at/after the append version,
+                # so this query serves on the CURRENT epoch instead —
+                # fresher than its SLO requires, never staler, and the
+                # tenant's other queries keep their pre-append bits
+                q.snap = self.store.pinned_snapshot(q.node_ids, q.level)
+                q.served_version = self.store.version
+                stale = self.log.pending
+                self.qos.on_view_restart(q.tenant)
+            else:
+                q.snap = snap
+                q.served_version = st.view_version
         self.qos.on_pin(q, stale)
         self._observe_wait(q)
 
@@ -381,6 +533,18 @@ class EmbeddingServeEngine:
         torn.  Rows regathered after the restart are charged to the
         tenant again (rows_served / tokens / DRR credit): they are real
         gather work, and the fair-share accounting follows the work."""
+        if self._rjob is not None:
+            # mid-job, "current" is the PRE-commit epoch — restarting on
+            # it now would diverge from the inline schedule (and may be
+            # unsafe: tail ids / recompute through mid-flight graph
+            # rows).  Park the query; it re-pins after the commit.
+            # served_version=-2 marks it held so it does not re-pin
+            # (and re-miss) every step until then.
+            q.snap = None
+            q.served_version = -2
+            q.cursor = 0
+            self.qos.on_defer(q.tenant)
+            return
         q.snap = self.store.pinned_snapshot(q.node_ids, q.level)
         q.served_version = self.store.version
         q.cursor = 0
@@ -408,7 +572,7 @@ class EmbeddingServeEngine:
                 q.cursor = 0
             self.slot_q[i] = q
         active = [i for i in range(self.B) if self.slot_q[i] is not None]
-        if not active:
+        if not active and self._rjob is None:
             return False
 
         # deadline-driven refresh planning: coalesce the mutation log up
@@ -416,21 +580,57 @@ class EmbeddingServeEngine:
         # advance (the rest keep their older epoch)
         due = qos.due_tenants(self.slot_q, self.log.pending,
                               self.ops_drained)
-        if due:
+        if self._rjob is not None:
+            # a chunked refresh is in flight: newly-due tenants join its
+            # waiters (their pins defer until the commit), and exactly
+            # one chunk advances this step, between tenant gathers
+            if due:
+                qos.refresh_waiters.update(due)
+            self._advance_refresh_job()
+            if self._rjob is None and self.log.pending:
+                # committed — but mutations that arrived DURING the job
+                # were frozen out of its inputs, so a tenant they made
+                # due is still stale at the committed version.  Open the
+                # follow-up job now (its frontier is one job's worth of
+                # mutations, so it commits fast) so those pins keep
+                # deferring instead of landing on an SLO-violating epoch
+                due = qos.due_tenants(self.slot_q, self.log.pending,
+                                      self.ops_drained)
+                if due:
+                    self._open_refresh_job(due)
+        elif due:
             refreshed = bool(self.log.pending)
-            if refreshed:
-                self.refresh()
-            qos.advance_views(due, self.store.version, self.ops_drained,
-                              refreshed=refreshed)
+            if refreshed and self.refresh_chunk_rows > 0:
+                self._open_refresh_job(due)
+                self._advance_refresh_job()  # first chunk rides this step
+            else:
+                if refreshed:
+                    self.refresh()
+                qos.advance_views(due, self.store.version,
+                                  self.ops_drained, refreshed=refreshed)
+        if not active:
+            return True            # the job progressed; nothing to gather
 
         # weighted-fair row budget (DRR + token buckets), then one fused
-        # sharded gather per (epoch, level)
-        need = {i: self.slot_q[i].node_ids.size - self.slot_q[i].cursor
-                for i in active}
-        grants = qos.allocate([(i, self.slot_q[i].tenant, need[i])
-                               for i in active], self.rows_per_step)
-        per_key: Dict[tuple, List] = {}
+        # sharded gather per (epoch, level).  Unpinned queries held by
+        # the in-flight refresh (waiter tenants, job-appended tail ids,
+        # job-frontier rows on a recompute store) sit out this step's
+        # allocation — their slots stay claimed, their rows wait for the
+        # commit.
+        ready = []
         for i in active:
+            q = self.slot_q[i]
+            if (self._rjob is not None and q.snap is None
+                    and self._refresh_holds(q)):
+                qos.on_defer(q.tenant)
+            else:
+                ready.append(i)
+        need = {i: self.slot_q[i].node_ids.size - self.slot_q[i].cursor
+                for i in ready}
+        grants = qos.allocate([(i, self.slot_q[i].tenant, need[i])
+                               for i in ready], self.rows_per_step)
+        per_key: Dict[tuple, List] = {}
+        for i in ready:
             q = self.slot_q[i]
             take = min(grants.get(i, 0), need[i])
             if take <= 0:
@@ -502,6 +702,7 @@ class EmbeddingServeEngine:
         out = {"n_served": self.n_served,
                "n_gather_steps": self.n_gather_steps,
                "n_refreshes": self.n_refreshes,
+               "n_refresh_chunks": self.n_refresh_chunks,
                "n_full_epochs": self.n_full_epochs,
                "n_onboarded": self.n_onboarded,
                "store_version": self.store.version,

@@ -60,6 +60,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
+
 # ----------------------------------------------------------------------
 # tenant model
 # ----------------------------------------------------------------------
@@ -153,6 +155,8 @@ class _TenantState:
     slot_steps: int = 0
     n_preemptions: int = 0
     n_view_restarts: int = 0
+    n_deferred_pins: int = 0     # pin-steps held behind an in-flight
+    #                              chunked refresh (waiter / tail / hold)
 
 
 # ----------------------------------------------------------------------
@@ -182,6 +186,10 @@ class QoSScheduler:
         self.min_grant = min_grant
         self.step_no = 0
         self.refresh_rows_uncharged = 0.0
+        # tenants whose SLO / fresh=True demanded the refresh currently
+        # in flight (chunked jobs only): their views advance at commit,
+        # and their unpinned queries defer until then
+        self.refresh_waiters: set = set()
         self._st: Dict[str, _TenantState] = {
             s.name: _TenantState(spec=s,
                                  tokens=(s.rate * burst_steps
@@ -489,6 +497,11 @@ class QoSScheduler:
     def on_view_restart(self, name: str) -> None:
         self._st[name].n_view_restarts += 1
 
+    def on_defer(self, name: str) -> None:
+        """One pin-step held behind an in-flight chunked refresh."""
+        self._st[name].n_deferred_pins += 1
+        obs.add("qos.deferred_pins")
+
     def on_done(self, q) -> None:
         t = self._st[q.tenant]
         t.n_served += 1
@@ -524,6 +537,7 @@ class QoSScheduler:
                                / (max(t.spec.slot_quota, 1) * steps)),
                 "n_preemptions": t.n_preemptions,
                 "n_view_restarts": t.n_view_restarts,
+                "n_deferred_pins": t.n_deferred_pins,
                 "view_version": t.view_version,
             }
         return out

@@ -39,8 +39,8 @@ import numpy as np
 
 from repro import obs
 from repro.api import (ConfigError, DealConfig, ExecutorSpec, GraphSpec,
-                       ModelSpec, PartitionSpec, QoSSpec, Session,
-                       StoreSpec, tenants_from_string)
+                       ModelSpec, PartitionSpec, QoSSpec, RefreshSpec,
+                       Session, StoreSpec, tenants_from_string)
 from repro.gnnserve import EmbeddingServeEngine, Query, TenantRegistry
 
 
@@ -203,7 +203,8 @@ def config_from_args(args) -> DealConfig:
                         onboarding=args.onboarding),
         qos=QoSSpec(staleness_bound=args.staleness_bound,
                     tenants=(tenants_from_string(args.tenants)
-                             if args.tenants else ())))
+                             if args.tenants else ())),
+        refresh=RefreshSpec(chunk_rows=args.chunk_rows))
 
 
 def main():
@@ -247,6 +248,11 @@ def main():
                          "served via delta refresh")
     ap.add_argument("--scale", type=float, default=1.0,
                     help="scale the dataset's node count (CI smoke)")
+    ap.add_argument("--chunk-rows", type=int, default=0,
+                    help="preemptible refresh under QoS: split the delta "
+                         "frontier into chunks of this many rows and "
+                         "interleave them with tenant gathers (0 = "
+                         "inline refresh); bitwise-invariant")
     ap.add_argument("--tenants", default=None,
                     help="multi-tenant QoS: 'name:priority:slot_quota:"
                          "rate:slo,...' (rate 0 = unlimited rows/step); "
@@ -272,10 +278,6 @@ def main():
     if args.nodes_per_tick and cfg.store.onboarding != "tail":
         raise SystemExit("--nodes-per-tick needs --onboarding tail "
                          "(or store.onboarding=\"tail\" in --config)")
-    if args.nodes_per_tick and cfg.qos.tenants:
-        raise SystemExit("--nodes-per-tick is not supported with "
-                         "--tenants yet: QoS engines refuse node adds "
-                         "(lagged tenant views cannot address new ids)")
     if args.trace:
         cfg.telemetry.enabled = True
     s = _serve_session(cfg)

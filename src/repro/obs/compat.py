@@ -72,6 +72,7 @@ TENANT_MAP = {
     "quota_util": "quota_util",
     "preemptions": "n_preemptions",
     "view_restarts": "n_view_restarts",
+    "deferred_pins": "n_deferred_pins",
     "view_version": "view_version",
 }
 

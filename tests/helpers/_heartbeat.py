@@ -1,0 +1,37 @@
+"""Main-thread liveness file for the subprocess checks.
+
+The forced-8-device collective checks occasionally wedge (every thread
+asleep at a collective, ~0 CPU) — an environmental deadlock the parent
+previously could only detect with one long global timeout.  Each check
+now stamps this file from the MAIN thread as it completes (a timer
+thread would keep ticking through a wedge and hide it), so the parent
+can watch the file's mtime: fresh stamps mean slow-but-alive, a stale
+stamp names exactly the stage that wedged.
+"""
+import sys
+import time
+
+_path = None
+
+
+def init(argv):
+    """Install the heartbeat path from a ``--heartbeat PATH`` argv pair
+    (stripped from ``argv``); absent flag = heartbeat disabled."""
+    global _path
+    if "--heartbeat" in argv:
+        i = argv.index("--heartbeat")
+        _path = argv[i + 1]
+        del argv[i:i + 2]
+        beat("startup")
+
+
+def beat(label: str) -> None:
+    """Stamp the liveness file with now + the stage about to run (or
+    just finished).  Called from the main thread only."""
+    if _path is None:
+        return
+    try:
+        with open(_path, "w") as f:
+            f.write(f"{time.time():.3f} {label}\n")
+    except OSError as e:        # a broken heartbeat must not fail checks
+        print(f"# heartbeat write failed: {e}", file=sys.stderr)

@@ -10,6 +10,10 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..",
                                 "src"))
 
+import _heartbeat as hb  # noqa: E402
+
+hb.init(sys.argv)
+
 import numpy as np  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
@@ -31,6 +35,7 @@ def check(name, got, want, atol=2e-5):
     err = np.abs(np.asarray(got) - np.asarray(want)).max()
     ok = err <= atol
     print(f"{'OK ' if ok else 'FAIL'} {name}: max_err={err:.2e}")
+    hb.beat(name)
     if not ok:
         sys.exit(1)
 
@@ -108,6 +113,8 @@ def main():
 
     check_dist_delta(mesh, g, lgs, X)
     check_evict_equivalence(mesh, g, lgs, X)
+    check_chunked_refresh(mesh, g, lgs, X)
+    check_tail_onboarding(mesh, g, lgs, X)
 
     print("ALL DISTRIBUTED CHECKS PASSED")
 
@@ -237,6 +244,107 @@ def check_evict_equivalence(mesh, g, lgs, X):
         store.budget_rows = N // 4          # tighten: 50% -> 25%
         store._enforce_budget()
         sampled_equal("budget0.25")
+
+
+def check_chunked_refresh(mesh, g, lgs, X):
+    """Preemptible chunked refresh on the MESH: a ``begin_refresh`` job
+    drained 13 rows at a time commits the exact bytes of the one-shot
+    dist refresh — chunk boundaries never change which reduction
+    produced a row's bits."""
+    import copy
+
+    from repro.core.ops import DistExecutor
+    from repro.gnnserve import (DeltaReinference, MutationLog,
+                                apply_edge_mutations, store_from_inference)
+
+    N, D = X.shape
+    L = len(lgs)
+    rng = np.random.default_rng(17)
+    dex = DistExecutor(mesh)
+    params = init_gcn(jax.random.PRNGKey(4), [D] * L + [32])
+    log = MutationLog()
+    log.add_edges(rng.integers(0, N, 12), rng.integers(0, N, 12))
+    fid = rng.choice(N, 6, replace=False)
+    log.update_features(fid, rng.standard_normal((6, D)).astype(np.float32))
+    batch = log.drain()
+    g2 = apply_edge_mutations(g, batch)
+
+    stores = {}
+    for chunk in (0, 13):
+        ri = DeltaReinference([copy.deepcopy(l) for l in lgs], "gcn",
+                              params, executor=dex)
+        store = store_from_inference(X, ri.full_levels(X)[1:], n_shards=4)
+        job = ri.begin_refresh(store, g2, batch.feat_ids, batch.feat_rows,
+                               batch.affected_dsts(), chunk_rows=chunk)
+        while not job.done:
+            job.step()
+        stats = job.finish()
+        stores[chunk] = store
+        if chunk:
+            assert stats["n_chunks"] > L, stats
+    for lvl in range(1, L + 1):
+        exact = bool((stores[13].lookup(np.arange(N), lvl) ==
+                      stores[0].lookup(np.arange(N), lvl)).all())
+        print(f"{'OK ' if exact else 'FAIL'} chunked_dist/gcn/level{lvl}: "
+              f"bitwise={exact}")
+        hb.beat(f"chunked_dist/level{lvl}")
+        if not exact:
+            sys.exit(1)
+
+
+def check_tail_onboarding(mesh, g, lgs, X):
+    """onboarding="tail" THROUGH the dist executor: tail-partition rows
+    (and rows sampling them) route through the local path while main
+    rows keep the frozen mesh geometry — and the refreshed store is
+    bitwise-equal to a full epoch through the same routed executor
+    (``full_epoch`` is the oracle AND the fold)."""
+    import copy
+
+    from repro.core.ops import DistExecutor
+    from repro.gnnserve import (DeltaReinference, EmbeddingServeEngine,
+                                store_from_inference)
+
+    N, D = X.shape
+    L = len(lgs)
+    rng = np.random.default_rng(23)
+    dex = DistExecutor(mesh)
+    params = init_gcn(jax.random.PRNGKey(5), [D] * L + [32])
+    ri = DeltaReinference([copy.deepcopy(l) for l in lgs], "gcn", params,
+                          executor=dex)
+    store = store_from_inference(X, ri.full_levels(X)[1:], n_shards=4,
+                                 onboarding="tail")
+    eng = EmbeddingServeEngine(store, ri, g, staleness_bound=4)
+    k = 3
+    eng.mutate().add_nodes(k, rng.standard_normal((k, D)).astype(np.float32))
+    new = np.arange(N, N + k)
+    eng.mutate().add_edges(rng.integers(0, N, 2 * k), np.repeat(new, 2))
+    eng.mutate().add_edges(new, rng.integers(0, N, k))
+    stats = eng.refresh()
+    assert stats["n_onboarded"] == k, stats
+    assert ri.n_tail_routed > 0, "no rows took the tail-local route"
+    assert ri.n_dist_layers > 0, "main rows left the mesh"
+    # oracle: a full routed epoch over the CURRENT (grown) layer graphs
+    # — same frozen n_main, so per-row reductions match the refresh
+    X2 = eng.store.lookup(np.arange(N + k, dtype=np.int64), 0)
+    oracle = ri.full_levels(X2)
+    for lvl in range(1, L + 1):
+        exact = bool((eng.store.lookup(np.arange(N + k), lvl) ==
+                      oracle[lvl]).all())
+        print(f"{'OK ' if exact else 'FAIL'} tail_dist/refresh/level{lvl}:"
+              f" bitwise={exact} tail_routed={ri.n_tail_routed}")
+        hb.beat(f"tail_dist/level{lvl}")
+        if not exact:
+            sys.exit(1)
+    fold = eng.full_epoch()
+    ok = (eng.store.n_tail_shards == 0
+          and fold["version"] == eng.store.version
+          and bool((eng.store.lookup(np.arange(N + k), -1) ==
+                    oracle[-1]).all()))
+    print(f"{'OK ' if ok else 'FAIL'} tail_dist/fold: "
+          f"n_shards={eng.store.n_shards} bitwise={ok}")
+    hb.beat("tail_dist/fold")
+    if not ok:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -7,6 +7,10 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..",
                                 "src"))
 
+import _heartbeat as hb  # noqa: E402
+
+hb.init(sys.argv)
+
 import dataclasses  # noqa: E402
 
 import numpy as np  # noqa: E402
@@ -26,6 +30,7 @@ def check(name, got, want, atol):
                  - np.asarray(want, np.float32)).max()
     ok = err <= atol
     print(f"{'OK ' if ok else 'FAIL'} {name}: max_err={err:.2e}")
+    hb.beat(name)
     if not ok:
         sys.exit(1)
 

@@ -9,7 +9,8 @@ import pytest
 N, D, LAYERS, FANOUT = 256, 16, 3, 4
 
 
-def _world(onboarding="tail", budget_rows=0, executor="ref", seed=0):
+def _world(onboarding="tail", budget_rows=0, executor="ref", seed=0,
+           tenants=None, chunk_rows=0):
     import jax
 
     from repro.core.gnn_models import init_gcn
@@ -30,7 +31,9 @@ def _world(onboarding="tail", budget_rows=0, executor="ref", seed=0):
                                  onboarding=onboarding)
     if budget_rows:
         attach_recompute(store, ri)
-    eng = EmbeddingServeEngine(store, ri, g, staleness_bound=4)
+    eng = EmbeddingServeEngine(store, ri, g, staleness_bound=4,
+                               rows_per_step=64, tenants=tenants,
+                               refresh_chunk_rows=chunk_rows)
     return eng, params
 
 
@@ -250,7 +253,97 @@ def test_session_exposes_onboarding():
     assert s.store.n_tail_shards == 0
 
 
-def test_qos_engines_still_refuse_node_adds():
+def _qos_world(tenants="ui:4:2:0:2,batch:1:1:0:1000", chunk_rows=0,
+               seed=0):
+    """A tail-onboarding engine under QoS: strict ui tenant (forces
+    refreshes), loose batch tenant (its view lags behind appends)."""
+    from repro.gnnserve import parse_tenants
+    return _world(seed=seed, tenants=parse_tenants(tenants),
+                  chunk_rows=chunk_rows)
+
+
+def test_qos_onboarding_lagged_view_keeps_pre_append_epoch():
+    """Node adds under QoS: the refresh onboards the tail, but only due
+    tenants' views advance — a loose tenant's old-id reads keep their
+    pre-append epoch bits at their pre-append version."""
+    from repro.gnnserve import Query
+    eng, params = _qos_world()
+    pre = eng.store.lookup(np.arange(N), -1).copy()
+    _onboard(eng, 3)
+    rng = np.random.default_rng(11)
+    batch_qs = []
+    for tick in range(4):
+        qb = Query(uid=tick, node_ids=rng.integers(0, N, 48),
+                   tenant="batch")
+        eng.submit(qb)
+        batch_qs.append(qb)
+        eng.submit(Query(uid=100 + tick,
+                         node_ids=rng.integers(0, N, 16), tenant="ui"))
+        eng.run()
+    assert eng.n_onboarded == 3 and eng.store.n_nodes == N + 3
+    ts = eng.stats()["tenants"]
+    assert ts["ui"]["view_version"] == eng.store.version
+    assert ts["batch"]["view_version"] < eng.store.version
+    for q in batch_qs:                  # old ids: pre-append bits, v0
+        assert q.done and q.served_version == 0
+        np.testing.assert_array_equal(q.out, pre[q.node_ids])
+
+
+def test_qos_onboarding_tail_ids_serve_at_append_version():
+    """A lagged view predates the tail append: queries touching tail
+    ids serve on the CURRENT epoch (fresher than the SLO requires,
+    never staler), counted as a view restart; the tenant's old-id
+    queries keep their pre-append bits."""
+    from repro.gnnserve import Query
+    eng, params = _qos_world()
+    _onboard(eng, 3)
+    rng = np.random.default_rng(13)
+    eng.submit(Query(uid=0, node_ids=rng.integers(0, N, 16),
+                     tenant="ui"))
+    eng.run()                           # ui's SLO forced the onboarding
+    assert eng.store.n_nodes == N + 3
+    qt = Query(uid=1, node_ids=np.arange(N - 2, N + 3), tenant="batch")
+    eng.submit(qt)
+    eng.run()
+    assert qt.done and qt.served_version == eng.store.version
+    oracle = _oracle_levels(eng, params)
+    np.testing.assert_array_equal(qt.out, oracle[-1][N - 2:N + 3])
+    assert eng.stats()["tenants"]["batch"]["n_view_restarts"] >= 1
+
+
+def test_qos_full_epoch_folds_tail():
+    """full_epoch works under QoS: pending mutations (node adds
+    included) drain first, the tail folds back into the main
+    partitioning, and tenants keep serving."""
+    from repro.gnnserve import Query
+    eng, params = _qos_world()
+    _onboard(eng, 4)
+    eng.full_epoch()
+    st = eng.store
+    assert st.n_nodes == N + 4 and st.n_tail_shards == 0
+    assert eng.log.pending == 0
+    oracle = _oracle_levels(eng, params)
+    q = Query(uid=0, node_ids=np.arange(N, N + 4), tenant="ui")
+    eng.submit(q)
+    eng.run()
+    np.testing.assert_array_equal(q.out, oracle[-1][N:N + 4])
+
+
+def test_qos_engine_still_refuses_without_tail_onboarding():
+    """The remaining refusal is the onboarding mode, not QoS: node adds
+    on an onboarding=\"none\" store defer to full_epoch as before."""
+    from repro.gnnserve import parse_tenants
+    eng, _ = _world(onboarding="none",
+                    tenants=parse_tenants("ui:1:1:0:4"))
+    eng.mutate().add_nodes(1)
+    with pytest.raises(NotImplementedError):
+        eng.refresh()
+    assert eng.log.pending > 0          # nothing was discarded
+
+
+def test_session_onboarding_under_qos():
+    """The exact configuration the engine used to refuse: tail
+    onboarding + tenants, through the Session facade."""
     from repro.api import (DealConfig, GraphSpec, ModelSpec, QoSSpec,
                            Session, StoreSpec, tenants_from_string)
     cfg = DealConfig(
@@ -259,9 +352,12 @@ def test_qos_engines_still_refuse_node_adds():
         model=ModelSpec(name="gcn", n_layers=2, d_feature=D),
         store=StoreSpec(onboarding="tail"),
         qos=QoSSpec(tenants=tenants_from_string("ui:1:1:0:4")))
-    eng = Session.build(cfg).serve()
-    eng.mutate().add_nodes(1)
-    with pytest.raises(NotImplementedError):
-        eng.refresh()
-    with pytest.raises(NotImplementedError):
-        eng.full_epoch()                # no circular advice under QoS
+    with Session.build(cfg) as s:
+        eng = s.serve()
+        eng.mutate().add_nodes(2)
+        stats = eng.refresh()
+        assert stats["n_onboarded"] == 2
+        assert eng.store.n_nodes == N + 2
+        fold = s.full_epoch()
+        assert fold["version"] == eng.store.version
+        assert s.store.n_tail_shards == 0

@@ -1,0 +1,296 @@
+"""Preemptible chunked refresh: RefreshJob chunking is bitwise-invariant
+(any chunk size produces the one-shot refresh's exact store bytes, on
+every executor), the QoS engine interleaves chunks with tenant gathers
+(a strict tenant's gather is admitted BETWEEN chunks instead of waiting
+out the whole frontier), and chunked engines serve the exact bits of
+inline engines under identical traffic."""
+import copy
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.gnn_models import init_gcn
+from repro.core.graph import csr_from_edges, rmat_edges
+from repro.core.sampler import sample_layer_graphs
+from repro.gnnserve import (DeltaReinference, EmbeddingServeEngine,
+                            MutationLog, Query, apply_edge_mutations,
+                            parse_tenants, store_from_inference)
+
+N, D, L, FANOUT = 384, 16, 3, 6
+
+
+@pytest.fixture(scope="module")
+def world():
+    src, dst = rmat_edges(N, N * 8, seed=21)
+    g = csr_from_edges(src, dst, N)
+    lgs = sample_layer_graphs(g, fanout=FANOUT, n_layers=L, seed=4)
+    X = np.random.default_rng(6).standard_normal((N, D), dtype=np.float32)
+    params = init_gcn(jax.random.PRNGKey(2), [D] * (L + 1))
+    return g, src, dst, lgs, X, params
+
+
+def _fresh(world, executor="ref"):
+    g, src, dst, lgs, X, params = world
+    ri = DeltaReinference([copy.deepcopy(l) for l in lgs], "gcn", params,
+                          executor=executor)
+    store = store_from_inference(X, ri.full_levels(X)[1:], n_shards=4)
+    return ri, store
+
+
+def _batch(world, rng, n_edge=24, n_feat=16):
+    g, src, dst, *_ = world
+    log = MutationLog()
+    log.add_edges(rng.integers(0, N, n_edge), rng.integers(0, N, n_edge))
+    pick = rng.choice(src.size, n_edge, replace=False)
+    log.remove_edges(src[pick], dst[pick])
+    log.update_features(
+        rng.choice(N, n_feat, replace=False),
+        rng.standard_normal((n_feat, D), dtype=np.float32))
+    return log.drain()
+
+
+# ----------------------------------------------------------------------
+# RefreshJob: chunked == one-shot, bitwise
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("executor", ["ref", "pallas"])
+@pytest.mark.parametrize("chunk", [7, 64, 10 ** 9])
+def test_chunked_refresh_bitwise_equals_inline(world, executor, chunk):
+    """Any chunk size — misaligned, pow2-bucket-sized, or larger than
+    every frontier — commits the exact bytes of the one-shot refresh."""
+    g = world[0]
+    batch = _batch(world, np.random.default_rng(31))
+    g2 = apply_edge_mutations(g, batch)
+
+    ri_a, store_a = _fresh(world, executor)
+    stats_a = ri_a.refresh(store_a, g2, batch.feat_ids, batch.feat_rows,
+                           batch.affected_dsts())
+
+    ri_b, store_b = _fresh(world, executor)
+    job = ri_b.begin_refresh(store_b, g2, batch.feat_ids, batch.feat_rows,
+                             batch.affected_dsts(), chunk_rows=chunk)
+    n_steps = 0
+    while not job.done:
+        info = job.step()
+        n_steps += 1
+        assert info["rows"] <= (chunk if chunk > 0 else 10 ** 18)
+    stats_b = job.finish()
+
+    assert stats_b["n_chunks"] == n_steps
+    if chunk >= N:                      # chunk > frontier: one per layer
+        assert stats_b["n_chunks"] == sum(
+            1 for f in job.frontier if f.size)
+    else:
+        assert stats_b["n_chunks"] > stats_a["n_chunks"]
+    assert stats_b["version"] == stats_a["version"] == 1
+    # chunking re-gathers neighbors shared across chunk boundaries, so
+    # the WORK counter may grow — the committed bits are what's invariant
+    assert stats_b["rows_gemm"] >= stats_a["rows_gemm"]
+    assert stats_b["frontier_sizes"] == stats_a["frontier_sizes"]
+    all_ids = np.arange(N)
+    for lvl in range(1, ri_a.n_layers + 1):
+        np.testing.assert_array_equal(store_b.lookup(all_ids, lvl),
+                                      store_a.lookup(all_ids, lvl),
+                                      err_msg=f"level {lvl}")
+
+
+def test_chunk_boundaries_do_not_leak_into_resample_seeds(world):
+    """Two different chunk sizes over the SAME mutations agree bitwise —
+    the content-addressed resample seeds carry no chunk term."""
+    g = world[0]
+    batch = _batch(world, np.random.default_rng(41))
+    g2 = apply_edge_mutations(g, batch)
+    stores = []
+    for chunk in (5, 113):
+        ri, store = _fresh(world)
+        job = ri.begin_refresh(store, g2, batch.feat_ids, batch.feat_rows,
+                               batch.affected_dsts(), chunk_rows=chunk)
+        while not job.done:
+            job.step()
+        job.finish()
+        stores.append(store)
+    for lvl in range(1, L + 1):
+        np.testing.assert_array_equal(
+            stores[0].lookup(np.arange(N), lvl),
+            stores[1].lookup(np.arange(N), lvl))
+
+
+def test_refresh_job_abort_rolls_back_store_and_graphs(world):
+    """abort() mid-job leaves readers on the committed epoch and the
+    layer graphs on their pre-resample rows; a clean retry then matches
+    the one-shot oracle."""
+    g = world[0]
+    batch = _batch(world, np.random.default_rng(51))
+    g2 = apply_edge_mutations(g, batch)
+    ri, store = _fresh(world)
+    before = store.lookup(np.arange(N), -1).copy()
+    nbr0 = ri.layer_graphs[0].nbr.copy()
+    job = ri.begin_refresh(store, g2, batch.feat_ids, batch.feat_rows,
+                           batch.affected_dsts(), chunk_rows=16)
+    job.step()
+    job.abort()
+    assert store.version == 0
+    np.testing.assert_array_equal(store.lookup(np.arange(N), -1), before)
+    np.testing.assert_array_equal(ri.layer_graphs[0].nbr, nbr0)
+    with pytest.raises(AssertionError):
+        job.step()                      # dead job refuses further work
+
+    ri2, store2 = _fresh(world)         # clean retry == one-shot oracle
+    ri2.refresh(store2, g2, batch.feat_ids, batch.feat_rows,
+                batch.affected_dsts())
+    ri.refresh(store, g2, batch.feat_ids, batch.feat_rows,
+               batch.affected_dsts())
+    np.testing.assert_array_equal(store.lookup(np.arange(N), -1),
+                                  store2.lookup(np.arange(N), -1))
+
+
+def test_chunk_spans_and_layer_spans_emitted(world):
+    """Each chunk step emits a ``refresh.chunk`` span nested in a
+    ``refresh.layer`` span (the metric tests key on the latter)."""
+    g = world[0]
+    batch = _batch(world, np.random.default_rng(61))
+    g2 = apply_edge_mutations(g, batch)
+    ri, store = _fresh(world)
+    tel = obs.Telemetry(enabled=True)
+    with obs.use(tel):
+        job = ri.begin_refresh(store, g2, batch.feat_ids, batch.feat_rows,
+                               batch.affected_dsts(), chunk_rows=32)
+        while not job.done:
+            job.step()
+        stats = job.finish()
+    m = tel.metrics.to_dict()
+    assert m["refresh.chunk_ms.count"] == stats["n_chunks"] > L
+    assert m["refresh.layer_ms.count"] == stats["n_chunks"]
+
+
+# ----------------------------------------------------------------------
+# QoS engine: chunked schedule == inline schedule, bit for bit
+# ----------------------------------------------------------------------
+
+def _engine(world, *, chunk_rows=0, onboarding="none",
+            tenants="ui:4:2:0:4,batch:1:1:0:64"):
+    g, src, dst, lgs, X, params = world
+    ri = DeltaReinference([copy.deepcopy(l) for l in lgs], "gcn", params)
+    store = store_from_inference(X, ri.full_levels(X)[1:], n_shards=4,
+                                 onboarding=onboarding)
+    return EmbeddingServeEngine(store, ri, g, batch_slots=4,
+                                rows_per_step=64,
+                                tenants=parse_tenants(tenants),
+                                refresh_chunk_rows=chunk_rows)
+
+
+def test_chunked_engine_bitwise_equals_inline_engine(world):
+    """Identical tick-drained traffic through a chunked and an inline
+    QoS engine: every query's bytes AND served version agree, and so do
+    the final store bits — chunking changes scheduling, never results."""
+    engines = {c: _engine(world, chunk_rows=c) for c in (0, 16)}
+    rng = np.random.default_rng(71)
+    pairs = []
+    for tick in range(10):
+        ids = {"ui": rng.integers(0, N, 24),
+               "batch": rng.integers(0, N, 96)}
+        per_engine = {}
+        for c, eng in engines.items():
+            qs = {name: Query(uid=tick, node_ids=ids[name], tenant=name)
+                  for name in ("ui", "batch")}
+            for q in qs.values():
+                eng.submit(q)
+            per_engine[c] = qs
+        s_e, d_e = rng.integers(0, N, 3), rng.integers(0, N, 3)
+        fid = rng.choice(N, 4, replace=False)
+        frows = rng.standard_normal((4, D), dtype=np.float32)
+        for c, eng in engines.items():
+            eng.mutate().add_edges(s_e, d_e)
+            eng.mutate().update_features(fid, frows)
+            eng.run()
+        for name in ("ui", "batch"):
+            pairs.append((name, per_engine[0][name], per_engine[16][name]))
+    inline, chunked = engines[0], engines[16]
+    assert inline.n_refreshes == chunked.n_refreshes > 0
+    assert chunked.n_refresh_chunks > chunked.n_refreshes  # really split
+    assert inline.n_refresh_chunks == 0
+    for name, qi, qc in pairs:
+        assert qi.done and qc.done
+        assert qi.served_version == qc.served_version, (name, qi.uid)
+        np.testing.assert_array_equal(qi.out, qc.out,
+                                      err_msg=str((name, qi.uid)))
+    for lvl in range(1, L + 1):
+        np.testing.assert_array_equal(
+            inline.store.lookup(np.arange(N), lvl),
+            chunked.store.lookup(np.arange(N), lvl))
+
+
+def test_strict_gather_admitted_between_chunks(world):
+    """The stall fix itself: while a batch-triggered refresh job is in
+    flight, a strict tenant's NEW query is pinned and gathered between
+    chunks — it completes before the job commits — while the demanding
+    tenant's query waits for the commit."""
+    eng = _engine(world, chunk_rows=2,
+                  tenants="ui:4:2:0:100000,batch:1:1:0:2")
+    rng = np.random.default_rng(81)
+    # a big feature burst => a frontier of hundreds of rows => with
+    # chunk_rows=2 the job needs many steps to drain
+    for lo in range(0, 128, 16):
+        eng.mutate().update_features(
+            np.arange(lo, lo + 16, dtype=np.int64),
+            rng.standard_normal((16, D), dtype=np.float32))
+    qb = Query(uid=0, node_ids=rng.integers(0, N, 8), tenant="batch")
+    eng.submit(qb)
+    eng.step()                          # batch is due -> job opens
+    assert eng._rjob is not None and not qb.done
+    qu = Query(uid=1, node_ids=rng.integers(0, N, 8), tenant="ui")
+    eng.submit(qu)
+    while not qu.done:
+        assert eng._rjob is not None, \
+            "job drained before the strict gather finished"
+        eng.step()
+    assert eng._rjob is not None        # ui finished BETWEEN chunks
+    assert qu.served_version == 0       # at its (current) pinned view
+    assert not qb.done                  # the demander still waits
+    eng.run()
+    assert qb.done and qb.served_version == eng.store.version == 1
+    assert eng.n_refresh_chunks > 10
+    np.testing.assert_array_equal(
+        qb.out, eng.store.lookup(qb.node_ids, -1))
+    ts = eng.stats()["tenants"]
+    assert ts["batch"]["n_deferred_pins"] > 0   # held behind its own job
+
+
+def test_fresh_query_waits_for_chunked_commit(world):
+    """fresh=True under chunking: the query's tenant joins the waiters
+    and its response carries the post-refresh epoch."""
+    eng = _engine(world, chunk_rows=4,
+                  tenants="ui:4:2:0:100000,batch:1:1:0:100000")
+    rng = np.random.default_rng(91)
+    eng.mutate().update_features(
+        np.arange(48, dtype=np.int64),
+        rng.standard_normal((48, D), dtype=np.float32))
+    q = Query(uid=0, node_ids=rng.integers(0, N, 12), tenant="ui",
+              fresh=True)
+    eng.submit(q)
+    eng.run()
+    assert q.done and q.served_version == eng.store.version == 1
+    assert eng.n_refreshes == 1 and eng.n_refresh_chunks > 1
+    np.testing.assert_array_equal(q.out, eng.store.lookup(q.node_ids, -1))
+
+
+def test_chunked_onboarding_under_qos(world):
+    """Node adds ride a chunked job: the tail commits atomically with
+    the last chunk, and a mid-job tail-id query waits for it."""
+    eng = _engine(world, chunk_rows=8, onboarding="tail",
+                  tenants="ui:4:2:0:2,batch:1:1:0:100000")
+    rng = np.random.default_rng(101)
+    eng.mutate().add_nodes(3, rng.standard_normal((3, D), np.float32))
+    new = np.arange(N, N + 3)
+    eng.mutate().add_edges(rng.integers(0, N, 6), np.repeat(new, 2))
+    qt = Query(uid=0, node_ids=np.arange(N - 1, N + 3), tenant="batch")
+    eng.submit(qt)
+    eng.submit(Query(uid=1, node_ids=rng.integers(0, N, 8), tenant="ui"))
+    eng.run()
+    assert eng.n_onboarded == 3 and eng.store.n_nodes == N + 3
+    assert eng.n_refresh_chunks > 1
+    assert qt.done and qt.served_version == eng.store.version
+    np.testing.assert_array_equal(qt.out,
+                                  eng.store.lookup(qt.node_ids, -1))
