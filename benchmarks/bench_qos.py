@@ -404,6 +404,25 @@ def run(smoke: bool = False, executor: str = "ref"):
         f"qos p95 wait {qos.p95_wait()} exceeds {wait_cap} (solo x1.2)"
     assert base_viol, "baseline unexpectedly held both the SLO and the wait"
 
+    # -- critical-path attribution closure ------------------------------
+    # under the harness's telemetry the engine keeps a per-query segment
+    # ledger; each tenant's segments must reconcile with the measured
+    # end-to-end wall time within the report gate's 5% bound
+    if qeng.attrib is not None and qeng.attrib.n_queries:
+        from repro.obs.report import ATTRIBUTION_TOLERANCE
+        attrib = qeng.attrib.summary()
+        for tenant, a in sorted(attrib.items()):
+            frac = a["attributed_frac"]
+            busiest = max(a["segments_frac"], key=a["segments_frac"].get)
+            common.emit(
+                f"qos/attrib_{tenant}_e2e_p95{suffix}",
+                a["e2e_ms"]["p95"],
+                f"attributed={frac:.3f};top={busiest}="
+                f"{a['segments_frac'][busiest]:.2f}")
+            assert abs(frac - 1.0) <= ATTRIBUTION_TOLERANCE, \
+                f"tenant {tenant} attribution closes at {frac:.3f} " \
+                f"of e2e (bound {ATTRIBUTION_TOLERANCE:.0%})"
+
     # -- per-tenant bitwise equality vs solo-SLO engines ----------------
     ok, who = _bitwise_phase(n if smoke else 1024, 6 if smoke else 10,
                              executor=executor)

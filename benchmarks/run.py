@@ -11,15 +11,23 @@ stage-breakdown summary: the bench runs under its own telemetry, so
 every instrumented span in the pipeline (``ops.*``, ``store.*``,
 ``refresh.*``, ...) aggregates into a per-stage table for regression
 tracking alongside the headline CSV numbers.  ``--smoke`` runs every
-registered bench at tiny shapes as a CI liveness check and writes
-nothing.
+registered bench at tiny shapes as a CI liveness check and writes no
+CSV/summary files.
+
+EVERY invocation (``--smoke`` included) additionally appends one entry
+to ``results/TRAJECTORY.json`` — the tracked bench trajectory.  Gate it
+with ``python -m repro.obs.report --trajectory results/TRAJECTORY.json``:
+the latest entry's per-stage share of each bench's span profile is
+compared against the median of previous same-(executor, smoke) entries.
 """
 import argparse
 import importlib
 import inspect
 import json
 import pathlib
+import subprocess
 import sys
+import time
 import traceback
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
@@ -132,9 +140,9 @@ def main() -> None:
             "n_spans": len(tel.tracer.events),
             "n_dropped_spans": tel.tracer.n_dropped,
         }
+    out = pathlib.Path(__file__).resolve().parents[1] / "results"
+    out.mkdir(exist_ok=True)
     if not args.smoke:
-        out = pathlib.Path(__file__).resolve().parents[1] / "results"
-        out.mkdir(exist_ok=True)
         if common.ROWS:
             _merge_csv(out / "bench.csv", common.ROWS)
         for k, summary in summaries.items():
@@ -143,6 +151,30 @@ def main() -> None:
                          + "\n")
             print(f"# wrote {p.relative_to(out.parent)} "
                   f"({len(summary['stages'])} stages)", flush=True)
+    from repro.obs import report
+    try:
+        git = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=pathlib.Path(__file__).resolve().parents[1],
+        ).stdout.strip() or "unknown"
+    except Exception:
+        git = "unknown"
+    entry = {
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "git": git,
+        "smoke": bool(args.smoke),
+        "executor": args.executor,
+        "failures": [k for k, _ in failures],
+        "benches": {k: {"stages": s["stages"],
+                        "coverage": s["trace_coverage"],
+                        "n_spans": s["n_spans"]}
+                    for k, s in summaries.items()},
+    }
+    traj = out / "TRAJECTORY.json"
+    entries = report.append_trajectory(traj, entry)
+    print(f"# appended trajectory entry #{len(entries)} to "
+          f"{traj.relative_to(out.parent)}", flush=True)
     if failures:
         sys.exit(f"{len(failures)} benchmark group(s) failed: "
                  f"{[k for k, _ in failures]}")

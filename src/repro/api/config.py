@@ -195,11 +195,28 @@ class TelemetrySpec:
     """The ``repro.obs`` layer: per-Session span tracing + unified
     metrics.  Disabled by default — the no-op mode's overhead at every
     instrumentation site is a single attribute check, so leaving the
-    hooks compiled in costs nothing measurable."""
+    hooks compiled in costs nothing measurable.
+
+    The serving-tier health extras (all gated on ``enabled``):
+    ``http_port`` starts a stdlib Prometheus/JSON scrape endpoint on
+    ``Session.serve()`` (-1 = off, 0 = an ephemeral port published as
+    ``session.endpoint.port``); ``snapshot_path`` adds a periodic JSON
+    stats-snapshot writer; the ``health_*`` / ``slo_*`` fields tune the
+    engine's burn-rate monitor (rolling window length, SLO error
+    budget, the burn rate at which an alert fires, and an optional
+    wall-clock queue-wait SLO in ms applied to every tenant — 0
+    disables the wait detector)."""
     enabled: bool = False
     capacity: int = 65536           # span ring-buffer size (oldest drop)
     clock: str = "monotonic"        # "monotonic" | "fake" (deterministic
     #                                 auto-advancing test clock)
+    http_port: int = -1             # -1 = no endpoint, 0 = ephemeral
+    snapshot_path: str = ""         # "" = no periodic JSON snapshots
+    snapshot_every_s: float = 1.0
+    health_window: int = 128        # rolling-window observations
+    slo_error_budget: float = 0.01  # allowed violating fraction
+    burn_threshold: float = 4.0     # alert at burn >= threshold
+    wait_slo_ms: float = 0.0        # 0 = wait-burn detector off
 
     def build(self):
         """The runtime ``obs.Telemetry`` (None when disabled — the
@@ -491,6 +508,24 @@ class DealConfig:
         if tel.clock not in ("monotonic", "fake"):
             e.append(f"telemetry.clock: must be \"monotonic\" or "
                      f"\"fake\", got {tel.clock!r}")
+        if not -1 <= tel.http_port <= 65535:
+            e.append(f"telemetry.http_port: must be -1 (off), 0 "
+                     f"(ephemeral) or a valid port, got {tel.http_port}")
+        if tel.snapshot_every_s <= 0:
+            e.append(f"telemetry.snapshot_every_s: must be > 0, got "
+                     f"{tel.snapshot_every_s}")
+        if tel.health_window < 2:
+            e.append(f"telemetry.health_window: must be >= 2, got "
+                     f"{tel.health_window}")
+        if not 0 < tel.slo_error_budget <= 1:
+            e.append(f"telemetry.slo_error_budget: must be in (0, 1], "
+                     f"got {tel.slo_error_budget}")
+        if tel.burn_threshold <= 0:
+            e.append(f"telemetry.burn_threshold: must be > 0, got "
+                     f"{tel.burn_threshold}")
+        if tel.wait_slo_ms < 0:
+            e.append(f"telemetry.wait_slo_ms: must be >= 0 (0 = wait "
+                     f"detector off), got {tel.wait_slo_ms}")
 
         if e:
             raise ConfigError("invalid DealConfig:\n  - "

@@ -63,6 +63,7 @@ class Session:
         self._build_pipeline()
         self._H: Optional[np.ndarray] = None
         self._engine = None
+        self._endpoint = None
 
     @classmethod
     def build(cls, cfg: DealConfig) -> "Session":
@@ -187,12 +188,31 @@ class Session:
             staleness_bound=q.staleness_bound,
             tenants=q.tenant_registry(), refresh_charge=q.refresh_charge,
             refresh_chunk_rows=cfg.refresh.chunk_rows)
+        t = cfg.telemetry
+        self._engine.health_opts = {
+            "window": t.health_window,
+            "error_budget": t.slo_error_budget,
+            "burn_threshold": t.burn_threshold,
+            "wait_slo_ms": t.wait_slo_ms,
+        }
+        if self.telemetry is not None and (t.http_port >= 0
+                                           or t.snapshot_path):
+            from repro.obs.endpoint import TelemetryEndpoint
+            self._endpoint = TelemetryEndpoint(
+                self, port=t.http_port, snapshot_path=t.snapshot_path,
+                snapshot_every_s=t.snapshot_every_s).start()
         return self._engine
 
     @property
     def engine(self):
         """The serving engine (built on first access)."""
         return self.serve()
+
+    @property
+    def endpoint(self):
+        """The live telemetry endpoint, or None (configure it via
+        ``telemetry.http_port`` / ``telemetry.snapshot_path``)."""
+        return self._endpoint
 
     @property
     def store(self):
@@ -229,6 +249,12 @@ class Session:
                            ``qos.tenant.<name>.*``, ...), with live
                            telemetry histograms merged on top when the
                            session runs with ``telemetry.enabled``.
+          ``attribution``  per-tenant critical-path latency breakdowns
+                           (queue_wait / pin / recompute / gather /
+                           refresh_wait / sched_wait) once the engine
+                           has served queries under telemetry.
+          ``health``       SLO burn rates + structured alert events
+                           from the serving-tier ``HealthMonitor``.
         """
         self._check_open()
         from repro.obs import compat
@@ -236,15 +262,17 @@ class Session:
                                "n_edges": self.graph.n_edges,
                                **{f"t_{k}": v
                                   for k, v in self.timings.items()}}
-        engine_stats = refresh_stats = None
+        engine_stats = refresh_stats = cutover = None
         if self._engine is not None:
             engine_stats = self._engine.stats()
             refresh_stats = self._engine.last_refresh_stats
             out.update(engine_stats)
-            out["refresh_cutover"] = {
+            cutover = {
                 "threshold": self.reinfer.local_cutover,
                 "n_local": self.reinfer.n_local_cutovers,
-                "n_dist": self.reinfer.n_dist_layers}
+                "n_dist": self.reinfer.n_dist_layers,
+                "n_tail": self.reinfer.n_tail_routed}
+            out["refresh_cutover"] = cutover
         out["plan_cache"] = dict(self._plan_cache_counters)
         out["metrics"] = compat.unified_metrics(
             engine_stats=engine_stats,
@@ -253,7 +281,12 @@ class Session:
             plan_cache=out["plan_cache"],
             timings=self.timings,
             live=(self.telemetry.metrics.to_dict()
-                  if self.telemetry is not None else None))
+                  if self.telemetry is not None else None),
+            cutover=cutover)
+        if self._engine is not None and self._engine.attrib is not None:
+            out["attribution"] = self._engine.attrib.summary()
+        if self._engine is not None and self._engine.health is not None:
+            out["health"] = self._engine.health.summary()
         return out
 
     def dump_trace(self, path) -> Dict[str, Any]:
@@ -266,9 +299,16 @@ class Session:
             raise ConfigError(
                 "dump_trace needs telemetry enabled: set "
                 "telemetry.enabled = true in the DealConfig")
+        extra: Dict[str, Any] = {}
+        if self._engine is not None and self._engine.attrib is not None:
+            extra["deal_attribution"] = self._engine.attrib.summary()
+            extra["deal_top_queries"] = self._engine.attrib.top_paths()
+        if self._engine is not None and self._engine.health is not None:
+            extra["deal_health"] = self._engine.health.summary()
         return obs.dump_chrome_trace(
             self.telemetry.tracer, path, self.telemetry.metrics,
-            process_name=f"deal.{self.cfg.model.name}")
+            process_name=f"deal.{self.cfg.model.name}",
+            extra=extra or None)
 
     def prometheus_text(self) -> str:
         """The metrics registry in Prometheus exposition format (empty
@@ -286,6 +326,9 @@ class Session:
         """Release the big arrays (graph, features, store, engine) and
         hand the process-current telemetry back to whoever held it."""
         if not self._closed:
+            if self._endpoint is not None:
+                self._endpoint.stop()
+                self._endpoint = None
             if self.telemetry is not None:
                 obs.install(self._prev_telemetry)
             from repro.core.partition import uninstall_plan_cache_counters

@@ -76,6 +76,10 @@ class Query:
     # wall-clock submit stamp (telemetry only; -1 when disabled) —
     # queue-wait histograms read it at first pin
     submit_ns: int = -1
+    # critical-path ledger (telemetry only; None when disabled): per-
+    # segment ns accumulated by the engine's hooks, closed by
+    # ``_finish_attrib`` into the session's AttributionCollector
+    attrib: Optional[Dict] = dataclasses.field(default=None, repr=False)
 
 
 @dataclasses.dataclass
@@ -121,6 +125,14 @@ class EmbeddingServeEngine:
         self.refresh_chunk_rows = int(refresh_chunk_rows)
         self.n_refresh_chunks = 0
         self._rjob: Optional[_RefreshRec] = None
+        # serving-tier health (telemetry only): built lazily on the
+        # first submit with telemetry enabled, so the disabled path pays
+        # nothing.  ``health_opts`` is overridable (Session wires
+        # TelemetrySpec's window/budget/threshold through it) as long as
+        # it happens before the first submit.
+        self.attrib = None              # obs.health.AttributionCollector
+        self.health = None              # obs.health.HealthMonitor
+        self.health_opts: Dict = {}
         self.qos: Optional[QoSScheduler] = None
         if tenants is not None:
             self.qos = QoSScheduler(tenants, batch_slots=batch_slots,
@@ -137,6 +149,10 @@ class EmbeddingServeEngine:
         if obs.enabled():
             q.submit_ns = obs.current().now_ns()
             obs.add("serve.submitted")
+            self._obs_init()
+            q.attrib = {"t_enq": q.submit_ns, "t_slot": -1, "wait": 0,
+                        "pin": 0, "recompute": 0, "gather": 0,
+                        "refresh_wait": 0, "slot": 0}
         if self.qos is not None:
             q.node_ids = np.asarray(q.node_ids, np.int64)
             self.qos.route(q)
@@ -183,6 +199,90 @@ class EmbeddingServeEngine:
             obs.observe("serve.queue_wait_ms", wait_ms)
             if self.qos is not None:
                 obs.observe(f"qos.tenant.{q.tenant}.wait_ms", wait_ms)
+            if self.health is not None:
+                self.health.on_wait(q.tenant, wait_ms)
+
+    # -- serving-tier health (telemetry only) ---------------------------
+    def _obs_init(self) -> None:
+        """Lazily build the attribution collector + health monitor on
+        the first submit with telemetry enabled."""
+        if self.attrib is not None:
+            return
+        from repro.obs.health import AttributionCollector, HealthMonitor
+        self.attrib = AttributionCollector()
+        slos = ({s.name: s.staleness_slo for s in self.qos.registry}
+                if self.qos is not None
+                else {"default": self.staleness_bound})
+        self.health = HealthMonitor(slos, **self.health_opts)
+
+    def _timed_pin(self, q: Query, pin) -> None:
+        """Run ``pin()`` charging its wall time to the query's ``pin``
+        segment, with the store's recompute-on-miss share split out into
+        ``recompute`` (the store keeps a cumulative recompute clock; the
+        delta across the pin is this query's admission recompute)."""
+        a = q.attrib
+        if a is None:
+            pin()
+            return
+        tel = obs.current()
+        t0 = tel.now_ns()
+        rc0 = self.store.recompute_s
+        pin()
+        rc = int((self.store.recompute_s - rc0) * 1e9)
+        a["recompute"] += rc
+        a["pin"] += max(tel.now_ns() - t0 - rc, 0)
+
+    def _charge_refresh_wait(self, active: List[int], dur: int) -> None:
+        """Refresh interference: work that ran between this step's
+        admissions and gathers delays every query holding a slot, so
+        the full duration lands on each one's ``refresh_wait``."""
+        if dur <= 0:
+            return
+        for i in active:
+            a = self.slot_q[i].attrib
+            if a is not None:
+                a["refresh_wait"] += dur
+
+    def _charge_gather(self, chunks: List, dur: int) -> None:
+        """Apportion one fused gather's wall time across the queries
+        that rode it, by their row share."""
+        tot = sum(hi - lo for _, lo, hi in chunks)
+        if tot <= 0:
+            return
+        for i, lo, hi in chunks:
+            a = self.slot_q[i].attrib
+            if a is not None:
+                a["gather"] += dur * (hi - lo) // tot
+
+    def _finish_attrib(self, q: Query) -> None:
+        """Close the query's critical-path ledger: stop the in-slot
+        clock, derive ``sched_wait`` as the unexplained in-slot
+        remainder, fold the segments into the per-tenant collector, and
+        record one ``serve.query`` trace event spanning submit -> done
+        (rendered on its own Perfetto track; the report CLI's top-k
+        critical-path table reads these events)."""
+        a, q.attrib = q.attrib, None
+        tel = obs.current()
+        if not tel.enabled or self.attrib is None:
+            return
+        now = tel.now_ns()
+        if a["t_slot"] >= 0:
+            a["slot"] += now - a["t_slot"]
+        e2e = max(now - q.submit_ns, 0)
+        comp = a["pin"] + a["recompute"] + a["gather"] + a["refresh_wait"]
+        segs = {"queue_wait": a["wait"], "pin": a["pin"],
+                "recompute": a["recompute"], "gather": a["gather"],
+                "refresh_wait": a["refresh_wait"],
+                "sched_wait": max(a["slot"] - comp, 0)}
+        self.attrib.record(uid=q.uid, tenant=q.tenant, e2e_ns=e2e,
+                           segments_ns=segs,
+                           served_version=q.served_version)
+        attrs = {"uid": int(q.uid), "tenant": q.tenant,
+                 "served_version": int(q.served_version),
+                 "_track": "queries"}
+        for k, v in segs.items():
+            attrs[f"{k}_ms"] = round(v / 1e6, 4)
+        tel.tracer.record("serve.query", q.submit_ns, e2e, 0, attrs)
 
     def _refresh(self) -> Dict:
         """The gate-free refresh body: ``full_epoch`` calls it directly
@@ -401,6 +501,7 @@ class EmbeddingServeEngine:
 
     # -- serve loop -----------------------------------------------------
     def _admit(self) -> None:
+        now = -1
         for i in range(self.B):
             if self.slot_q[i] is None and self.queue:
                 q = self.queue.pop(0)
@@ -411,6 +512,11 @@ class EmbeddingServeEngine:
                     np.float32)
                 self.slot_q[i] = q
                 self.cursor[i] = 0
+                if q.attrib is not None:
+                    if now < 0:
+                        now = obs.current().now_ns()
+                    q.attrib["wait"] += now - q.attrib["t_enq"]
+                    q.attrib["t_slot"] = now
 
     def step(self) -> bool:
         """Admit, maybe refresh, then one batched gather. Returns False
@@ -421,6 +527,13 @@ class EmbeddingServeEngine:
                  else self._step_fifo())
             if sp:
                 sp.set(progressed=r, qos=self.qos is not None)
+        if r and self.health is not None:
+            # cumulative counters; the monitor diffs them per step
+            self.health.on_step(
+                pending=self.log.pending,
+                evictions=self.store.n_evictions,
+                route_local=self.reinfer.n_local_cutovers,
+                route_dist=self.reinfer.n_dist_layers)
         return r
 
     def _step_fifo(self) -> bool:
@@ -432,7 +545,11 @@ class EmbeddingServeEngine:
                           for i in active)
         if self.log.pending and (needs_fresh
                                  or self.log.pending >= self.staleness_bound):
+            rt0 = obs.current().now_ns() if obs.enabled() else -1
             self.refresh()
+            if rt0 >= 0:
+                self._charge_refresh_wait(
+                    active, obs.current().now_ns() - rt0)
 
         # round-robin a fixed row budget across active slots; fuse chunks
         # that share (epoch, level) into one sharded gather
@@ -451,8 +568,13 @@ class EmbeddingServeEngine:
                 # row the query will read FIRST (recompute-on-miss) and
                 # only then lets the budget evict — a mid-query eviction
                 # can drop the store's pointer but never the snapshot's
-                q.snap = self.store.pinned_snapshot(q.node_ids, q.level)
+                def _pin(q=q):
+                    q.snap = self.store.pinned_snapshot(q.node_ids,
+                                                        q.level)
+                self._timed_pin(q, _pin)
                 q.served_version = q.snap.version
+                if self.health is not None:
+                    self.health.on_staleness(q.tenant, self.log.pending)
                 self._observe_wait(q)
             lo = self.cursor[i]
             per_key.setdefault(
@@ -463,6 +585,9 @@ class EmbeddingServeEngine:
             snap = self.slot_q[chunks[0][0]].snap
             ids = np.concatenate([self.slot_q[i].node_ids[lo:hi]
                                   for i, lo, hi in chunks])
+            tg0 = (obs.current().now_ns()
+                   if any(self.slot_q[i].attrib is not None
+                          for i, _, _ in chunks) else -1)
             gsp = obs.span("serve.gather")
             if gsp:
                 gsp.set(rows=int(ids.size), level=level,
@@ -484,6 +609,8 @@ class EmbeddingServeEngine:
             for i, lo, hi in chunks:
                 self.slot_q[i].out[lo:hi] = rows[off:off + (hi - lo)]
                 off += hi - lo
+            if tg0 >= 0:
+                self._charge_gather(chunks, obs.current().now_ns() - tg0)
         self.n_gather_steps += 1
 
         for i in active:
@@ -491,6 +618,8 @@ class EmbeddingServeEngine:
             if self.cursor[i] >= q.node_ids.size:
                 q.done = True
                 q.snap = None       # release the pinned epoch's shards
+                if q.attrib is not None:
+                    self._finish_attrib(q)
                 self.n_served += 1
                 self.slot_q[i] = None
         return True
@@ -504,26 +633,35 @@ class EmbeddingServeEngine:
         st = self.qos.state(q.tenant)
         stale = self.qos.unobserved_of(q.tenant, self.log.pending,
                                        self.ops_drained)
-        if st.view_version == self.store.version:
-            q.snap = self.store.pinned_snapshot(q.node_ids, q.level)
-            q.served_version = st.view_version
-        else:
-            snap = self.qos.epoch_snapshot(st.view_version)
-            if q.node_ids.size and \
-                    int(q.node_ids.max()) >= int(snap.bounds[-1]):
-                # the lagged view predates a tail append: tail ids
-                # resolve only for views at/after the append version,
-                # so this query serves on the CURRENT epoch instead —
-                # fresher than its SLO requires, never staler, and the
-                # tenant's other queries keep their pre-append bits
+
+        def _pin():
+            nonlocal stale
+            if st.view_version == self.store.version:
                 q.snap = self.store.pinned_snapshot(q.node_ids, q.level)
-                q.served_version = self.store.version
-                stale = self.log.pending
-                self.qos.on_view_restart(q.tenant)
-            else:
-                q.snap = snap
                 q.served_version = st.view_version
+            else:
+                snap = self.qos.epoch_snapshot(st.view_version)
+                if q.node_ids.size and \
+                        int(q.node_ids.max()) >= int(snap.bounds[-1]):
+                    # the lagged view predates a tail append: tail ids
+                    # resolve only for views at/after the append version,
+                    # so this query serves on the CURRENT epoch instead —
+                    # fresher than its SLO requires, never staler, and
+                    # the tenant's other queries keep their pre-append
+                    # bits
+                    q.snap = self.store.pinned_snapshot(q.node_ids,
+                                                        q.level)
+                    q.served_version = self.store.version
+                    stale = self.log.pending
+                    self.qos.on_view_restart(q.tenant)
+                else:
+                    q.snap = snap
+                    q.served_version = st.view_version
+
+        self._timed_pin(q, _pin)
         self.qos.on_pin(q, stale)
+        if self.health is not None:
+            self.health.on_staleness(q.tenant, stale)
         self._observe_wait(q)
 
     def _restart_on_current(self, q: Query) -> None:
@@ -557,11 +695,20 @@ class EmbeddingServeEngine:
         # (preempted queries pause with cursor+snapshot intact), idle
         # quota is lent out work-conserving
         preempt, admit = qos.plan_admission(self.slot_q)
+        now = (obs.current().now_ns()
+               if (preempt or admit) and obs.enabled() else -1)
         for i in preempt:
+            q = self.slot_q[i]
             if obs.enabled():
                 obs.add("qos.preemptions")
-                obs.add(f"qos.tenant.{self.slot_q[i].tenant}.preemptions")
-            qos.requeue_front(self.slot_q[i])
+                obs.add(f"qos.tenant.{q.tenant}.preemptions")
+            if q.attrib is not None and now >= 0:
+                # pause the in-slot clock; queue time resumes accruing
+                if q.attrib["t_slot"] >= 0:
+                    q.attrib["slot"] += now - q.attrib["t_slot"]
+                    q.attrib["t_slot"] = -1
+                q.attrib["t_enq"] = now
+            qos.requeue_front(q)
             self.slot_q[i] = None
         for i, q in admit:
             if q.out is None:
@@ -570,6 +717,9 @@ class EmbeddingServeEngine:
                      self.store.level_dim(q.level % self.store.n_levels)),
                     np.float32)
                 q.cursor = 0
+            if q.attrib is not None and now >= 0:
+                q.attrib["wait"] += now - q.attrib["t_enq"]
+                q.attrib["t_slot"] = now
             self.slot_q[i] = q
         active = [i for i in range(self.B) if self.slot_q[i] is not None]
         if not active and self._rjob is None:
@@ -580,6 +730,9 @@ class EmbeddingServeEngine:
         # advance (the rest keep their older epoch)
         due = qos.due_tenants(self.slot_q, self.log.pending,
                               self.ops_drained)
+        rt0 = (obs.current().now_ns()
+               if (self._rjob is not None or due) and obs.enabled()
+               else -1)
         if self._rjob is not None:
             # a chunked refresh is in flight: newly-due tenants join its
             # waiters (their pins defer until the commit), and exactly
@@ -608,6 +761,11 @@ class EmbeddingServeEngine:
                     self.refresh()
                 qos.advance_views(due, self.store.version,
                                   self.ops_drained, refreshed=refreshed)
+        if rt0 >= 0:
+            # refresh interference: the chunk (or inline refresh) that
+            # ran this step delayed every query already holding a slot
+            self._charge_refresh_wait(active,
+                                      obs.current().now_ns() - rt0)
         if not active:
             return True            # the job progressed; nothing to gather
 
@@ -647,6 +805,9 @@ class EmbeddingServeEngine:
             snap = self.slot_q[chunks[0][0]].snap
             ids = np.concatenate([self.slot_q[i].node_ids[lo:hi]
                                   for i, lo, hi in chunks])
+            tg0 = (obs.current().now_ns()
+                   if any(self.slot_q[i].attrib is not None
+                          for i, _, _ in chunks) else -1)
             gsp = obs.span("serve.gather")
             if gsp:
                 gsp.set(rows=int(ids.size), level=level,
@@ -673,6 +834,8 @@ class EmbeddingServeEngine:
                             q.node_ids[lo:hi], level)
                     except SnapshotMiss:
                         self._restart_on_current(q)
+            if tg0 >= 0:
+                self._charge_gather(chunks, obs.current().now_ns() - tg0)
         self.n_gather_steps += 1
         qos.account_slots(self.slot_q)
 
@@ -682,6 +845,8 @@ class EmbeddingServeEngine:
                 q.done = True
                 q.snap = None       # release the pinned epoch's shards
                 qos.on_done(q)
+                if q.attrib is not None:
+                    self._finish_attrib(q)
                 self.n_served += 1
                 self.slot_q[i] = None
         return True

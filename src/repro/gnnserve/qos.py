@@ -281,6 +281,21 @@ class QoSScheduler:
                     active[name] += 1
                     admit.append((i, q))
                     progressed = True
+        tel = obs.current()
+        if tel.enabled and (preempt or admit):
+            # zero-duration structured events: the per-query causal
+            # timeline (queue wait -> scheduler grant -> pin -> gather)
+            # needs the grant/preempt instants, not just counters
+            now = tel.now_ns()
+            for i in preempt:
+                victim = slot_q[i]
+                tel.tracer.record("qos.preempt", now, 0, 0,
+                                  {"slot": i, "uid": victim.uid,
+                                   "tenant": victim.tenant})
+            for i, q in admit:
+                tel.tracer.record("qos.grant", now, 0, 0,
+                                  {"slot": i, "uid": q.uid,
+                                   "tenant": q.tenant})
         return preempt, admit
 
     def requeue_front(self, q) -> None:

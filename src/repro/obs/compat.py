@@ -21,7 +21,7 @@ milliseconds (``_ms`` suffix, like every span-derived histogram).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 # unified name -> legacy EmbeddingStore.stats() key (values copied as-is)
 STORE_MAP = {
@@ -50,9 +50,19 @@ ENGINE_MAP = {
     "serve.queries": "n_served",
     "serve.gather_steps": "n_gather_steps",
     "serve.refreshes": "n_refreshes",
+    "serve.refresh_chunks": "n_refresh_chunks",
     "serve.full_epochs": "n_full_epochs",
     "serve.onboarded": "n_onboarded",
     "serve.pending_mutations": "pending_mutations",
+}
+
+# unified name -> Session.stats()["refresh_cutover"] key (the PR 7
+# dist-vs-local routing decision counters + the PR 8 tail-row routing)
+CUTOVER_MAP = {
+    "refresh.cutover_threshold": "threshold",
+    "refresh.route_local": "n_local",
+    "refresh.route_dist": "n_dist",
+    "refresh.route_tail_rows": "n_tail",
 }
 
 # unified per-tenant suffix -> legacy QoSScheduler.stats() tenant key.
@@ -142,12 +152,92 @@ def unified_from_refresh(refresh_stats: Dict[str, Any]) -> Dict[str, float]:
     for uni, legacy in (("delta.resampled", "n_resampled"),
                         ("delta.feat_updates", "n_feat_updates"),
                         ("delta.rev_splices", "rev_splices"),
-                        ("delta.rev_rebuilds", "rev_rebuilds")):
+                        ("delta.rev_rebuilds", "rev_rebuilds"),
+                        ("delta.chunks", "n_chunks"),
+                        ("delta.tail_routed", "n_tail_routed"),
+                        ("delta.onboarded", "n_onboarded")):
         if legacy in refresh_stats:
             out[uni] = refresh_stats[legacy]
+    if "local_cutover" in refresh_stats:
+        out["delta.local_cutover"] = int(bool(refresh_stats["local_cutover"]))
     for l, n in enumerate(refresh_stats.get("frontier_sizes", [])):
         out[f"delta.frontier_rows.layer{l}"] = n
     return out
+
+
+def unified_from_cutover(cutover: Dict[str, Any]) -> Dict[str, float]:
+    """``Session.stats()["refresh_cutover"]`` -> unified names."""
+    return {uni: cutover[legacy] for uni, legacy in CUTOVER_MAP.items()
+            if legacy in cutover}
+
+
+# Session.stats() keys that are structural containers or derived views
+# rather than metric leaves: each one is either translated by a dedicated
+# map above, merged from the live registry, or an aggregate the report
+# CLI consumes wholesale.  Anything outside these AND the maps is key
+# drift — ``unified_from_session`` returns it as unmapped so the guard
+# test fails loudly instead of the unified view silently thinning out.
+SESSION_PASSTHROUGH = frozenset([
+    "metrics",          # already the unified view
+    "attribution",      # per-tenant critical-path aggregate (report CLI)
+    "health",           # HealthMonitor summary (alert list + burn rates)
+])
+SESSION_SCALARS = {
+    "n_nodes": "session.n_nodes",
+    "n_edges": "session.n_edges",
+}
+
+
+def unified_from_session(stats: Dict[str, Any]
+                         ) -> Tuple[Dict[str, float], List[str]]:
+    """Walk a full ``Session.stats()`` tree and resolve EVERY leaf to a
+    registered unified metric name.  Returns ``(unified, unmapped)`` —
+    the guard test asserts ``unmapped == []`` so new stats keys cannot
+    land without a naming-scheme entry."""
+    unified: Dict[str, float] = {}
+    unmapped: List[str] = []
+    for k, v in stats.items():
+        if k in SESSION_PASSTHROUGH:
+            continue
+        if k in SESSION_SCALARS:
+            unified[SESSION_SCALARS[k]] = v
+        elif k.startswith("t_") and isinstance(v, (int, float)):
+            unified[f"session.{k[2:].removesuffix('_s')}_ms"] = v * 1e3
+        elif k == "plan_cache" and isinstance(v, dict):
+            for kk, vv in v.items():
+                if kk in ("hits", "misses"):
+                    unified[f"plan_cache.{kk}"] = vv
+                else:
+                    unmapped.append(f"plan_cache.{kk}")
+        elif k == "refresh_cutover" and isinstance(v, dict):
+            unified.update(unified_from_cutover(v))
+            known = set(CUTOVER_MAP.values())
+            unmapped.extend(f"refresh_cutover.{kk}" for kk in v
+                            if kk not in known)
+        elif k == "tenants" and isinstance(v, dict):
+            rev = {legacy: uni for uni, legacy in TENANT_MAP.items()}
+            for name, t in v.items():
+                for kk, vv in t.items():
+                    if kk in rev:
+                        unified[f"qos.tenant.{name}.{rev[kk]}"] = vv
+                    else:
+                        unmapped.append(f"tenants.{name}.{kk}")
+        elif k == "store_recompute_s":
+            unified["store.recompute_ms"] = v * 1e3
+        elif k.startswith("store_"):
+            rev = {legacy: uni for uni, legacy in STORE_MAP.items()}
+            legacy = k[len("store_"):]
+            if legacy in rev:
+                unified[rev[legacy]] = v
+            else:
+                unmapped.append(k)
+        else:
+            rev = {legacy: uni for uni, legacy in ENGINE_MAP.items()}
+            if k in rev:
+                unified[rev[k]] = v
+            else:
+                unmapped.append(k)
+    return unified, unmapped
 
 
 def unified_metrics(engine_stats: Optional[Dict[str, Any]] = None,
@@ -155,7 +245,8 @@ def unified_metrics(engine_stats: Optional[Dict[str, Any]] = None,
                     refresh_stats: Optional[Dict[str, Any]] = None,
                     plan_cache: Optional[Dict[str, int]] = None,
                     timings: Optional[Dict[str, float]] = None,
-                    live: Optional[Dict[str, float]] = None
+                    live: Optional[Dict[str, float]] = None,
+                    cutover: Optional[Dict[str, Any]] = None
                     ) -> Dict[str, float]:
     """The whole unified view: every legacy shape translated, then the
     LIVE telemetry registry merged on top (measured beats derived)."""
@@ -166,6 +257,8 @@ def unified_metrics(engine_stats: Optional[Dict[str, Any]] = None,
         out.update(unified_from_engine(engine_stats))
     if refresh_stats:
         out.update(unified_from_refresh(refresh_stats))
+    if cutover:
+        out.update(unified_from_cutover(cutover))
     if plan_cache:
         out["plan_cache.hits"] = plan_cache.get("hits", 0)
         out["plan_cache.misses"] = plan_cache.get("misses", 0)

@@ -9,6 +9,11 @@ timestamp containment).  The metrics registry rides along under a
 top-level ``deal_metrics`` key — Perfetto ignores unknown keys, so one
 file carries the whole telemetry picture.
 
+Events recorded with a ``_track`` attr (the engine's per-query
+``serve.query`` timelines) render on their own named thread row instead
+of the main pipeline track, so long-lived query spans don't visually
+swallow the nested step/gather flame graph.
+
 ``prometheus_text`` renders the registry in the Prometheus exposition
 format (``# TYPE`` lines; dotted names sanitized to underscores;
 histograms as summaries with p50/p95 quantile samples).
@@ -28,11 +33,22 @@ TRACE_TID = 0
 
 def chrome_trace(tracer: Tracer,
                  metrics: Optional[MetricsRegistry] = None,
-                 process_name: str = "deal") -> dict:
+                 process_name: str = "deal",
+                 extra: Optional[dict] = None) -> dict:
     events = [{"name": "process_name", "ph": "M", "pid": TRACE_PID,
                "tid": TRACE_TID, "args": {"name": process_name}}]
+    tracks = {}                 # track label -> tid (1, 2, ...)
     for name, t0, dur, depth, attrs in tracer.events_in_order():
         args = dict(attrs) if attrs else {}
+        tid = TRACE_TID
+        track = args.pop("_track", None)
+        if track is not None:
+            tid = tracks.get(track)
+            if tid is None:
+                tid = tracks[track] = len(tracks) + 1
+                events.append({"name": "thread_name", "ph": "M",
+                               "pid": TRACE_PID, "tid": tid,
+                               "args": {"name": str(track)}})
         args["depth"] = depth
         events.append({"name": name,
                        "cat": name.split(".", 1)[0],
@@ -40,20 +56,24 @@ def chrome_trace(tracer: Tracer,
                        "ts": t0 / 1e3,          # us
                        "dur": dur / 1e3,        # us
                        "pid": TRACE_PID,
-                       "tid": TRACE_TID,
+                       "tid": tid,
                        "args": args})
     out = {"traceEvents": events, "displayTimeUnit": "ms"}
     if tracer.n_dropped:
         out["deal_dropped_spans"] = tracer.n_dropped
     if metrics is not None:
         out["deal_metrics"] = metrics.to_dict()
+    if extra:
+        out.update(extra)
     return out
 
 
 def dump_chrome_trace(tracer: Tracer, path,
                       metrics: Optional[MetricsRegistry] = None,
-                      process_name: str = "deal") -> dict:
-    doc = chrome_trace(tracer, metrics, process_name=process_name)
+                      process_name: str = "deal",
+                      extra: Optional[dict] = None) -> dict:
+    doc = chrome_trace(tracer, metrics, process_name=process_name,
+                       extra=extra)
     with open(path, "w") as f:
         json.dump(doc, f, indent=1, sort_keys=True)
         f.write("\n")

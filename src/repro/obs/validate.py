@@ -2,7 +2,8 @@
 
     PYTHONPATH=src python -m repro.obs.validate TRACE.json \
         [--min-coverage 0.9] \
-        [--require-cats construct,sample,featprep,ops,serve,refresh,store]
+        [--require-cats construct,sample,featprep,ops,serve,refresh,store] \
+        [--require-spans refresh.chunk,refresh.layer]
 
 The CI obs smoke step runs this over ``Session.dump_trace`` output:
 
@@ -13,6 +14,12 @@ The CI obs smoke step runs this over ``Session.dump_trace`` output:
     before the first dot) appears at least once, so sampling / feature
     prep / per-layer ops / serve / refresh are each individually
     attributed, not lumped into one blob;
+  * span inventory — every EXACT span name in ``--require-spans``
+    appears at least once; categories are too coarse for the
+    chunked-refresh path (``refresh.chunk`` / ``refresh.layer`` /
+    ``refresh.route`` all share the ``refresh`` category with the
+    plain inline-refresh spans, so only a name-level check proves the
+    preemptible path actually ran and got traced);
   * coverage — the interval UNION of all spans must cover at least
     ``--min-coverage`` of the traced window (earliest start to latest
     end): the trace explains where the wall time went.
@@ -31,7 +38,8 @@ DEFAULT_CATS = "construct,sample,featprep,ops,serve,refresh,store"
 
 
 def validate_trace(doc: dict, min_coverage: float = 0.9,
-                   require_cats: Tuple[str, ...] = ()
+                   require_cats: Tuple[str, ...] = (),
+                   require_spans: Tuple[str, ...] = ()
                    ) -> Tuple[List[str], Dict[str, float]]:
     """Returns (problems, summary).  Empty problems == valid."""
     problems: List[str] = []
@@ -42,6 +50,7 @@ def validate_trace(doc: dict, min_coverage: float = 0.9,
     if not isinstance(events, list):
         return (["traceEvents: missing or not a list"], {})
 
+    names = set()
     spans = []       # (ts, dur, cat) in us
     for i, ev in enumerate(events):
         if not isinstance(ev, dict):
@@ -68,6 +77,7 @@ def validate_trace(doc: dict, min_coverage: float = 0.9,
         for key in ("pid", "tid"):
             if not isinstance(ev.get(key), int):
                 problems.append(f"traceEvents[{i}] ({name}): missing {key}")
+        names.add(name)
         spans.append((float(ts), float(dur),
                       ev.get("cat") or name.split(".", 1)[0]))
 
@@ -81,6 +91,13 @@ def validate_trace(doc: dict, min_coverage: float = 0.9,
             problems.append(
                 f"required stage category {want!r} has no spans "
                 f"(present: {', '.join(sorted(cats))})")
+    for want in require_spans:
+        if want and want not in names:
+            prefix = want.split(".", 1)[0]
+            near = sorted(n for n in names if n.startswith(prefix))
+            problems.append(
+                f"required span {want!r} never recorded "
+                f"(nearest by prefix: {', '.join(near) or 'none'})")
 
     lo = min(ts for ts, _, _ in spans)
     hi = max(ts + dur for ts, dur, _ in spans)
@@ -114,11 +131,17 @@ def main(argv=None) -> int:
                     help="comma list of span-name prefixes that must "
                          f"each appear (default: {DEFAULT_CATS}; '' "
                          "disables the check)")
+    ap.add_argument("--require-spans", default="",
+                    help="comma list of EXACT span names that must each "
+                         "appear (e.g. refresh.chunk,refresh.layer for "
+                         "the chunked-refresh path; '' disables)")
     args = ap.parse_args(argv)
     with open(args.trace) as f:
         doc = json.load(f)
     cats = tuple(c for c in args.require_cats.split(",") if c)
-    problems, summary = validate_trace(doc, args.min_coverage, cats)
+    span_names = tuple(s for s in args.require_spans.split(",") if s)
+    problems, summary = validate_trace(doc, args.min_coverage, cats,
+                                       span_names)
     if problems:
         for p in problems:
             print(f"INVALID: {p}", file=sys.stderr)

@@ -1,0 +1,489 @@
+"""Serving-tier health observability: per-query critical-path
+attribution (segments must reconcile with measured e2e wall time), the
+SLO burn-rate monitor's detectors and hysteresis, the live telemetry
+endpoint, the report CLI + trajectory gate, the Session stats-leaf
+naming guard, and the bitwise proof that the instrumented SERVING path
+equals the uninstrumented one (ref + pallas)."""
+import json
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.api import (DealConfig, ExecutorSpec, GraphSpec, ModelSpec,
+                       QoSSpec, Session, TelemetrySpec,
+                       tenants_from_string)
+from repro.gnnserve import Query
+from repro.obs import compat, report
+from repro.obs.health import SEGMENTS, AttributionCollector, HealthMonitor
+from repro.obs.validate import validate_trace
+
+TOL = report.ATTRIBUTION_TOLERANCE
+
+
+def _cfg(*, executor="ref", telemetry=True, tenants="", n=256,
+         bound=8, **tel_kw):
+    return DealConfig(
+        graph=GraphSpec(dataset="rmat", n_nodes=n, avg_degree=4,
+                        fanout=4, seed=0),
+        model=ModelSpec(name="gcn", n_layers=2, d_feature=16),
+        executor=ExecutorSpec(name=executor),
+        qos=QoSSpec(staleness_bound=bound, batch_slots=4,
+                    rows_per_step=64,
+                    tenants=(tenants_from_string(tenants)
+                             if tenants else ())),
+        telemetry=TelemetrySpec(enabled=telemetry, **tel_kw))
+
+
+def _drive(eng, *, ticks=20, n=256, tenants=("ui", "batch"), seed=0):
+    """Deterministic mixed traffic; returns the completed queries."""
+    rng = np.random.default_rng(seed)
+    qs = []
+    uid = 0
+    for _ in range(ticks):
+        for name in tenants:
+            rows = 8 if name == "ui" else 32
+            q = Query(uid=uid, node_ids=rng.integers(0, n, rows),
+                      tenant=name)
+            uid += 1
+            eng.submit(q)
+            qs.append(q)
+        eng.mutate().add_edges(rng.integers(0, n, 2),
+                               rng.integers(0, n, 2))
+        eng.run()
+    return qs
+
+
+# ----------------------------------------------------------------------
+# AttributionCollector
+# ----------------------------------------------------------------------
+
+def test_attribution_collector_aggregates_and_ranks():
+    c = AttributionCollector(top_k=2)
+    for i, e2e in enumerate([10_000, 30_000, 20_000]):
+        c.record(uid=i, tenant="ui", e2e_ns=e2e,
+                 segments_ns={"queue_wait": e2e // 2, "pin": e2e // 2})
+    c.record(uid=9, tenant="batch", e2e_ns=5_000,
+             segments_ns={"gather": 4_000})
+    assert c.n_queries == 4
+    s = c.summary()
+    assert s["ui"]["n_queries"] == 3
+    assert s["ui"]["e2e_ms"]["sum"] == pytest.approx(0.06)
+    assert s["ui"]["e2e_ms"]["max"] == pytest.approx(0.03)
+    assert s["ui"]["attributed_frac"] == pytest.approx(1.0)
+    # unmeasured time shows up as an attribution gap, not a crash
+    assert s["batch"]["attributed_frac"] == pytest.approx(0.8)
+    assert s["batch"]["segments_frac"]["gather"] == pytest.approx(0.8)
+    top = c.top_paths()
+    assert [r["uid"] for r in top] == [1, 2]        # slowest first, k=2
+    assert set(top[0]["segments_ms"]) == set(SEGMENTS)
+
+
+# ----------------------------------------------------------------------
+# HealthMonitor detectors
+# ----------------------------------------------------------------------
+
+def test_slo_burn_fires_once_with_hysteresis():
+    m = HealthMonitor({"ui": 4}, window=10, error_budget=0.1,
+                      burn_threshold=2.0)
+    for _ in range(3):
+        m.on_staleness("ui", 10)        # violating: burn -> 10
+    assert [a["kind"] for a in m.alerts] == ["slo_burn"]
+    assert m.alerts[0]["subject"] == "ui"
+    assert m.burn_rate["ui"] >= 2.0
+    for _ in range(3):                   # still above threshold/2: armed
+        m.on_staleness("ui", 10)
+    assert len(m.alerts) == 1            # edge-triggered, not per-step
+    for _ in range(40):                  # healthy reads re-arm it
+        m.on_staleness("ui", 0)
+    assert m.burn_rate["ui"] < 1.0
+    m.on_staleness("ui", 10)
+    for _ in range(5):
+        m.on_staleness("ui", 10)
+    assert [a["kind"] for a in m.alerts] == ["slo_burn", "slo_burn"]
+
+
+def test_wait_burn_disabled_by_default_and_fires_when_set():
+    off = HealthMonitor({"ui": 4}, window=4)
+    off.on_wait("ui", 1e9)
+    assert off.alerts == [] and off.wait_burn_rate == {}
+    on = HealthMonitor({"ui": 4}, window=4, error_budget=0.5,
+                       burn_threshold=2.0, wait_slo_ms=1.0)
+    for _ in range(4):
+        on.on_wait("ui", 50.0)
+    assert [a["kind"] for a in on.alerts] == ["wait_burn"]
+
+
+def test_evict_thrash_and_counter_reset_tolerance():
+    m = HealthMonitor({"d": 8}, window=8, thrash_evictions=10)
+    ev = 0
+    for _ in range(5):                    # first step primes the baseline
+        ev += 3
+        m.on_step(pending=0, evictions=ev)
+    assert [a["kind"] for a in m.alerts] == ["evict_thrash"]
+    # a full_epoch store swap resets cumulative counters: the monitor
+    # must clamp the negative delta, not fire or crash
+    m2 = HealthMonitor({"d": 8}, window=8, thrash_evictions=10)
+    m2.on_step(pending=0, evictions=100)
+    m2.on_step(pending=0, evictions=0)          # swapped store
+    m2.on_step(pending=0, evictions=2)
+    assert m2.alerts == []
+
+
+def test_refresh_backlog_needs_growth_and_magnitude():
+    m = HealthMonitor({"d": 2}, window=4, backlog_factor=2.0)
+    for p in (1, 2, 3, 4):                      # grows but under cap=4...
+        m.on_step(pending=p, evictions=0)
+    m.on_step(pending=9, evictions=0)           # ...now over, and grew
+    assert [a["kind"] for a in m.alerts] == ["refresh_backlog"]
+    flat = HealthMonitor({"d": 2}, window=4, backlog_factor=2.0)
+    for _ in range(8):
+        flat.on_step(pending=9, evictions=0)    # high but not growing
+    assert flat.alerts == []
+
+
+def test_route_flap_detector():
+    m = HealthMonitor({"d": 8}, window=32, flap_threshold=4)
+    loc = dist = 0
+    for i in range(10):                          # alternate every step
+        if i % 2:
+            loc += 1
+        else:
+            dist += 1
+        m.on_step(pending=0, evictions=0, route_local=loc,
+                  route_dist=dist)
+    assert [a["kind"] for a in m.alerts] == ["route_flap"]
+    steady = HealthMonitor({"d": 8}, window=32, flap_threshold=4)
+    for i in range(10):                          # always local: no flips
+        steady.on_step(pending=0, evictions=0, route_local=i + 1,
+                       route_dist=0)
+    assert steady.alerts == []
+
+
+def test_alert_lands_in_counters_and_trace():
+    tel = obs.Telemetry(enabled=True, clock=obs.FakeClock(0, 1000))
+    with obs.use(tel):
+        m = HealthMonitor({"ui": 1}, window=4, error_budget=0.5,
+                          burn_threshold=1.5)
+        for _ in range(4):
+            m.on_staleness("ui", 5)
+    assert tel.metrics.to_dict()["health.alerts"] == 1
+    assert tel.metrics.to_dict()["health.alerts.slo_burn"] == 1
+    ev = [e for e in tel.tracer.events if e[0] == "health.alert"]
+    assert len(ev) == 1 and ev[0][4]["kind"] == "slo_burn"
+    assert tel.metrics.to_dict()["health.burn_rate.ui"] >= 1.5
+
+
+# ----------------------------------------------------------------------
+# end-to-end attribution through the serving engine
+# ----------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def served_session():
+    s = Session.build(_cfg(tenants="ui:4:2:0:4,batch:1:1:0:64"))
+    qs = _drive(s.serve(), ticks=20)
+    yield s, qs
+    s.close()
+
+
+def test_attribution_closes_within_tolerance(served_session):
+    s, qs = served_session
+    assert all(q.done for q in qs)
+    attrib = s.stats()["attribution"]
+    assert set(attrib) == {"ui", "batch"}
+    for tenant, a in attrib.items():
+        assert a["n_queries"] == 20
+        assert abs(a["attributed_frac"] - 1.0) <= TOL, \
+            f"{tenant} closes at {a['attributed_frac']:.3f}"
+        assert set(a["segments_frac"]) == set(SEGMENTS)
+
+
+def test_per_query_events_ride_their_own_track(served_session):
+    s, qs = served_session
+    doc = obs.chrome_trace(s.telemetry.tracer)
+    qevents = [e for e in doc["traceEvents"]
+               if e.get("name") == "serve.query"]
+    assert len(qevents) == len(qs)
+    tids = {e["tid"] for e in qevents}
+    assert tids == {1}                   # own Perfetto track
+    assert any(e.get("ph") == "M" and e.get("name") == "thread_name"
+               and e["args"]["name"] == "queries"
+               for e in doc["traceEvents"])
+    args = qevents[0]["args"]
+    assert {"uid", "tenant"} <= set(args)
+    assert all(f"{seg}_ms" in args for seg in SEGMENTS)
+    # the non-query spans are untouched by the track assignment
+    assert all(e["tid"] == 0 for e in doc["traceEvents"]
+               if e.get("ph") == "X" and e["name"] != "serve.query")
+    # scheduler grants are in the timeline too, uid-attributed
+    grants = [e for e in doc["traceEvents"]
+              if e.get("name") == "qos.grant"]
+    assert len(grants) >= len(qs)            # re-grants after preemption
+    assert {"uid", "tenant", "slot"} <= set(grants[0]["args"])
+
+
+def test_dump_trace_embeds_attribution_and_report_checks(
+        served_session, tmp_path):
+    s, _ = served_session
+    doc = s.dump_trace(tmp_path / "t.json")
+    assert set(doc["deal_attribution"]) == {"ui", "batch"}
+    assert doc["deal_top_queries"][0]["e2e_ms"] >= \
+        doc["deal_top_queries"][-1]["e2e_ms"]
+    assert "deal_health" in doc
+    text = report.render_report(doc)
+    assert "critical paths" in text and "per-tenant attribution" in text
+    assert report.check_trace(doc) == []
+    assert report.main([str(tmp_path / "t.json"), "--check"]) == 0
+
+
+def test_attribution_absent_without_telemetry():
+    # shield against the module fixture's still-installed telemetry:
+    # this session must really serve with obs disabled
+    with obs.use(obs.DISABLED):
+        with Session.build(_cfg(telemetry=False)) as s:
+            _drive(s.serve(), ticks=3, tenants=("default",))
+            st = s.stats()
+            assert "attribution" not in st and "health" not in st
+            assert s.engine.attrib is None and s.engine.health is None
+
+
+def test_fifo_engine_attributes_too():
+    with Session.build(_cfg(bound=64)) as s:
+        _drive(s.serve(), ticks=6, tenants=("default",))
+        a = s.stats()["attribution"]["default"]
+        assert a["n_queries"] == 6
+        assert abs(a["attributed_frac"] - 1.0) <= TOL
+
+
+# ----------------------------------------------------------------------
+# synthetic SLO violation: alert on the endpoint AND in the report
+# ----------------------------------------------------------------------
+
+def test_slo_violation_surfaces_on_every_pane(tmp_path):
+    cfg = _cfg(bound=64, http_port=0,
+               snapshot_path=str(tmp_path / "snap.json"),
+               snapshot_every_s=30.0,       # exercised by stop()'s final write
+               health_window=8, slo_error_budget=0.5, burn_threshold=1.5,
+               wait_slo_ms=1e-6)            # every wait violates
+    s = Session.build(cfg)
+    try:
+        _drive(s.serve(), ticks=8, tenants=("default",))
+        st = s.stats()
+        kinds = {a["kind"] for a in st["health"]["alerts"]}
+        assert "wait_burn" in kinds
+        # pane 1: the Prometheus endpoint
+        base = f"http://127.0.0.1:{s.endpoint.port}"
+        text = urllib.request.urlopen(base + "/metrics").read().decode()
+        assert "deal_health_alerts_wait_burn 1" in text
+        assert s.prometheus_text() == text
+        hz = json.load(urllib.request.urlopen(base + "/healthz"))
+        assert hz["status"] == "alerting"
+        stats_doc = json.load(urllib.request.urlopen(base + "/stats"))
+        assert stats_doc["health"]["n_alerts"] >= 1
+        assert urllib.request.urlopen(base + "/stats").status == 200
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(base + "/nope")
+        # pane 2: the report CLI over the dumped trace
+        doc = s.dump_trace(tmp_path / "t.json")
+        text = report.render_report(doc)
+        assert "ALERT wait_burn" in text
+    finally:
+        s.close()
+    # the endpoint is down and the final snapshot is on disk
+    assert s.endpoint is None
+    snap = json.loads((tmp_path / "snap.json").read_text())
+    assert snap["health"]["status"] == "alerting"
+    assert snap["stats"]["health"]["n_alerts"] >= 1
+
+
+# ----------------------------------------------------------------------
+# bitwise neutrality of the instrumented SERVING path
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("executor", ["ref", "pallas"])
+def test_instrumented_serving_is_bitwise_neutral(executor):
+    outs = {}
+    for telemetry in (False, True):
+        with Session.build(_cfg(executor=executor,
+                                telemetry=telemetry,
+                                tenants="ui:4:2:0:4,batch:1:1:0:64")) as s:
+            qs = _drive(s.serve(), ticks=6)
+            assert all(q.done for q in qs)
+            outs[telemetry] = [(q.served_version, q.out.copy())
+                               for q in qs]
+    for (v_off, o_off), (v_on, o_on) in zip(outs[False], outs[True]):
+        assert v_off == v_on
+        assert o_off.dtype == o_on.dtype
+        assert np.array_equal(o_off, o_on)      # bitwise, not approx
+
+
+# ----------------------------------------------------------------------
+# ring-buffer overflow under a long serve loop
+# ----------------------------------------------------------------------
+
+def test_ring_overflow_keeps_nesting_and_exports(tmp_path):
+    with Session.build(_cfg(bound=64, capacity=64)) as s:
+        _drive(s.serve(), ticks=30, tenants=("default",))
+        tr = s.telemetry.tracer
+        assert tr.n_dropped > 0             # the buffer really wrapped
+        assert tr.depth == 0                # no corrupted open-span state
+        assert len(tr.events) == 64
+        # spans record at EXIT: completion times stay monotone through
+        # the wrap (oldest dropped, insertion order intact)
+        ends = [e[1] + e[2] for e in tr.events_in_order()]
+        assert ends == sorted(ends)
+        doc = s.dump_trace(tmp_path / "t.json")
+        assert doc["deal_dropped_spans"] == tr.n_dropped
+    problems, summary = validate_trace(doc, min_coverage=0.0)
+    assert problems == []
+    assert summary["n_spans"] == 64
+    # the report renders the truncated buffer and flags the drop
+    assert "dropped (ring buffer wrapped)" in report.render_report(doc)
+
+
+def test_truncated_export_under_fake_clock(tmp_path):
+    tel = obs.Telemetry(enabled=True, clock=obs.FakeClock(0, 1000),
+                        capacity=2)
+    with tel.span("outer"):
+        for i in range(4):
+            with tel.span(f"inner{i}"):
+                pass
+    doc = obs.dump_chrome_trace(tel.tracer, tmp_path / "t.json")
+    names = [e["name"] for e in doc["traceEvents"] if e.get("ph") == "X"]
+    assert names == ["inner3", "outer"]     # oldest spans gone
+    assert doc["deal_dropped_spans"] == 3
+    assert validate_trace(doc, min_coverage=0.0)[0] == []
+
+
+# ----------------------------------------------------------------------
+# validate: exact span-name inventory (the chunked-refresh CI gate)
+# ----------------------------------------------------------------------
+
+def test_validate_require_spans():
+    tel = obs.Telemetry(enabled=True, clock=obs.FakeClock(0, 1000))
+    with tel.span("refresh.chunk"):
+        pass
+    doc = obs.chrome_trace(tel.tracer)
+    assert validate_trace(doc, min_coverage=0.0,
+                          require_spans=("refresh.chunk",))[0] == []
+    problems, _ = validate_trace(
+        doc, min_coverage=0.0,
+        require_spans=("refresh.layer", "refresh.route"))
+    assert len(problems) == 2
+    assert "refresh.layer" in problems[0]
+    assert "refresh.chunk" in problems[0]   # nearest-by-prefix hint
+
+
+# ----------------------------------------------------------------------
+# stats-leaf naming guard + cutover translation
+# ----------------------------------------------------------------------
+
+def test_every_session_stats_leaf_resolves(served_session):
+    s, _ = served_session
+    st = s.stats()
+    s.refresh()                              # populate refresh counters
+    st = s.stats()
+    uni, unmapped = compat.unified_from_session(st)
+    assert unmapped == [], \
+        f"stats keys without a unified metric name: {unmapped}"
+    assert uni["serve.queries"] == st["n_served"]
+    assert uni["serve.refresh_chunks"] == st["n_refresh_chunks"]
+    assert uni["refresh.route_local"] == st["refresh_cutover"]["n_local"]
+    assert uni["refresh.route_tail_rows"] == \
+        st["refresh_cutover"]["n_tail"]
+    # and the unified metrics view carries the cutover counters too
+    assert st["metrics"]["refresh.route_local"] == \
+        st["refresh_cutover"]["n_local"]
+
+
+def test_unified_from_refresh_covers_chunking_keys():
+    uni = compat.unified_from_refresh(
+        {"n_chunks": 3, "n_tail_routed": 2, "local_cutover": True,
+         "n_onboarded": 1, "rows_gemm": 10})
+    assert uni == {"delta.chunks": 3, "delta.tail_routed": 2,
+                   "delta.local_cutover": 1, "delta.onboarded": 1,
+                   "delta.rows_gemm": 10}
+
+
+def test_unified_from_session_flags_drift(served_session):
+    s, _ = served_session
+    st = dict(s.stats())
+    st["n_fancy_new_counter"] = 7
+    st["tenants"] = {"ui": {"made_up_key": 1}}
+    _, unmapped = compat.unified_from_session(st)
+    assert "n_fancy_new_counter" in unmapped
+    assert "tenants.ui.made_up_key" in unmapped
+
+
+# ----------------------------------------------------------------------
+# trajectory: append + the share-drift gate
+# ----------------------------------------------------------------------
+
+def _traj_entry(share_store, *, fail=False):
+    return {"ts": "2026-08-08T00:00:00", "git": "abc1234",
+            "smoke": True, "executor": "ref",
+            "failures": ["qos"] if fail else [],
+            "benches": {"qos": {"stages": {
+                "store.gather": {"count": 5,
+                                 "total_ms": 100.0 * share_store},
+                "refresh.layer": {"count": 5,
+                                  "total_ms": 100.0
+                                  * (1 - share_store)}},
+                "coverage": 0.95, "n_spans": 10}}}
+
+
+def test_trajectory_append_caps_and_gate_passes_on_itself(tmp_path):
+    path = tmp_path / "TRAJECTORY.json"
+    for _ in range(3):
+        entries = report.append_trajectory(path, _traj_entry(0.3))
+    assert len(entries) == 3
+    problems, summary = report.check_trajectory(entries)
+    assert problems == [] and summary["verdict"] == "ok"
+    assert summary["compared"] == 2          # identical entries: pass
+    assert report.main(["--trajectory", str(path)]) == 0
+    # the file is capped
+    for _ in range(report.TRAJECTORY_MAX_ENTRIES + 5):
+        entries = report.append_trajectory(path, _traj_entry(0.3))
+    assert len(entries) == report.TRAJECTORY_MAX_ENTRIES
+
+
+def test_trajectory_gate_catches_share_drift_and_failures(tmp_path):
+    entries = [_traj_entry(0.3) for _ in range(4)]
+    drifted = entries + [_traj_entry(0.9)]    # +0.6 share > 0.3 tolerance
+    problems, summary = report.check_trajectory(drifted)
+    assert summary["verdict"] == "fail"
+    assert any("store.gather" in p for p in problems)
+    path = tmp_path / "TRAJECTORY.json"
+    for e in drifted:
+        report.append_trajectory(path, e)
+    assert report.main(["--trajectory", str(path)]) == 1
+    # a failed bench in the latest entry always regresses
+    problems, _ = report.check_trajectory(entries
+                                          + [_traj_entry(0.3, fail=True)])
+    assert any("failed" in p for p in problems)
+    # a fresh seed (no comparable baseline) passes
+    assert report.check_trajectory([_traj_entry(0.3)])[0] == []
+    # baselines never mix (executor, smoke) keys
+    other = dict(_traj_entry(0.9)); other["executor"] = "pallas"
+    problems, summary = report.check_trajectory(entries + [other])
+    assert summary["n_baseline"] == 0 and problems == []
+
+
+def test_report_check_rejects_broken_traces():
+    assert report.check_trace({"traceEvents": []}) != []
+    bad_attrib = {
+        "traceEvents": [{"name": "a", "ph": "X", "ts": 0, "dur": 1,
+                         "pid": 0, "tid": 0}],
+        "deal_attribution": {"ui": {
+            "n_queries": 1,
+            "e2e_ms": {"sum": 1, "mean": 1, "p50": 1, "p95": 1, "max": 1},
+            "segments_ms": {s: 0 for s in SEGMENTS},
+            "segments_frac": {s: 0 for s in SEGMENTS},
+            "attributed_frac": 0.5}}}       # closes at 50%: outside 5%
+    assert any("closes at 0.500" in p
+               for p in report.check_trace(bad_attrib))
+    orphan = {"traceEvents": [
+        {"name": "serve.query", "ph": "X", "ts": 0, "dur": 1,
+         "pid": 0, "tid": 0, "args": {"tenant": "ui", "uid": 0}}]}
+    assert any("deal_attribution" in p for p in report.check_trace(orphan))
