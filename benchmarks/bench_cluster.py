@@ -1,0 +1,140 @@
+"""Cluster serving tier: what does the multi-process front door cost?
+
+Builds the SAME DealConfig world twice — once as the single-process
+``Session`` engine, once as a 2-shard ``gnnserve/cluster`` deployment —
+and drives identical deterministic lookups through both (asserting
+bitwise equality along the way: the cluster rows ARE the single-process
+rows, so every latency delta is pure serving-path overhead, not a
+different answer).
+
+Rows (us_per_call is per client lookup unless noted):
+
+  cluster/lookup_local        single-process engine baseline
+  cluster/lookup_1shard       router hop, ids owned by ONE shard
+                              (route + 1 RPC + no gather merge)
+  cluster/lookup_scatter      ids spanning both shards (scatter + the
+                              parallel gather + client-order merge)
+  cluster/router_overhead_*   the deltas vs the local baseline
+  cluster/commit_broadcast    one sequenced mutation-batch commit
+                              fanned to every shard (incl. worker WAL
+                              fsync + refresh + checkpoint)
+
+The per-row derived column carries the scatter fan-out so the
+scatter/gather cost stays attributable in results/bench.csv.
+"""
+import numpy as np
+
+from benchmarks import common
+
+N = 4096
+DEG = 8
+FANOUT = 4
+LAYERS = 2
+D = 64
+LOOKUP_ROWS = 64
+ITERS = 40
+MUT_ITERS = 8
+
+
+def _cfg(n, *, cluster=False):
+    from repro.api import (ClusterSpec, DealConfig, ExecutorSpec,
+                           GraphSpec, ModelSpec, QoSSpec)
+    return DealConfig(
+        graph=GraphSpec(dataset="rmat", n_nodes=n, avg_degree=DEG,
+                        fanout=FANOUT, seed=7),
+        model=ModelSpec(name="gcn", n_layers=LAYERS, d_feature=D),
+        executor=ExecutorSpec(name="ref"),
+        qos=QoSSpec(staleness_bound=64),
+        cluster=ClusterSpec(n_shards=2 if cluster else 0))
+
+
+def _serve(eng, uid, ids):
+    from repro.gnnserve import Query
+    q = Query(uid, ids)
+    eng.submit(q)
+    eng.run()
+    return q.out
+
+
+def _timed_lookups(eng, ids_list, *, uid0):
+    t, outs = common.time_host(
+        lambda: [_serve(eng, uid0 + i, ids)
+                 for i, ids in enumerate(ids_list)], iters=1)
+    return t / len(ids_list), outs
+
+
+def run(smoke: bool = False):
+    from repro.api import Session
+
+    n = 512 if smoke else N
+    iters = 6 if smoke else ITERS
+    mut_iters = 3 if smoke else MUT_ITERS
+    rng = np.random.default_rng(3)
+    half = n // 2
+
+    s_local = Session.build(_cfg(n))
+    eng_local = s_local.serve()
+    s_clu = Session.build(_cfg(n, cluster=True))
+    eng_clu = s_clu.serve()
+    dep = s_clu.cluster
+
+    # identical deterministic id sets for every engine and shape
+    one_shard = [rng.integers(0, half, LOOKUP_ROWS).astype(np.int64)
+                 for _ in range(iters)]
+    scatter = [rng.integers(0, n, LOOKUP_ROWS).astype(np.int64)
+               for _ in range(iters)]
+
+    us_local, out_l1 = _timed_lookups(eng_local, one_shard, uid0=0)
+    us_local2, out_l2 = _timed_lookups(eng_local, scatter, uid0=1000)
+    us_local = 0.5 * (us_local + us_local2) * 1e6
+
+    sq0 = dep.router.n_subqueries
+    us_1shard, out_c1 = _timed_lookups(eng_clu, one_shard, uid0=0)
+    fan_1 = (dep.router.n_subqueries - sq0) / iters
+    sq0 = dep.router.n_subqueries
+    us_scatter, out_c2 = _timed_lookups(eng_clu, scatter, uid0=1000)
+    fan_2 = (dep.router.n_subqueries - sq0) / iters
+
+    for a, b in zip(out_l1 + out_l2, out_c1 + out_c2):
+        assert np.array_equal(a, b), \
+            "cluster lookup diverged from single-process bytes"
+
+    us_1shard *= 1e6
+    us_scatter *= 1e6
+    common.emit("cluster/lookup_local", us_local,
+                f"rows={LOOKUP_ROWS} n={n}")
+    common.emit("cluster/lookup_1shard", us_1shard,
+                f"rows={LOOKUP_ROWS} fanout={fan_1:.1f}")
+    common.emit("cluster/lookup_scatter", us_scatter,
+                f"rows={LOOKUP_ROWS} fanout={fan_2:.1f}")
+    common.emit("cluster/router_overhead_1shard",
+                us_1shard - us_local, "vs_local")
+    common.emit("cluster/router_overhead_scatter",
+                us_scatter - us_local, "vs_local")
+
+    # sequenced commit broadcast: mutations fan to every shard, each
+    # worker WAL-appends (fsync), refreshes, and checkpoints
+    def _commit_once(i):
+        log = eng_clu.mutate()
+        for _ in range(4):
+            a, b = rng.integers(0, n, 2)
+            log.add_edge(int(a), int(b))
+        eng_clu.refresh()
+        return i
+
+    t, _ = common.time_host(
+        lambda: [_commit_once(i) for i in range(mut_iters)], iters=1)
+    common.emit("cluster/commit_broadcast", t / mut_iters * 1e6,
+                f"shards=2 edges_per_commit=4 seq={dep.router.seq[0]}")
+
+    digs = dep.router.digests()
+    assert digs[0]["digests"] == digs[1]["digests"], \
+        "shards diverged during the bench"
+
+    st = s_clu.stats()
+    common.emit("cluster/subquery_fanout",
+                st["cluster"]["router"]["n_subqueries"]
+                / max(st["cluster"]["router"]["n_lookups"], 1),
+                f"scatter_lookups={st['cluster']['router']['n_scatter']}")
+    s_local.close()
+    s_clu.close()

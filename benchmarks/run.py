@@ -49,6 +49,7 @@ MODULES = {
     "incremental": "benchmarks.bench_incremental",
     "qos": "benchmarks.bench_qos",
     "kernels": "benchmarks.bench_kernels",
+    "cluster": "benchmarks.bench_cluster",
 }
 ALIASES = {"e2e": "fig14"}
 

@@ -6,7 +6,7 @@ One config tree, one lifecycle object, four plugin registries:
                    eagerly validated (every bad field named);
                    sub-specs: GraphSpec, ModelSpec, PartitionSpec,
                    ExecutorSpec, StoreSpec, QoSSpec, RefreshSpec,
-                   TelemetrySpec.
+                   TelemetrySpec, ClusterSpec.
   ``Session``      ``Session.build(cfg)`` -> ``infer_all()`` /
                    ``serve()`` / ``apply_mutations()`` / ``refresh()``
                    / ``full_epoch()`` / ``stats()`` / ``close()``.
@@ -21,9 +21,10 @@ argparse -> ``DealConfig`` -> ``Session`` (see ``launch/infer_gnn.py``,
 ``launch/serve_embeddings.py``), with ``--config``/``--dump-config``
 making every run reproducible from one JSON artifact.
 """
-from repro.api.config import (ConfigError, DealConfig, ExecutorSpec,
-                              GraphSpec, ModelSpec, PartitionSpec, QoSSpec,
-                              RefreshSpec, StoreSpec, TelemetrySpec,
+from repro.api.config import (ClusterSpec, ConfigError, DealConfig,
+                              ExecutorSpec, GraphSpec, ModelSpec,
+                              PartitionSpec, QoSSpec, RefreshSpec,
+                              StoreSpec, TelemetrySpec,
                               tenants_from_string)
 from repro.api.registry import (ADMISSIONS, EVICT_POLICIES, EXECUTORS,
                                 MODELS, Registry, register_admission,
@@ -31,7 +32,8 @@ from repro.api.registry import (ADMISSIONS, EVICT_POLICIES, EXECUTORS,
                                 register_model)
 from repro.api.session import Session
 
-__all__ = ["ConfigError", "DealConfig", "ExecutorSpec", "GraphSpec",
+__all__ = ["ClusterSpec", "ConfigError", "DealConfig", "ExecutorSpec",
+           "GraphSpec",
            "ModelSpec", "PartitionSpec", "QoSSpec", "RefreshSpec",
            "StoreSpec", "TelemetrySpec", "tenants_from_string",
            "ADMISSIONS", "EVICT_POLICIES", "EXECUTORS", "MODELS",

@@ -229,6 +229,40 @@ class TelemetrySpec:
                              capacity=self.capacity)
 
 
+@dataclasses.dataclass
+class ClusterSpec:
+    """Multi-process serving tier (``gnnserve.cluster``): shard-worker
+    processes along the existing 1-D partitioning behind an RPC router.
+
+    ``n_shards = 0`` (the default) keeps single-process serving;
+    ``n_shards > 0`` makes ``Session.serve()`` spawn that many
+    ``ShardWorker`` processes, health-check their readiness, and return
+    a router-backed engine with the same surface — existing clients
+    don't change.  ``ports`` pins worker ports (empty = ephemeral,
+    published via per-shard port files in ``run_dir``); ``http_port``
+    starts the router's aggregated ``/healthz`` + ``/stats`` endpoint.
+    ``run_dir`` holds the per-shard WAL segments and world checkpoints
+    that make kill/restart/replay bitwise ("" = a fresh temp dir, so
+    restarts within one deployment replay but nothing persists across
+    deployments).  ``overrides`` tunes individual shards — entries are
+    dicts with a ``shard`` index plus any of ``budget_rows`` /
+    ``evict_policy`` / ``admission`` (store) or ``staleness_bound`` /
+    ``batch_slots`` / ``rows_per_step`` (engine geometry); none of
+    these change served bytes (residency and batching are
+    bitwise-invariant), only footprint and scheduling."""
+    n_shards: int = 0               # 0 = single-process serving
+    host: str = "127.0.0.1"
+    ports: Tuple[int, ...] = ()     # empty = ephemeral ports
+    http_port: int = -1             # router endpoint; -1 off, 0 ephemeral
+    run_dir: str = ""               # "" = fresh temp dir per deployment
+    ready_timeout_s: float = 120.0  # worker world build/restore budget
+    hang_timeout_s: float = 60.0    # heartbeat staleness => wedged
+    overrides: Tuple[Dict[str, Any], ...] = ()
+
+
+_OVERRIDE_FIELDS = ("shard", "budget_rows", "evict_policy", "admission",
+                    "staleness_bound", "batch_slots", "rows_per_step")
+
 _TENANT_FIELDS = ("name", "priority", "slot_quota", "rate", "staleness_slo")
 
 
@@ -254,7 +288,7 @@ def tenants_from_string(text: str) -> Tuple[Dict[str, Any], ...]:
 _SECTIONS = {"graph": GraphSpec, "model": ModelSpec,
              "partition": PartitionSpec, "executor": ExecutorSpec,
              "store": StoreSpec, "qos": QoSSpec, "refresh": RefreshSpec,
-             "telemetry": TelemetrySpec}
+             "telemetry": TelemetrySpec, "cluster": ClusterSpec}
 
 
 @dataclasses.dataclass
@@ -270,6 +304,7 @@ class DealConfig:
     refresh: RefreshSpec = dataclasses.field(default_factory=RefreshSpec)
     telemetry: TelemetrySpec = dataclasses.field(
         default_factory=TelemetrySpec)
+    cluster: ClusterSpec = dataclasses.field(default_factory=ClusterSpec)
 
     # -- serialization --------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
@@ -277,6 +312,9 @@ class DealConfig:
         # JSON has no tuples; normalize here so to_dict output and a
         # json.loads round-trip are the same object shapes
         d["qos"]["tenants"] = [dict(t) for t in d["qos"]["tenants"]]
+        d["cluster"]["ports"] = list(d["cluster"]["ports"])
+        d["cluster"]["overrides"] = [dict(o)
+                                     for o in d["cluster"]["overrides"]]
         return d
 
     @classmethod
@@ -314,6 +352,12 @@ class DealConfig:
             # to name
             cfg.qos.tenants = tuple(dict(t) if isinstance(t, dict) else t
                                     for t in cfg.qos.tenants)
+        if isinstance(cfg.cluster.ports, (list, tuple)):
+            cfg.cluster.ports = tuple(cfg.cluster.ports)
+        if isinstance(cfg.cluster.overrides, (list, tuple)):
+            cfg.cluster.overrides = tuple(
+                dict(o) if isinstance(o, dict) else o
+                for o in cfg.cluster.overrides)
         return cfg
 
     def to_json(self, indent: int = 2) -> str:
@@ -526,6 +570,71 @@ class DealConfig:
         if tel.wait_slo_ms < 0:
             e.append(f"telemetry.wait_slo_ms: must be >= 0 (0 = wait "
                      f"detector off), got {tel.wait_slo_ms}")
+
+        cl = self.cluster
+        if cl.n_shards < 0:
+            e.append(f"cluster.n_shards: must be >= 0 (0 = single-"
+                     f"process serving), got {cl.n_shards}")
+        if cl.ports and len(cl.ports) != cl.n_shards:
+            e.append(f"cluster.ports: need one port per shard "
+                     f"({cl.n_shards}) or none (ephemeral), got "
+                     f"{len(cl.ports)}")
+        for i, p in enumerate(cl.ports):
+            if not (isinstance(p, int) and not isinstance(p, bool)
+                    and 1 <= p <= 65535):
+                e.append(f"cluster.ports[{i}]: must be a valid port, "
+                         f"got {p!r}")
+        if not -1 <= cl.http_port <= 65535:
+            e.append(f"cluster.http_port: must be -1 (off), 0 "
+                     f"(ephemeral) or a valid port, got {cl.http_port}")
+        if cl.ready_timeout_s <= 0:
+            e.append(f"cluster.ready_timeout_s: must be > 0, got "
+                     f"{cl.ready_timeout_s}")
+        if cl.hang_timeout_s <= 0:
+            e.append(f"cluster.hang_timeout_s: must be > 0, got "
+                     f"{cl.hang_timeout_s}")
+        for i, ov in enumerate(cl.overrides):
+            path = f"cluster.overrides[{i}]"
+            if not isinstance(ov, dict):
+                e.append(f"{path}: must be a dict with fields "
+                         + ", ".join(_OVERRIDE_FIELDS))
+                continue
+            for k in ov:
+                if k not in _OVERRIDE_FIELDS:
+                    e.append(f"{path}.{k}: unknown override field; "
+                             f"valid: " + ", ".join(_OVERRIDE_FIELDS))
+            shard = ov.get("shard")
+            if not (isinstance(shard, int) and not isinstance(shard, bool)
+                    and 0 <= shard < max(cl.n_shards, 1)):
+                e.append(f"{path}.shard: must be a shard index in "
+                         f"[0, {cl.n_shards}), got {shard!r}")
+            ev = ov.get("evict_policy")
+            if ev is not None and ev not in _reg.EVICT_POLICIES:
+                e.append(f"{path}.evict_policy: unknown policy {ev!r}; "
+                         f"registered: "
+                         + ", ".join(_reg.EVICT_POLICIES.names()))
+            adm = ov.get("admission")
+            if adm is not None and adm not in _reg.ADMISSIONS:
+                e.append(f"{path}.admission: unknown policy {adm!r}; "
+                         f"registered: "
+                         + ", ".join(_reg.ADMISSIONS.names()))
+            for k in ("budget_rows",):
+                if k in ov and (not isinstance(ov[k], int)
+                                or isinstance(ov[k], bool)
+                                or ov[k] < 0):
+                    e.append(f"{path}.{k}: must be an int >= 0, got "
+                             f"{ov[k]!r}")
+            for k in ("staleness_bound", "batch_slots", "rows_per_step"):
+                if k in ov and (not isinstance(ov[k], int)
+                                or isinstance(ov[k], bool)
+                                or ov[k] < 1):
+                    e.append(f"{path}.{k}: must be an int >= 1, got "
+                             f"{ov[k]!r}")
+        if cl.n_shards > 0 and ex.name == "dist":
+            e.append("cluster.n_shards: the dist executor inside "
+                     "cluster workers needs per-process device flags; "
+                     "run dist single-process or workers with "
+                     "ref/pallas")
 
         if e:
             raise ConfigError("invalid DealConfig:\n  - "

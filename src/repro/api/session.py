@@ -64,6 +64,7 @@ class Session:
         self._H: Optional[np.ndarray] = None
         self._engine = None
         self._endpoint = None
+        self._cluster = None
 
     @classmethod
     def build(cls, cfg: DealConfig) -> "Session":
@@ -156,14 +157,31 @@ class Session:
     def serve(self):
         """Stand up (once) and return the online serving engine: full
         epoch -> versioned store (budget / eviction / tail onboarding)
-        -> ``EmbeddingServeEngine`` with the config's QoS schedule."""
+        -> ``EmbeddingServeEngine`` with the config's QoS schedule.
+
+        With ``cluster.n_shards > 0`` the engine is a router-backed
+        ``ClusterEngine`` instead: shard-worker processes are spawned
+        (each builds the same world from this config), readiness is
+        health-checked, and the returned facade routes transparently —
+        same surface, same served bytes."""
         self._check_open()
         if self._engine is not None:
             return self._engine
-        from repro.gnnserve import (DeltaReinference, EmbeddingServeEngine,
-                                    attach_recompute, store_from_inference)
         cfg = self.cfg
-        st, q = cfg.store, cfg.qos
+        if cfg.cluster.n_shards > 0:
+            from repro.gnnserve.cluster import ClusterDeployment
+            with obs.span("serve.cluster_launch") as sp:
+                self._cluster = ClusterDeployment(cfg)
+                if sp:
+                    sp.set(n_shards=cfg.cluster.n_shards)
+            # the workers paid the epoch; the deployment's ready wait
+            # (spawn -> world build -> socket up) is the launch cost
+            self.timings["epoch_s"] = self._cluster.ready_wait_s
+            self._engine = self._cluster.engine
+            return self._engine
+        from repro.gnnserve import (DeltaReinference, attach_recompute,
+                                    store_from_inference)
+        st = cfg.store
         self.reinfer = DeltaReinference(
             [copy.deepcopy(lg) for lg in self.layer_graphs],
             cfg.model.name, self.params,
@@ -182,6 +200,17 @@ class Session:
             onboarding=st.onboarding)
         if st.budget_rows:
             attach_recompute(store, self.reinfer)
+        return self._attach_engine(store)
+
+    def _attach_engine(self, store):
+        """Wire a ready store (+ ``self.reinfer``/``self.graph``) into
+        the serving engine, health options, and the telemetry endpoint.
+        ``serve()`` calls this after the full epoch; checkpoint restore
+        (``gnnserve.checkpoint.restore_into_session``) calls it with a
+        restored store INSTEAD of running an epoch."""
+        from repro.gnnserve import EmbeddingServeEngine
+        cfg = self.cfg
+        q = cfg.qos
         self._engine = EmbeddingServeEngine(
             store, self.reinfer, self.graph,
             batch_slots=q.batch_slots, rows_per_step=q.rows_per_step,
@@ -202,6 +231,32 @@ class Session:
                 self, port=t.http_port, snapshot_path=t.snapshot_path,
                 snapshot_every_s=t.snapshot_every_s).start()
         return self._engine
+
+    @classmethod
+    def from_checkpoint(cls, path, cfg: DealConfig) -> "Session":
+        """Build a Session whose serving world comes from a
+        ``gnnserve.checkpoint.save_world`` artifact instead of a fresh
+        full epoch: the offline pipeline still builds from ``cfg`` (the
+        checkpoint stores no params/features below level 0), then the
+        checkpointed graph/layer-graphs/store swap in and the engine
+        attaches without recomputing the epoch.  The restored engine
+        serves bitwise the rows the dumped one served."""
+        cfg.validate()
+        if cfg.cluster.n_shards > 0:
+            raise ConfigError(
+                "cluster.n_shards: from_checkpoint restores a single-"
+                "process engine; cluster workers restore their own "
+                "checkpoints via the deployment's run_dir")
+        session = cls(cfg)
+        from repro.gnnserve.checkpoint import restore_into_session
+        restore_into_session(session, path)
+        return session
+
+    @property
+    def cluster(self):
+        """The live ``ClusterDeployment`` (None in single-process
+        mode)."""
+        return self._cluster
 
     @property
     def engine(self):
@@ -263,7 +318,19 @@ class Session:
                                **{f"t_{k}": v
                                   for k, v in self.timings.items()}}
         engine_stats = refresh_stats = cutover = None
-        if self._engine is not None:
+        if self._cluster is not None:
+            # router-merged tree: same engine/attribution/health schema
+            # as the single-process branch below, plus a ``cluster``
+            # subtree (per-shard statuses, restart count, router stats)
+            merged = self._cluster.stats()
+            out.update(merged)
+            engine_stats = {
+                k: v for k, v in merged.items()
+                if k not in ("attribution", "health", "cluster",
+                             "refresh_cutover")}
+            refresh_stats = self._engine.last_refresh_stats
+            cutover = merged.get("refresh_cutover")
+        elif self._engine is not None:
             engine_stats = self._engine.stats()
             refresh_stats = self._engine.last_refresh_stats
             out.update(engine_stats)
@@ -283,10 +350,13 @@ class Session:
             live=(self.telemetry.metrics.to_dict()
                   if self.telemetry is not None else None),
             cutover=cutover)
-        if self._engine is not None and self._engine.attrib is not None:
-            out["attribution"] = self._engine.attrib.summary()
-        if self._engine is not None and self._engine.health is not None:
-            out["health"] = self._engine.health.summary()
+        if self._cluster is None:
+            if (self._engine is not None
+                    and self._engine.attrib is not None):
+                out["attribution"] = self._engine.attrib.summary()
+            if (self._engine is not None
+                    and self._engine.health is not None):
+                out["health"] = self._engine.health.summary()
         return out
 
     def dump_trace(self, path) -> Dict[str, Any]:
@@ -300,11 +370,13 @@ class Session:
                 "dump_trace needs telemetry enabled: set "
                 "telemetry.enabled = true in the DealConfig")
         extra: Dict[str, Any] = {}
-        if self._engine is not None and self._engine.attrib is not None:
-            extra["deal_attribution"] = self._engine.attrib.summary()
-            extra["deal_top_queries"] = self._engine.attrib.top_paths()
-        if self._engine is not None and self._engine.health is not None:
-            extra["deal_health"] = self._engine.health.summary()
+        attrib = getattr(self._engine, "attrib", None)
+        health = getattr(self._engine, "health", None)
+        if attrib is not None:
+            extra["deal_attribution"] = attrib.summary()
+            extra["deal_top_queries"] = attrib.top_paths()
+        if health is not None:
+            extra["deal_health"] = health.summary()
         return obs.dump_chrome_trace(
             self.telemetry.tracer, path, self.telemetry.metrics,
             process_name=f"deal.{self.cfg.model.name}",
@@ -329,6 +401,9 @@ class Session:
             if self._endpoint is not None:
                 self._endpoint.stop()
                 self._endpoint = None
+            if self._cluster is not None:
+                self._cluster.shutdown()
+                self._cluster = None
             if self.telemetry is not None:
                 obs.install(self._prev_telemetry)
             from repro.core.partition import uninstall_plan_cache_counters

@@ -1,0 +1,31 @@
+"""Multi-process serving tier: shard workers + an RPC front-door
+router over the existing 1-D partitioning.
+
+- ``protocol``   — length-prefixed JSON/binary framing (stdlib sockets)
+- ``worker``     — ShardWorker: full-world process with WAL + replay
+- ``router``     — scatter/gather routing, sequenced commits, stat
+  merging, aggregated HTTP endpoint
+- ``deployment`` — spawn/readiness/heartbeat-wedge lifecycle and the
+  drive-compatible ``ClusterEngine`` facade
+
+See ARCHITECTURE.md ("Cluster serving tier") for the process diagram
+and the routing/replay invariants.
+"""
+from repro.gnnserve.cluster.deployment import (ClusterDeployment,
+                                               ClusterEngine,
+                                               WorkerWedged)
+from repro.gnnserve.cluster.protocol import (Channel, ProtocolError,
+                                             WorkerError, WorkerTimeout,
+                                             recv_msg, send_msg)
+from repro.gnnserve.cluster.router import (Router, RouterEndpoint,
+                                           merge_attribution,
+                                           merge_engine_stats,
+                                           merge_health,
+                                           merge_session_stats)
+from repro.gnnserve.cluster.worker import Heartbeat, WorkerCore
+
+__all__ = ["Channel", "ClusterDeployment", "ClusterEngine", "Heartbeat",
+           "ProtocolError", "Router", "RouterEndpoint", "WorkerCore",
+           "WorkerError", "WorkerTimeout", "WorkerWedged",
+           "merge_attribution", "merge_engine_stats", "merge_health",
+           "merge_session_stats", "recv_msg", "send_msg"]

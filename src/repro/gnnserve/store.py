@@ -55,6 +55,7 @@ refresh); the tail rides budgets/eviction like any shard until
 """
 from __future__ import annotations
 
+import json
 import time
 from typing import Callable, Dict, List, Optional, Sequence
 
@@ -592,6 +593,116 @@ class EmbeddingStore:
                 "budget_rows": (-1 if self.budget_rows is None
                                 else self.budget_rows),
                 "budget_util": resident_ev / max(budget_total, 1)}
+
+    # -- checkpoint -----------------------------------------------------
+    def state_arrays(self, prefix: str = "") -> Dict[str, np.ndarray]:
+        """The committed front as a flat ``{name: array}`` dict (npz-
+        ready): bounds, per-(level, shard) data + residency bitmaps
+        (evicted shards simply have no data entry), and the heat/LRU
+        policy state, plus one JSON metadata blob.  No update may be
+        open — the staging overlay is a writer-private transient."""
+        assert self._staged is None, \
+            "commit or abort the open update before checkpointing"
+        meta = {"version": self.version, "n_nodes": int(self.n_nodes),
+                "n_shards": self.n_shards,
+                "n_tail_shards": self.n_tail_shards,
+                "dims": self._dims,
+                "budget_rows": (-1 if self.budget_rows is None
+                                else int(self.budget_rows)),
+                "evict_policy": self.evict_policy,
+                "heat_decay": self.heat_decay,
+                "admission": self.admission,
+                "onboarding": self.onboarding,
+                "tick": int(self._tick)}
+        out = {f"{prefix}meta": np.frombuffer(
+                   json.dumps(meta, sort_keys=True).encode(), np.uint8),
+               f"{prefix}bounds": self.bounds,
+               f"{prefix}heat": self._heat,
+               f"{prefix}last": self._last}
+        for level in range(self.n_levels):
+            for s in range(self.n_shards):
+                data = self._front[level][s]
+                if data is not None:
+                    out[f"{prefix}d{level}_{s}"] = data
+                out[f"{prefix}m{level}_{s}"] = self._mask[level][s]
+        return out
+
+    @classmethod
+    def from_state_arrays(cls, arrays, prefix: str = ""
+                          ) -> "EmbeddingStore":
+        """Inverse of ``state_arrays``: rebuild the store object field
+        by field — residency (which shards are evicted, which rows are
+        admitted) restores exactly, so a restored store serves bitwise
+        the same rows as the one that was dumped.  The recompute hook is
+        not serialized; re-attach it (``delta.attach_recompute``) on
+        budgeted stores."""
+        meta = json.loads(bytes(np.asarray(arrays[f"{prefix}meta"],
+                                           np.uint8)).decode())
+        st = cls.__new__(cls)
+        st._victim_policy = EVICT_POLICIES.get(meta["evict_policy"])
+        st._admit_policy = ADMISSIONS.get(meta["admission"])
+        st.n_nodes = int(meta["n_nodes"])
+        st.n_shards = int(meta["n_shards"])
+        st.n_tail_shards = int(meta["n_tail_shards"])
+        st.bounds = np.asarray(arrays[f"{prefix}bounds"], np.int64).copy()
+        st._shard_rows = np.diff(st.bounds)
+        st._dims = [int(d) for d in meta["dims"]]
+        st._front = []
+        st._mask = []
+        for level in range(len(st._dims)):
+            row_d, row_m = [], []
+            for s in range(st.n_shards):
+                key = f"{prefix}d{level}_{s}"
+                row_d.append(np.asarray(arrays[key], np.float32).copy()
+                             if key in arrays else None)
+                row_m.append(np.asarray(arrays[f"{prefix}m{level}_{s}"],
+                                        bool).copy())
+            st._front.append(row_d)
+            st._mask.append(row_m)
+        st._res = np.array([[int(m.sum()) for m in st._mask[level]]
+                            for level in range(len(st._dims))], np.int64)
+        st._staged = None
+        st._staged_mask = None
+        st.budget_rows = (None if meta["budget_rows"] < 0
+                          else int(meta["budget_rows"]))
+        st.evict_policy = meta["evict_policy"]
+        st.heat_decay = float(meta["heat_decay"])
+        st.admission = meta["admission"]
+        st.onboarding = meta["onboarding"]
+        st._heat = np.asarray(arrays[f"{prefix}heat"], np.float64).copy()
+        st._last = np.asarray(arrays[f"{prefix}last"], np.int64).copy()
+        st._tick = int(meta["tick"])
+        st._gather_depth = 0
+        st._recompute_depth = 0
+        st.recompute = None
+        st.version = int(meta["version"])
+        st.n_lookups = 0
+        st.rows_gathered = 0
+        st.n_swaps = 0
+        st.hits = 0
+        st.misses = 0
+        st.n_evictions = 0
+        st.rows_evicted = 0
+        st.n_recomputes = 0
+        st.n_recompute_spans = 0
+        st.rows_recomputed = 0
+        st.recompute_s = 0.0
+        return st
+
+    def dump(self, path) -> None:
+        """Write the committed front to one ``.npz`` checkpoint.  The
+        restart story every scale-out deployment needs: ``load`` (or
+        ``Session.from_checkpoint``) rebuilds this exact epoch without
+        re-running the inference that produced it."""
+        arrays = self.state_arrays()
+        with open(path, "wb") as f:
+            np.savez_compressed(f, **arrays)
+
+    @classmethod
+    def load(cls, path) -> "EmbeddingStore":
+        """Rebuild a dumped store (see ``dump``)."""
+        with np.load(path) as z:
+            return cls.from_state_arrays(z)
 
 
 def store_from_inference(X: np.ndarray, level_outputs: Sequence[np.ndarray],

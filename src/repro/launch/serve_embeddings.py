@@ -38,9 +38,10 @@ import time
 import numpy as np
 
 from repro import obs
-from repro.api import (ConfigError, DealConfig, ExecutorSpec, GraphSpec,
-                       ModelSpec, PartitionSpec, QoSSpec, RefreshSpec,
-                       Session, StoreSpec, tenants_from_string)
+from repro.api import (ClusterSpec, ConfigError, DealConfig,
+                       ExecutorSpec, GraphSpec, ModelSpec, PartitionSpec,
+                       QoSSpec, RefreshSpec, Session, StoreSpec,
+                       tenants_from_string)
 from repro.gnnserve import EmbeddingServeEngine, Query, TenantRegistry
 
 
@@ -70,6 +71,10 @@ def _serve_session(cfg: DealConfig) -> Session:
             f"{t.name}(prio={t.priority:g} quota={t.slot_quota} "
             f"rate={t.rate:g} slo={t.staleness_slo})"
             for t in eng.qos.registry))
+    if s.cluster is not None:
+        print(f"[cluster] {cfg.cluster.n_shards} shard workers behind "
+              f"the router (ready in {s.cluster.ready_wait_s:.2f}s, "
+              f"run dir {s.cluster.run_dir})")
     return s
 
 
@@ -204,7 +209,8 @@ def config_from_args(args) -> DealConfig:
         qos=QoSSpec(staleness_bound=args.staleness_bound,
                     tenants=(tenants_from_string(args.tenants)
                              if args.tenants else ())),
-        refresh=RefreshSpec(chunk_rows=args.chunk_rows))
+        refresh=RefreshSpec(chunk_rows=args.chunk_rows),
+        cluster=ClusterSpec(n_shards=args.cluster_shards))
 
 
 def main():
@@ -261,6 +267,15 @@ def main():
                     help="enable telemetry and write a Chrome/Perfetto "
                          "trace of the whole run (construct -> epoch -> "
                          "serve loop) on exit; load at ui.perfetto.dev")
+    ap.add_argument("--cluster-shards", type=int, default=0,
+                    help="serve through the multi-process cluster tier: "
+                         "spawn this many shard-worker processes behind "
+                         "the RPC router (0 = single-process)")
+    ap.add_argument("--kill-shard", type=int, default=-1,
+                    help="cluster failure drill: SIGKILL this shard "
+                         "halfway through the drive, restart it, and "
+                         "assert it rejoins bitwise-equal via "
+                         "checkpoint + WAL replay")
     args = ap.parse_args()
     try:
         cfg = (DealConfig.load(args.config) if args.config
@@ -280,11 +295,35 @@ def main():
                          "(or store.onboarding=\"tail\" in --config)")
     if args.trace:
         cfg.telemetry.enabled = True
+    if args.cluster_shards:
+        cfg.cluster.n_shards = args.cluster_shards
+    if args.kill_shard >= 0 and cfg.cluster.n_shards <= 0:
+        raise SystemExit("--kill-shard needs a cluster (--cluster-shards"
+                         " or cluster.n_shards in --config)")
     s = _serve_session(cfg)
-    drive(s.engine, ticks=args.ticks,
-          queries_per_tick=args.queries_per_tick,
-          mutations_per_tick=args.mutations_per_tick,
-          nodes_per_tick=args.nodes_per_tick)
+    drive_kw = dict(queries_per_tick=args.queries_per_tick,
+                    mutations_per_tick=args.mutations_per_tick,
+                    nodes_per_tick=args.nodes_per_tick)
+    if args.kill_shard >= 0:
+        # failure drill: kill one worker MID-STREAM, restart it, and
+        # prove the rejoin is bitwise (per-level store digests match a
+        # never-killed shard) before finishing the drive
+        head = max(1, args.ticks // 2)
+        drive(s.engine, ticks=head, **drive_kw)
+        dep = s.cluster
+        dep.kill_worker(args.kill_shard)
+        dep.restart_worker(args.kill_shard)
+        digs = dep.router.digests()
+        if any(d["digests"] != digs[0]["digests"] for d in digs[1:]):
+            raise SystemExit(f"shard {args.kill_shard} did NOT rejoin "
+                             "bitwise-equal after checkpoint + WAL "
+                             "replay")
+        print(f"[cluster] killed shard {args.kill_shard} at tick {head}"
+              f"; restart replayed its WAL segment and rejoined "
+              f"bitwise-equal ({len(digs)} shard digests match)")
+        drive(s.engine, ticks=args.ticks - head, **drive_kw)
+    else:
+        drive(s.engine, ticks=args.ticks, **drive_kw)
     if args.trace:
         doc = s.dump_trace(args.trace)
         tr = s.telemetry.tracer

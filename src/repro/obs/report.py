@@ -47,7 +47,8 @@ from repro.obs.health import SEGMENTS
 # attribution must close within 5% of measured end-to-end wall time
 ATTRIBUTION_TOLERANCE = 0.05
 
-TRAJECTORY_MAX_ENTRIES = 200
+TRAJECTORY_MAX_ENTRIES = 200      # absolute file cap (all keys)
+TRAJECTORY_MAX_PER_KEY = 20       # history kept per (executor, smoke)
 
 
 # ----------------------------------------------------------------------
@@ -211,14 +212,38 @@ def load_trajectory(path) -> List[dict]:
     return doc if isinstance(doc, list) else []
 
 
+def _trajectory_key(entry: dict) -> Tuple[str, bool]:
+    """The baseline identity the gate compares within."""
+    return str(entry.get("executor", "?")), bool(entry.get("smoke"))
+
+
+def trim_trajectory(entries: List[dict],
+                    max_per_key: int = TRAJECTORY_MAX_PER_KEY
+                    ) -> List[dict]:
+    """Keep the newest ``max_per_key`` entries PER (executor, smoke)
+    key (order preserved) — the gate only ever baselines against
+    ``--last-n`` same-key entries, so older history is dead weight that
+    would otherwise grow the checked-in file without bound."""
+    counts: Dict[Tuple[str, bool], int] = {}
+    keep: List[dict] = []
+    for e in reversed(entries):
+        k = _trajectory_key(e)
+        if counts.get(k, 0) < max_per_key:
+            counts[k] = counts.get(k, 0) + 1
+            keep.append(e)
+    keep.reverse()
+    return keep[-TRAJECTORY_MAX_ENTRIES:]
+
+
 def append_trajectory(path, entry: dict) -> List[dict]:
     """Append one bench-run entry, keeping the last
-    ``TRAJECTORY_MAX_ENTRIES``.  Entry shape (see benchmarks/run.py):
-    {ts, git, smoke, executor, failures: [...],
+    ``TRAJECTORY_MAX_PER_KEY`` per (executor, smoke) key (and
+    ``TRAJECTORY_MAX_ENTRIES`` overall).  Entry shape (see
+    benchmarks/run.py): {ts, git, smoke, executor, failures: [...],
      benches: {key: {stages: {span: {count, total_ms}}, coverage}}}."""
     entries = load_trajectory(path)
     entries.append(entry)
-    del entries[:-TRAJECTORY_MAX_ENTRIES]
+    entries = trim_trajectory(entries)
     with open(path, "w") as f:
         json.dump(entries, f, indent=1, sort_keys=True)
         f.write("\n")

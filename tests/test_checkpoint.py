@@ -1,0 +1,143 @@
+"""Serving-world checkpoints: ``EmbeddingStore.dump/load`` round-trips
+the committed front (residency, policy state, version counters) and
+``save_world`` / ``Session.from_checkpoint`` restore a full serving
+world that serves BITWISE the rows the dumped one served — the same
+artifact cluster shard workers restore before replaying their WAL
+segment."""
+import numpy as np
+import pytest
+
+from repro.api import ConfigError, DealConfig, Session
+from repro.gnnserve.checkpoint import (load_world, peek_meta,
+                                       restore_into_session, save_world)
+from repro.gnnserve.engine import Query
+
+D = 16
+
+
+def _cfg(*, budget_rows=0, n=160):
+    return DealConfig.from_dict({
+        "graph": {"dataset": "rmat", "n_nodes": n, "avg_degree": 4,
+                  "fanout": 4, "seed": 5},
+        "model": {"name": "gcn", "n_layers": 2, "d_feature": D},
+        "executor": {"name": "ref"},
+        "store": {"onboarding": "tail", "budget_rows": budget_rows},
+        "qos": {"staleness_bound": 4},
+    })
+
+
+def _churn(eng, *, n=160, ticks=4, seed=9):
+    r = np.random.default_rng(seed)
+    for t in range(ticks):
+        log = eng.mutate()
+        for _ in range(4):
+            a, b = r.integers(0, n, 2)
+            log.add_edge(int(a), int(b))
+        ids = np.unique(r.integers(0, n, 3).astype(np.int64))
+        log.update_features(
+            ids, r.standard_normal((ids.size, D)).astype(np.float32))
+        q = Query(t, r.integers(0, n, 10).astype(np.int64))
+        eng.submit(q)
+        eng.run()
+
+
+def test_store_dump_load_roundtrip(tmp_path):
+    from repro.gnnserve.store import EmbeddingStore
+    with Session.build(_cfg()) as s:
+        eng = s.serve()
+        _churn(eng)
+        st = eng.store
+        path = tmp_path / "store.npz"
+        st.dump(path)
+        back = EmbeddingStore.load(path)
+        assert back.version == st.version
+        assert back.n_nodes == st.n_nodes
+        assert back.bounds.tolist() == st.bounds.tolist()
+        ids = np.arange(st.n_nodes, dtype=np.int64)
+        for level in range(st.n_levels):
+            assert np.array_equal(back.lookup(ids, level),
+                                  st.lookup(ids, level))
+
+
+def test_store_dump_load_preserves_residency_under_budget(tmp_path):
+    from repro.gnnserve.store import EmbeddingStore
+    with Session.build(_cfg(budget_rows=64)) as s:
+        eng = s.serve()
+        _churn(eng)
+        st = eng.store
+        st.dump(tmp_path / "b.npz")
+        back = EmbeddingStore.load(tmp_path / "b.npz")
+        assert back.budget_rows == 64
+        assert back.stats()["resident_bytes"] == \
+            st.stats()["resident_bytes"]
+        # residency bitmaps restore exactly: same shards evicted
+        for level in range(st.n_levels):
+            for shard in range(st.n_shards):
+                assert (back._front[level][shard] is None) == \
+                    (st._front[level][shard] is None)
+
+
+def test_save_world_meta_and_load(tmp_path):
+    with Session.build(_cfg()) as s:
+        eng = s.serve()
+        _churn(eng)
+        path = tmp_path / "world.npz"
+        save_world(path, eng, committed_seq=7)
+        meta = peek_meta(path)
+        assert meta["committed_seq"] == 7
+        assert meta["n_refreshes"] == eng.n_refreshes
+        _, graph, lgs, store = load_world(path)
+        assert graph.n_edges == eng.graph.n_edges   # mutated CSR, not
+        assert graph.n_edges > s.graph.n_edges      # the build-time one
+        assert len(lgs) == len(eng.reinfer.layer_graphs)
+        assert store.version == eng.store.version
+
+
+@pytest.mark.parametrize("budget_rows", [0, 64])
+def test_from_checkpoint_serves_bitwise(tmp_path, budget_rows):
+    cfg = _cfg(budget_rows=budget_rows)
+    path = tmp_path / "world.npz"
+    with Session.build(cfg) as s:
+        eng = s.serve()
+        _churn(eng)
+        save_world(path, eng)
+        counters = (eng.n_refreshes, eng.ops_drained, eng.n_full_epochs)
+        ids = np.arange(0, 120, dtype=np.int64)
+        q = Query(100, ids)
+        eng.submit(q)
+        eng.run()
+        want, want_v = q.out.copy(), q.served_version
+
+    with Session.from_checkpoint(
+            path, DealConfig.from_dict(cfg.to_dict())) as s2:
+        eng2 = s2.engine
+        assert (eng2.n_refreshes, eng2.ops_drained,
+                eng2.n_full_epochs) == counters
+        q2 = Query(100, np.arange(0, 120, dtype=np.int64))
+        eng2.submit(q2)
+        eng2.run()
+        assert q2.served_version == want_v
+        assert np.array_equal(q2.out, want)
+        # the restored world keeps serving: more churn + a refresh
+        _churn(eng2, ticks=2, seed=13)
+        assert s2.stats()["store_version"] > 0
+
+
+def test_from_checkpoint_rejects_cluster_configs(tmp_path):
+    cfg = _cfg()
+    path = tmp_path / "world.npz"
+    with Session.build(cfg) as s:
+        save_world(path, s.serve())
+    d = cfg.to_dict()
+    d["cluster"]["n_shards"] = 2
+    with pytest.raises(ConfigError, match="cluster"):
+        Session.from_checkpoint(path, DealConfig.from_dict(d))
+
+
+def test_restore_into_session_requires_fresh_session(tmp_path):
+    cfg = _cfg()
+    path = tmp_path / "world.npz"
+    with Session.build(cfg) as s:
+        save_world(path, s.serve())
+        with pytest.raises(AssertionError):
+            restore_into_session(s, path)   # engine already attached

