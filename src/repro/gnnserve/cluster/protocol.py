@@ -34,8 +34,11 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 # one u32 length prefix; frames above this are a protocol error, not an
-# allocation bomb (a full-graph gather at smoke scale is ~MBs)
-MAX_FRAME = 1 << 31
+# allocation bomb — a corrupt/malicious prefix must not trigger a
+# multi-GiB allocation in ``_recv_exact``.  A full-graph gather at
+# smoke scale is ~MBs; 256 MiB leaves two orders of headroom.  Callers
+# with genuinely larger worlds pass ``max_frame`` explicitly.
+MAX_FRAME = 1 << 28
 
 
 class ProtocolError(RuntimeError):
@@ -71,7 +74,8 @@ def _recv_exact(sock: socket.socket, n: int) -> bytes:
 
 
 def send_msg(sock: socket.socket, header: Dict,
-             arrays: Optional[Dict[str, np.ndarray]] = None) -> None:
+             arrays: Optional[Dict[str, np.ndarray]] = None, *,
+             max_frame: int = MAX_FRAME) -> None:
     """Send one frame: JSON ``header`` plus raw ``arrays`` payloads."""
     arrays = arrays or {}
     manifest = []
@@ -85,12 +89,12 @@ def send_msg(sock: socket.socket, header: Dict,
     doc["_arrays"] = manifest
     head = json.dumps(doc).encode()
     body = b"".join([struct.pack("<I", len(head)), head] + blobs)
-    if len(body) + 4 > MAX_FRAME:
+    if len(body) + 4 > max_frame:
         raise ProtocolError(f"frame too large ({len(body)} bytes)")
     sock.sendall(struct.pack("<I", len(body)) + body)
 
 
-def recv_msg(sock: socket.socket
+def recv_msg(sock: socket.socket, *, max_frame: int = MAX_FRAME
              ) -> Tuple[Dict, Dict[str, np.ndarray]]:
     """Receive one frame -> (header, arrays).  Raises ProtocolError on
     EOF/garbage, WorkerTimeout if a frame stalls mid-flight.  A timeout
@@ -104,7 +108,7 @@ def recv_msg(sock: socket.socket
         raise ProtocolError("connection closed")
     raw += _recv_exact(sock, 4 - len(raw)) if len(raw) < 4 else b""
     (frame_len,) = struct.unpack("<I", raw)
-    if frame_len > MAX_FRAME:
+    if frame_len > max_frame:
         raise ProtocolError(f"frame length {frame_len} exceeds cap")
     body = _recv_exact(sock, frame_len)
     (head_len,) = struct.unpack("<I", body[:4])

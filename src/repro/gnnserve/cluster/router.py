@@ -16,7 +16,11 @@ sequence number.  Workers WAL + apply + refresh the batch atomically,
 which is what keeps every worker's world bitwise-equal: all shards fold
 the same batches in the same order at the same epoch boundaries, and a
 restarted worker replays exactly the committed batches it missed
-(``worker.py``'s replay contract).
+(``worker.py``'s replay contract).  A commit that fails on only SOME
+shards never drops the batch or reuses a seq: the router resyncs each
+failed shard's seq from its status, requeues a batch that is durable
+nowhere, and parks a partially-durable one in-flight until every shard
+has folded it (``commit_pending``'s failure contract).
 
 Stat merging keeps the single-process ``Session.stats()`` schema:
 traffic counters SUM across shards, world-replicated values (versions,
@@ -29,6 +33,7 @@ tree plus an aggregated ``/healthz`` in the same shapes as
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import threading
 from concurrent.futures import ThreadPoolExecutor
@@ -45,6 +50,50 @@ from repro.gnnserve.mutations import MutationLog
 # safe to retry: lookups/stats are reads, commits are seq-idempotent);
 # WorkerError is NOT here — the remote handler failed, retrying repeats it
 _RETRYABLE = (ProtocolError, WorkerTimeout, OSError)
+
+
+class _RWLock:
+    """Shared/exclusive lock over the cluster epoch: lookups and stat
+    scrapes read SHARED (they must all see one consistent epoch across
+    shards), commits/full epochs write EXCLUSIVE.  Writers get priority
+    so a commit is never starved by a stream of lookups."""
+
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._readers = 0
+        self._writer = False
+        self._writers_waiting = 0
+
+    @contextlib.contextmanager
+    def read(self):
+        with self._cond:
+            while self._writer or self._writers_waiting:
+                self._cond.wait()
+            self._readers += 1
+        try:
+            yield
+        finally:
+            with self._cond:
+                self._readers -= 1
+                if not self._readers:
+                    self._cond.notify_all()
+
+    @contextlib.contextmanager
+    def write(self):
+        with self._cond:
+            self._writers_waiting += 1
+            try:
+                while self._writer or self._readers:
+                    self._cond.wait()
+            finally:
+                self._writers_waiting -= 1
+            self._writer = True
+        try:
+            yield
+        finally:
+            with self._cond:
+                self._writer = False
+                self._cond.notify_all()
 
 
 class Router:
@@ -68,7 +117,14 @@ class Router:
         self._pool = ThreadPoolExecutor(
             max_workers=max(self.n_shards, 1),
             thread_name_prefix="deal-router")
-        self._lock = threading.Lock()   # guards seq/commit + counters
+        # epoch lock: lookups/scrapes shared, commits exclusive — a
+        # lookup that scatters mid-commit would gather rows from
+        # different epochs
+        self._rw = _RWLock()
+        # a sequenced op that is durable on SOME shard but unacked on
+        # others parks here; it re-drives (same per-shard seq, workers
+        # ack duplicates idempotently) before any new batch drains
+        self._inflight: Optional[Dict] = None
 
     # -- routing --------------------------------------------------------
     def owner_of(self, ids: np.ndarray) -> np.ndarray:
@@ -95,10 +151,13 @@ class Router:
 
     def broadcast(self, op: str, arrays=None, **fields) -> List[Dict]:
         """The same op to every shard, in parallel; headers in shard
-        order."""
-        futs = [self._pool.submit(self._call, s, op, arrays, **fields)
-                for s in range(self.n_shards)]
-        return [f.result()[0] for f in futs]
+        order.  Holds the epoch read lock so a broadcast scrape never
+        interleaves with a commit (per-shard stats stay one epoch)."""
+        with self._rw.read():
+            futs = [self._pool.submit(self._call, s, op, arrays,
+                                      **fields)
+                    for s in range(self.n_shards)]
+            return [f.result()[0] for f in futs]
 
     # -- scatter/gather lookup ------------------------------------------
     def lookup(self, node_ids: np.ndarray, *, level: int = -1,
@@ -106,38 +165,60 @@ class Router:
         """Route ``node_ids`` to their owners, gather the rows back in
         client order.  Returns ``(rows, served_version)``."""
         ids = np.asarray(node_ids, np.int64)
-        owners = self.owner_of(ids)
         d = self.dims[level % len(self.dims)]
-        out = np.empty((ids.size, d), np.float32)
-        parts = [(int(s), np.flatnonzero(owners == s))
-                 for s in np.unique(owners)]
-        self.n_lookups += 1
-        self.n_subqueries += len(parts)
-        if len(parts) > 1:
-            self.n_scatter += 1
+        with self._rw.read():
+            if ids.size == 0:       # zero parts — nothing to scatter,
+                                    # serve the current epoch directly
+                st = self._call(0, "status")[0]
+                return (np.empty((0, d), np.float32),
+                        int(st["store_version"]))
+            owners = self.owner_of(ids)
+            out = np.empty((ids.size, d), np.float32)
+            parts = [(int(s), np.flatnonzero(owners == s))
+                     for s in np.unique(owners)]
+            self.n_lookups += 1
+            if len(parts) > 1:
+                self.n_scatter += 1
 
-        def _one(s, idx):
-            resp, arrs = self._call(s, "lookup", {"ids": ids[idx]},
-                                    level=level, tenant=tenant, uid=uid)
-            return resp["served_version"], idx, arrs["rows"]
+            def _one(s, idx):
+                resp, arrs = self._call(s, "lookup", {"ids": ids[idx]},
+                                        level=level, tenant=tenant,
+                                        uid=uid)
+                return resp["served_version"], idx, arrs["rows"]
 
-        futs = [self._pool.submit(_one, s, idx) for s, idx in parts]
-        versions = set()
-        for f in futs:
-            version, idx, rows = f.result()
-            out[idx] = rows
-            versions.add(int(version))
-        assert len(versions) == 1, \
-            f"shards served different epochs {sorted(versions)} for one " \
-            f"query — the commit barrier is broken"
-        return out, versions.pop()
+            # commits are excluded by the read lock, so one retry only
+            # covers a shard that restarted/replayed mid-gather
+            versions: set = set()
+            for _ in range(2):
+                futs = [self._pool.submit(_one, s, idx)
+                        for s, idx in parts]
+                versions = set()
+                for f in futs:
+                    version, idx, rows = f.result()
+                    out[idx] = rows
+                    versions.add(int(version))
+                self.n_subqueries += len(parts)
+                if len(versions) == 1:
+                    return out, versions.pop()
+            raise RuntimeError(
+                f"shards served different epochs {sorted(versions)} "
+                f"for one query — the commit barrier is broken")
 
     # -- mutation fold --------------------------------------------------
     def commit_pending(self) -> Dict:
         """Drain the router's mutation log and fold it on EVERY shard as
         one sequenced commit.  Returns shard 0's refresh stats (the
-        worlds are replicas; their stats are equal)."""
-        with self._lock:
+        worlds are replicas; their stats are equal).
+
+        Failure contract: a batch is never silently dropped and a seq
+        is never reused for a different batch.  If a shard's commit RPC
+        fails, the router resyncs that shard's seq from its status; a
+        batch that is positively durable NOWHERE requeues into the log,
+        while one that landed on SOME shard parks in-flight and must
+        complete everywhere (re-driven here, same seqs, duplicate acks)
+        before the next batch drains."""
+        with self._rw.write():
+            self._drive_inflight()
             if not self.log.pending:
                 return {}
             batch = self.log.drain()
@@ -150,40 +231,126 @@ class Router:
             if batch.new_node_rows is not None:
                 arrays["new_node_rows"] = np.asarray(
                     batch.new_node_rows, np.float32)
-
-            def _one(s):
-                return self._call(s, "commit", arrays,
-                                  seq=self.seq[s] + 1, **fields)[0]
-
-            futs = [self._pool.submit(_one, s)
-                    for s in range(self.n_shards)]
-            resps = [f.result() for f in futs]
-            for s, r in enumerate(resps):
-                self.seq[s] = int(r["seq"])
-            self.n_commits += 1
-            versions = {int(r["store_version"]) for r in resps}
-            assert len(versions) == 1, \
-                f"commit left shards at different epochs {sorted(versions)}"
-            self.n_nodes = int(resps[0].get("n_nodes", self.n_nodes))
-            return resps[0].get("stats", {})
+            return self._sequenced("commit", fields, arrays,
+                                   batch=batch)
 
     def full_epoch(self, n_shards: Optional[int] = None) -> Dict:
         """Sequenced re-partition epoch on every shard (pending
         mutations fold first, exactly like the single-process path)."""
         self.commit_pending()
-        with self._lock:
-            def _one(s):
-                return self._call(s, "full_epoch",
-                                  seq=self.seq[s] + 1,
-                                  n_shards=n_shards)[0]
+        with self._rw.write():
+            self._drive_inflight()
+            return self._sequenced("full_epoch",
+                                   {"n_shards": n_shards}, None)
 
-            futs = [self._pool.submit(_one, s)
-                    for s in range(self.n_shards)]
-            resps = [f.result() for f in futs]
-            for s, r in enumerate(resps):
-                self.seq[s] = int(r["seq"])
-            self.n_nodes = int(resps[0].get("n_nodes", self.n_nodes))
-            return resps[0].get("stats", {})
+    def _sequenced(self, op: str, fields: Dict, arrays,
+                   batch=None) -> Dict:
+        """One sequenced op to every shard, each shard's result handled
+        INDIVIDUALLY — one failed future must not abandon the seq
+        bookkeeping of the shards that committed.  Caller holds the
+        write lock."""
+        target = [s + 1 for s in self.seq]
+
+        def _one(s):
+            return self._call(s, op, arrays, seq=target[s], **fields)[0]
+
+        futs = {s: self._pool.submit(_one, s)
+                for s in range(self.n_shards)}
+        resps: Dict[int, Dict] = {}
+        failures: Dict[int, Exception] = {}
+        for s, f in futs.items():
+            try:
+                resps[s] = f.result()
+                self.seq[s] = int(resps[s]["seq"])
+            except Exception as exc:     # noqa: BLE001 — per-shard
+                failures[s] = exc
+        if failures:
+            # raises unless the resync shows every shard reached target
+            self._resolve_failures(op, fields, arrays, target,
+                                   failures, batch)
+        if op == "commit":
+            self.n_commits += 1
+        versions = {int(r["store_version"]) for r in resps.values()}
+        if len(versions) > 1:
+            raise RuntimeError(
+                f"{op} left shards at different epochs "
+                f"{sorted(versions)}")
+        if not resps:           # every ack was lost but resync proved
+            return {}           # the op applied cluster-wide
+        first = resps[min(resps)]
+        self.n_nodes = int(first.get("n_nodes", self.n_nodes))
+        return first.get("stats", {})
+
+    def _resolve_failures(self, op: str, fields: Dict, arrays, target,
+                          failures: Dict[int, Exception],
+                          batch) -> None:
+        """Resync each failed shard's seq from its status: an applied-
+        but-unacked commit just advances our bookkeeping; anything
+        still behind requeues (durable nowhere) or parks in-flight
+        (durable somewhere — it MUST complete everywhere)."""
+        unknown = []
+        for s in failures:
+            try:
+                st = self._call(s, "status")[0]
+            except Exception:            # noqa: BLE001 — state unknown
+                unknown.append(s)
+                continue
+            if int(st["last_seq"]) >= target[s]:
+                self.seq[s] = target[s]  # applied; the ack was lost
+        behind = [s for s in range(self.n_shards)
+                  if self.seq[s] < target[s]]
+        if not behind:
+            return
+        cause = failures[behind[0]] if behind[0] in failures else \
+            next(iter(failures.values()))
+        applied_anywhere = any(self.seq[s] >= target[s]
+                               for s in range(self.n_shards))
+        if batch is not None and not applied_anywhere and not unknown:
+            # positively durable nowhere: the mutations go back in the
+            # log so the next commit re-drains them under fresh seqs
+            self.log.requeue(batch)
+            raise RuntimeError(
+                f"{op} failed on shards {behind} before any shard "
+                f"applied it; batch requeued "
+                f"({self.log.pending} mutations pending)") from cause
+        self._inflight = {"op": op, "fields": fields,
+                          "arrays": arrays, "target": list(target)}
+        raise RuntimeError(
+            f"{op} is durable on some shards but failed on "
+            f"{sorted(set(behind) | set(unknown))}; parked in-flight — "
+            f"it will re-drive before the next commit") from cause
+
+    def _drive_inflight(self) -> None:
+        """Complete a parked sequenced op on every shard still behind
+        its target seq (shards that already applied ack the duplicate
+        idempotently).  Caller holds the write lock."""
+        inf = self._inflight
+        if inf is None:
+            return
+        op, target = inf["op"], inf["target"]
+        behind = [s for s in range(self.n_shards)
+                  if self.seq[s] < target[s]]
+        failures: Dict[int, Exception] = {}
+
+        def _one(s):
+            return self._call(s, op, inf["arrays"], seq=target[s],
+                              **inf["fields"])[0]
+
+        futs = {s: self._pool.submit(_one, s) for s in behind}
+        for s, f in futs.items():
+            try:
+                self.seq[s] = max(self.seq[s], int(f.result()["seq"]))
+            except Exception as exc:     # noqa: BLE001 — per-shard
+                failures[s] = exc
+        still = [s for s in range(self.n_shards)
+                 if self.seq[s] < target[s]]
+        if still:
+            raise RuntimeError(
+                f"in-flight {op} still incomplete on shards "
+                f"{still}") from next(iter(failures.values()), None)
+        self._inflight = None
+        if op == "commit":
+            self.n_commits += 1
 
     # -- merged views ---------------------------------------------------
     def statuses(self) -> List[Dict]:
@@ -228,7 +395,9 @@ class Router:
                 "n_commits": self.n_commits,
                 "n_retries": self.n_retries,
                 "seq": list(self.seq),
-                "pending_mutations": int(self.log.pending)}
+                "pending_mutations": int(self.log.pending),
+                "inflight": (self._inflight["op"]
+                             if self._inflight else None)}
 
     def shutdown(self) -> None:
         for s in range(self.n_shards):
@@ -284,8 +453,10 @@ def merge_engine_stats(per_shard: List[Dict], *, pending: int = 0
     tree of the same shape."""
     assert per_shard
     versions = {int(s["store_version"]) for s in per_shard}
-    assert len(versions) == 1, \
-        f"shards report different store versions {sorted(versions)}"
+    if len(versions) > 1:           # a real error, not an assert: the
+        raise RuntimeError(         # /stats endpoint must surface it
+            f"shards report different store versions "  # under -O too
+            f"{sorted(versions)}")
     out = dict(per_shard[0])        # replicated keys pass through
     for k in _SUM_KEYS:
         if k in out:

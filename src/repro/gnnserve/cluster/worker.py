@@ -120,6 +120,21 @@ class WorkerCore:
         self.cfg = self._shard_config(cfg)
         self.wal_path = os.path.join(run_dir, f"shard{shard}.wal")
         self.ckpt_path = os.path.join(run_dir, f"shard{shard}.ckpt.npz")
+        self.session = None
+        self._load_world()
+
+    def _load_world(self) -> None:
+        """(Re)build the engine at the last COMMITTED state: restore
+        the checkpoint when one exists (fresh world otherwise), then
+        replay the WAL tail past ``committed_seq``.  Both the startup
+        path and the recovery path after a failed apply (which may have
+        half-mutated the live engine) land here."""
+        from repro.api.session import Session
+        if self.session is not None:
+            try:
+                self.session.close()
+            except Exception:
+                pass                # a torn world may not close cleanly
         self.last_seq = 0
         self.replayed = 0
         self.restored = False
@@ -170,7 +185,9 @@ class WorkerCore:
     def _wal_append(self, entry: Dict) -> None:
         """Durable BEFORE applied: a crash mid-apply replays the entry;
         a crash before the append means the router never got an ack and
-        re-sends it with the same seq."""
+        re-sends it with the same seq.  An apply that RAISES (rather
+        than crashes) truncates the entry back out via ``_rollback`` —
+        the WAL only ever ends at a committed boundary."""
         with open(self.wal_path, "a") as f:
             f.write(_wal_encode(entry) + "\n")
             f.flush()
@@ -179,6 +196,7 @@ class WorkerCore:
     def _replay_wal(self) -> None:
         if not os.path.exists(self.wal_path):
             return
+        prev = None
         with open(self.wal_path) as f:
             for line in f:
                 line = line.strip()
@@ -186,8 +204,22 @@ class WorkerCore:
                     continue
                 entry = json.loads(line)
                 seq = int(entry["seq"])
+                # the on-disk chain must be strictly increasing: a
+                # duplicate seq means a torn entry escaped rollback —
+                # replaying either copy could apply a batch the cluster
+                # never committed, so refuse loudly instead
+                if prev is not None and seq <= prev:
+                    raise ValueError(
+                        f"shard {self.shard}: WAL seq {seq} after "
+                        f"{prev} — duplicate/out-of-order entry in "
+                        f"{self.wal_path}")
+                prev = seq
                 if seq <= self.last_seq:
                     continue
+                if seq != self.last_seq + 1:
+                    raise ValueError(
+                        f"shard {self.shard}: WAL gap — entry seq "
+                        f"{seq} after committed {self.last_seq}")
                 self.hb.beat(f"replay:seq{seq}")
                 if entry["kind"] == "commit":
                     self._apply_commit(entry)
@@ -207,6 +239,25 @@ class WorkerCore:
         tmp = self.ckpt_path + ".tmp"
         save_world(tmp, self.engine, committed_seq=self.last_seq)
         os.replace(tmp, self.ckpt_path)
+
+    def _wal_size(self) -> int:
+        try:
+            return os.path.getsize(self.wal_path)
+        except OSError:
+            return 0
+
+    def _rollback(self, wal_pos: int) -> None:
+        """A failed apply must leave NO trace: truncate the WAL back
+        past the torn entry (otherwise a restart replays it and a later
+        commit appends a second entry with the same seq) and rebuild
+        the world at the last committed state — the apply may have
+        half-mutated the live engine before raising."""
+        with open(self.wal_path, "r+") as f:
+            f.truncate(wal_pos)
+            f.flush()
+            os.fsync(f.fileno())
+        self.hb.beat("recover")
+        self._load_world()
 
     # -- mutation fold --------------------------------------------------
     def _apply_commit(self, entry: Dict) -> Dict:
@@ -304,8 +355,13 @@ class WorkerCore:
                      arrays.get("new_node_rows"))}
         if entry["feat_rows"] is None:
             entry["feat_rows"] = []
+        wal_pos = self._wal_size()
         self._wal_append(entry)
-        stats = self._apply_commit(entry)
+        try:
+            stats = self._apply_commit(entry)
+        except Exception:
+            self._rollback(wal_pos)
+            raise
         self.last_seq = seq
         self._save_checkpoint()
         return {"seq": seq, "duplicate": False,
@@ -325,8 +381,13 @@ class WorkerCore:
                 f"monotonic chain at {self.last_seq}")
         entry = {"seq": seq, "kind": "full_epoch",
                  "n_shards": header.get("n_shards")}
+        wal_pos = self._wal_size()
         self._wal_append(entry)
-        stats = self._apply_full_epoch(entry["n_shards"])
+        try:
+            stats = self._apply_full_epoch(entry["n_shards"])
+        except Exception:
+            self._rollback(wal_pos)
+            raise
         self.last_seq = seq
         self._save_checkpoint()
         return {"seq": seq, "duplicate": False,

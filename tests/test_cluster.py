@@ -123,6 +123,21 @@ def test_protocol_rejects_eof_and_torn_frames():
         b.close()
 
 
+def test_protocol_frame_cap_rejects_allocation_bomb():
+    # the cap must stay small enough that a corrupt length prefix can
+    # never trigger a multi-GiB allocation in _recv_exact
+    from repro.gnnserve.cluster.protocol import MAX_FRAME
+    assert MAX_FRAME <= 1 << 28
+    a, b = socket.socketpair()
+    try:
+        a.sendall(struct.pack("<I", MAX_FRAME + 1))
+        with pytest.raises(ProtocolError, match="exceeds cap"):
+            recv_msg(b)
+    finally:
+        a.close()
+        b.close()
+
+
 def test_float_wire_helpers_roundtrip_exactly():
     from repro.gnnserve.cluster.worker import (_rows_from_wire,
                                                _rows_to_wire)
@@ -185,6 +200,59 @@ def test_worker_core_wal_replay_is_bitwise(core_cfg, tmp_path):
     assert got["store_version"] == want["store_version"]
 
 
+def test_worker_rolls_back_wal_and_world_when_apply_fails(
+        core_cfg, tmp_path, monkeypatch):
+    (tmp_path / "w").mkdir()
+    core = WorkerCore(core_cfg, 0, 1, str(tmp_path / "w"))
+    core.dispatch(_commit_header(1, [["add", 1, 2]]), {})
+    boom = {"on": True}
+    real = WorkerCore._apply_commit
+
+    def flaky(self, entry):
+        if boom["on"]:
+            raise RuntimeError("injected apply failure")
+        return real(self, entry)
+
+    monkeypatch.setattr(WorkerCore, "_apply_commit", flaky)
+    with pytest.raises(RuntimeError, match="injected"):
+        core.dispatch(_commit_header(2, [["add", 5, 6]]), {})
+    # the torn seq-2 entry is truncated back out and the chain intact:
+    # a restart must not replay it, a retry must not duplicate it
+    assert core.last_seq == 1
+    with open(core.wal_path) as f:
+        lines = [l for l in f if l.strip()]
+    assert len(lines) == 1 and json.loads(lines[0])["seq"] == 1
+    boom["on"] = False
+    resp, _ = core.dispatch(_commit_header(2, [["add", 5, 6]]), {})
+    assert resp["seq"] == 2 and not resp["duplicate"]
+    # ... and the recovered world is bitwise-equal to a never-failed one
+    (tmp_path / "ctrl").mkdir()
+    ctrl = WorkerCore(core_cfg, 0, 1, str(tmp_path / "ctrl"))
+    ctrl.dispatch(_commit_header(1, [["add", 1, 2]]), {})
+    ctrl.dispatch(_commit_header(2, [["add", 5, 6]]), {})
+    assert core.dispatch({"op": "digest"}, {})[0]["digests"] == \
+        ctrl.dispatch({"op": "digest"}, {})[0]["digests"]
+
+
+def test_replay_rejects_duplicate_and_gapped_wal(core_cfg, tmp_path):
+    entry = {"seq": 1, "kind": "commit", "edge_ops": [["add", 1, 2]],
+             "feat_ids": [], "feat_rows": [], "n_new_nodes": 0,
+             "new_node_rows": None}
+    dup = tmp_path / "dup"
+    dup.mkdir()
+    (dup / "shard0.wal").write_text(
+        json.dumps(entry) + "\n" + json.dumps(entry) + "\n")
+    with pytest.raises(ValueError, match="duplicate|out-of-order"):
+        WorkerCore(core_cfg, 0, 1, str(dup))
+    gap = tmp_path / "gap"
+    gap.mkdir()
+    (gap / "shard0.wal").write_text(
+        json.dumps(entry) + "\n" + json.dumps({**entry, "seq": 3})
+        + "\n")
+    with pytest.raises(ValueError, match="gap"):
+        WorkerCore(core_cfg, 0, 1, str(gap))
+
+
 def test_worker_config_overrides_and_neutralization(tmp_path):
     cfg = DealConfig.from_dict({
         **_cfg_dict(n=128),
@@ -201,6 +269,173 @@ def test_worker_config_overrides_and_neutralization(tmp_path):
     (tmp_path / "s0").mkdir()
     other = WorkerCore(cfg, 0, 2, str(tmp_path / "s0"))
     assert other.cfg.store.budget_rows == 0    # override is shard-1 only
+
+
+# ----------------------------------------------------------------------
+# router failure semantics over in-process cores (no sockets)
+# ----------------------------------------------------------------------
+
+class _CoreChannel:
+    """In-process stand-in for ``protocol.Channel`` over a WorkerCore:
+    the same request/close surface and error taxonomy (WorkerError for
+    handler failures), plus fault injection — ops named in ``fail_ops``
+    raise OSError BEFORE reaching the core, modelling a transport
+    failure where the shard never saw the RPC."""
+
+    def __init__(self, core):
+        self.core = core
+        self.fail_ops = set()
+        self._lock = threading.Lock()
+
+    def request(self, op, arrays=None, **fields):
+        from repro.gnnserve.cluster import WorkerError
+        with self._lock:
+            if op in self.fail_ops:
+                raise OSError(f"injected transport failure on {op!r}")
+            try:
+                return self.core.dispatch({"op": op, **fields},
+                                          dict(arrays or {}))
+            except Exception as exc:
+                raise WorkerError(
+                    f"shard op {op!r} failed: {exc}") from exc
+
+    def close(self):
+        pass
+
+
+@pytest.fixture()
+def core_router(core_cfg, tmp_path):
+    from repro.gnnserve.cluster import Router
+    cores, channels = [], []
+    for s in range(2):
+        d = tmp_path / f"shard{s}"
+        d.mkdir()
+        core = WorkerCore(core_cfg, s, 2, str(d))
+        cores.append(core)
+        channels.append(_CoreChannel(core))
+    st, _ = cores[0].dispatch({"op": "status"}, {})
+    bounds = np.linspace(0, st["n_nodes"], 3).astype(np.int64)
+    return Router(channels, bounds, st["dims"]), cores, channels
+
+
+def _core_digests(cores):
+    return [c.dispatch({"op": "digest"}, {})[0]["digests"]
+            for c in cores]
+
+
+def test_commit_requeues_when_durable_nowhere(core_router):
+    router, cores, channels = core_router
+    for ch in channels:
+        ch.fail_ops.add("commit")
+    router.log.add_edge(1, 2)
+    with pytest.raises(RuntimeError, match="requeued"):
+        router.commit_pending()
+    # nothing applied anywhere, the batch is back in the log, and no
+    # shard's seq moved — the next commit re-drains under fresh seqs
+    assert router.log.pending == 1
+    assert router.seq == [0, 0]
+    assert all(c.last_seq == 0 for c in cores)
+    for ch in channels:
+        ch.fail_ops.clear()
+    router.commit_pending()
+    assert router.seq == [1, 1]
+    assert router.log.pending == 0
+    d0, d1 = _core_digests(cores)
+    assert d0 == d1
+
+
+def test_commit_partial_failure_parks_inflight_no_seq_reuse(
+        core_router, core_cfg, tmp_path):
+    router, cores, channels = core_router
+    channels[1].fail_ops.add("commit")
+    router.log.add_edge(3, 4)
+    with pytest.raises(RuntimeError, match="in-flight"):
+        router.commit_pending()
+    # shard 0 folded the batch; it must NOT requeue (that would double-
+    # apply on shard 0 under a reused seq) — it parks in-flight instead
+    assert router.seq == [1, 0]
+    assert router.log.pending == 0
+    assert router.router_stats()["inflight"] == "commit"
+    # a new mutation arrives while the commit is parked
+    router.log.add_edge(5, 6)
+    channels[1].fail_ops.clear()
+    router.commit_pending()     # drives the parked batch, then drains
+    assert router.seq == [2, 2]
+    assert router.router_stats()["inflight"] is None
+    d0, d1 = _core_digests(cores)
+    assert d0 == d1
+    # no double-apply anywhere: equal to a control fed each batch once
+    (tmp_path / "ctrl").mkdir()
+    ctrl = WorkerCore(core_cfg, 0, 1, str(tmp_path / "ctrl"))
+    ctrl.dispatch(_commit_header(1, [["add", 3, 4]]), {})
+    ctrl.dispatch(_commit_header(2, [["add", 5, 6]]), {})
+    assert ctrl.dispatch({"op": "digest"}, {})[0]["digests"] == d0
+
+
+def test_commit_resyncs_seq_when_only_the_ack_is_lost(core_router):
+    """An applied-but-unacked commit must advance the router's seq via
+    the status resync — NOT be re-sent as a new batch (the duplicate
+    ack path) or requeued (double-apply)."""
+    from repro.gnnserve.cluster import WorkerError
+    router, cores, channels = core_router
+    real = channels[1].request
+
+    def drop_ack(op, arrays=None, **fields):
+        resp = real(op, arrays, **fields)
+        if op == "commit":
+            raise WorkerError("injected ack loss after apply")
+        return resp
+
+    channels[1].request = drop_ack
+    router.log.add_edge(7, 8)
+    router.commit_pending()     # resync sees last_seq==target: no error
+    channels[1].request = real
+    assert router.seq == [1, 1]
+    assert all(c.last_seq == 1 for c in cores)
+    assert router.log.pending == 0
+    d0, d1 = _core_digests(cores)
+    assert d0 == d1
+
+
+def test_concurrent_lookups_and_scrapes_never_tear_a_commit(
+        core_router):
+    router, cores, _ = core_router
+    errs = []
+    stop = threading.Event()
+
+    def _reader(seed):
+        r = np.random.default_rng(seed)
+        while not stop.is_set():
+            try:
+                rows, _ = router.lookup(
+                    r.integers(0, 128, 8).astype(np.int64))
+                assert rows.shape == (8, D)
+                router.engine_stats()   # merged scrape mid-commit
+            except Exception as exc:    # noqa: BLE001 — recorded
+                errs.append(exc)
+                return
+
+    threads = [threading.Thread(target=_reader, args=(i,), daemon=True)
+               for i in range(3)]
+    for t in threads:
+        t.start()
+    for i in range(6):
+        router.log.add_edge(int(i), int((i * 7 + 1) % 128))
+        router.commit_pending()
+    stop.set()
+    for t in threads:
+        t.join(timeout=30)
+    assert not errs, f"reader raced a commit: {errs[0]}"
+    d0, d1 = _core_digests(cores)
+    assert d0 == d1
+
+
+def test_lookup_empty_ids_returns_empty_rows(core_router):
+    router, _, _ = core_router
+    rows, version = router.lookup(np.empty(0, np.int64))
+    assert rows.shape == (0, D)
+    assert rows.dtype == np.float32
+    assert version == router.statuses()[0]["store_version"]
 
 
 # ----------------------------------------------------------------------
